@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: timers, spike-stat collection, CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig
+from repro.models import cnn, spikingformer
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ------------------------------------------------- spike map collection
+def vgg11_spike_maps(batch: int = 4, seed: int = 0):
+    """(cfg, params, per-conv-layer spike tensors) on synthetic images."""
+    from repro.data.synthetic import class_images
+    cfg = CNNConfig(name="vgg11", layers=cnn.VGG11_LAYERS)
+    params = cnn.vgg11_init(cfg, jax.random.PRNGKey(seed))
+    imgs = jnp.asarray(class_images(seed, 0, 0, batch)["image"])
+    _, stats = cnn.vgg11_apply(cfg, params, imgs, collect_stats=True)
+    return cfg, params, stats
+
+
+def resnet18_spike_maps(batch: int = 4, seed: int = 0):
+    from repro.data.synthetic import class_images
+    cfg = CNNConfig(name="resnet18", layers=())
+    params = cnn.resnet18_init(cfg, jax.random.PRNGKey(seed))
+    imgs = jnp.asarray(class_images(seed, 0, 0, batch)["image"])
+    _, stats = cnn.resnet18_apply(cfg, params, imgs, collect_stats=True)
+    return cfg, params, stats
+
+
+def spikingformer_spike_maps(depth: int, dim: int, batch: int = 4,
+                             seed: int = 0):
+    from repro.configs.base import SpikingConfig
+    from repro.data.synthetic import class_images
+    params = spikingformer.spikingformer_init(
+        jax.random.PRNGKey(seed), depth, dim)
+    imgs = jnp.asarray(class_images(seed, 0, 0, batch)["image"])
+    # v_th=0.5: untrained weights under-drive deep encoder blocks; the
+    # lower threshold yields trained-network-like activity levels for the
+    # event statistics (the paper measures trained models).
+    _, stats = spikingformer.spikingformer_apply(
+        params, imgs, collect_stats=True,
+        spiking_cfg=SpikingConfig(t_steps=4, lif_vth=0.5))
+    return params, stats

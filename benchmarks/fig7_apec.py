@@ -1,0 +1,76 @@
+"""Fig. 7 reproduction: APEC group-size sweep (G2/G4/G8) on VGG11,
+ResNet18, SpikingFormer-4-256, SpikingFormer-2-512 spike maps.
+
+Paper claims: G2 wins everywhere (10.9-14.5% average throughput gain,
+1.35-1.62x event reduction); mean |O_G| decays fast with group size
+(e.g. 19.08 -> 6.82 -> 2.92 on SpikingFormer-4-256).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import apec, costmodel
+from .common import (csv_row, resnet18_spike_maps, spikingformer_spike_maps,
+                     vgg11_spike_maps)
+
+GROUPS = (2, 4, 8)
+
+
+def _flatten_positions(s: jnp.ndarray) -> jnp.ndarray:
+    """(T,B,H,W,C)/(T,B,N,C) -> (P, C) position-major spike matrix."""
+    c = s.shape[-1]
+    return s.reshape(-1, c)
+
+
+def _bench_model(name: str, spike_maps, co_k=(64, 3)) -> list[str]:
+    rows = []
+    co, k = co_k
+    for g in GROUPS:
+        tot_before = tot_after = tot_overlap = 0.0
+        n_groups_total = 0.0
+        speedups = []
+        for s in spike_maps:
+            flat = _flatten_positions(s)
+            p = flat.shape[0] - flat.shape[0] % g
+            st = apec.apec_stats(flat[:p], g)
+            tot_before += float(st.events_before)
+            tot_after += float(st.events_after)
+            tot_overlap += float(st.eliminated) / (g - 1)
+            n_groups_total += p / g
+            base = costmodel.conv_layer_cycles(
+                "l", float(st.events_before), p, 32, 32, flat.shape[1],
+                co, k)
+            compressed = costmodel.conv_layer_cycles(
+                "l", float(st.events_before), p, 32, 32, flat.shape[1],
+                co, k, apec_group=g,
+                apec_eliminated=float(st.eliminated),
+                apec_overlap_positions=float(st.groups_with_overlap))
+            speedups.append(base.total / max(compressed.total, 1.0))
+        red = tot_before / max(tot_after, 1.0)
+        mean_og = tot_overlap / max(n_groups_total, 1.0)
+        mean_speedup = sum(speedups) / len(speedups)
+        rows.append(csv_row(
+            f"fig7/{name}/G{g}", 0.0,
+            f"event_reduction={red:.2f}x;mean_overlap={mean_og:.2f};"
+            f"throughput_speedup={mean_speedup:.3f}"))
+    return rows
+
+
+def run() -> list[str]:
+    rows = []
+    _, _, vgg_maps = vgg11_spike_maps()
+    rows += _bench_model("vgg11", vgg_maps)
+    _, _, res_maps = resnet18_spike_maps()
+    rows += _bench_model("resnet18", res_maps)
+    _, sf4 = spikingformer_spike_maps(4, 256)
+    rows += _bench_model("spikingformer-4-256", sf4, co_k=(256, 1))
+    _, sf2 = spikingformer_spike_maps(2, 512)
+    rows += _bench_model("spikingformer-2-512", sf2, co_k=(512, 1))
+    # Verdict row: does G2 dominate (the paper's conclusion)?
+    rows.append(csv_row("fig7/verdict", 0.0,
+                        "expected=G2-best-overlap-decays-with-g"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

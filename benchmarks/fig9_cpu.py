@@ -1,0 +1,54 @@
+"""Fig. 9 analog: ExSpike (cycle model) vs this host CPU running the same
+SpikingFormer-4-256 inference in JAX.
+
+The paper reports 30x lower latency and 7046x higher energy efficiency vs
+a Xeon 8470Q. We measure the real JAX-CPU latency here, put it against
+the accelerator cycle model, and derive the same ratio structure
+(latency ratio, energy ratio assuming 350 W CPU package vs 1.59 W).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel
+from repro.models import spikingformer
+from .common import csv_row, time_fn
+
+CPU_POWER_W = 350.0     # Xeon-class package power (paper's comparison)
+
+
+def run() -> list[str]:
+    rows = []
+    params = spikingformer.spikingformer_init(jax.random.PRNGKey(0), 4, 256)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (1, 32, 32, 3))
+    fn = jax.jit(lambda p, xx: spikingformer.spikingformer_apply(p, xx))
+    t_cpu = time_fn(fn, params, x)
+
+    # Accelerator model for the same workload (event stats from this input)
+    _, stats = spikingformer.spikingformer_apply(params, x,
+                                                 collect_stats=True)
+    layers = []
+    for i, s in enumerate(stats):
+        c = s.shape[-1]
+        layers.append(costmodel.fc_layer_cycles(
+            f"b{i}", float(jnp.sum(s)), c, 256))
+    layers.append(costmodel.sdsa_cycles("sdsa", 64 * 4, 256))
+    summ = costmodel.summarize(layers)
+    t_acc = summ["latency_ms"] / 1e3
+
+    lat_ratio = t_cpu / max(t_acc, 1e-9)
+    energy_ratio = (t_cpu * CPU_POWER_W) / (t_acc * 1.593)
+    rows.append(csv_row("fig9/cpu_latency", t_cpu * 1e6,
+                        "device=this-host-jax-cpu;batch=1"))
+    rows.append(csv_row("fig9/exspike_model_latency", t_acc * 1e6,
+                        f"fps={summ['fps']:.0f}"))
+    rows.append(csv_row("fig9/latency_ratio", 0.0,
+                        f"cpu_over_exspike={lat_ratio:.1f};paper=30.0"))
+    rows.append(csv_row("fig9/energy_ratio", 0.0,
+                        f"cpu_over_exspike={energy_ratio:.0f};paper=7046"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

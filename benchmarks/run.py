@@ -1,0 +1,41 @@
+"""Benchmark harness entry: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints
+``name,us_per_call,derived`` CSV covering Fig. 2 / Fig. 7 / Fig. 8 /
+Table I / Table II / Fig. 9 plus the roofline summary (if dry-run
+artifacts exist under results/dryrun/).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (fig2_econv_vs_tconv, fig7_apec, fig8_breakdown, fig9_cpu,
+                   roofline, table1_resources, table2_throughput)
+    suites = [
+        ("fig2", fig2_econv_vs_tconv.run),
+        ("fig7", fig7_apec.run),
+        ("fig8", fig8_breakdown.run),
+        ("table1", table1_resources.run),
+        ("table2", table2_throughput.run),
+        ("fig9", fig9_cpu.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

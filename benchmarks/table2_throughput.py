@@ -1,0 +1,129 @@
+"""Table II reproduction: throughput / energy efficiency across the five
+evaluated workloads (VGG11, ResNet18, SpikingFormer-4-256/-2-512, SegNet).
+
+Per workload we measure real spike statistics on synthetic data, run the
+ExSpike cycle model (200 MHz, 352 PE, paper power figures), and report
+FPS / GOPS / GOPS/W / GOPS/W/PE next to the paper's published ExSpike row.
+GOPS counts dense-equivalent synaptic ops (paper convention), so sparsity
+and APEC raise it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig
+from repro.core import apec, costmodel
+from repro.models import cnn
+from .common import (csv_row, resnet18_spike_maps, spikingformer_spike_maps,
+                     vgg11_spike_maps)
+
+PAPER_ROWS = {
+    "vgg11": dict(fps=148, gops=479.15, gops_w=281.85, gops_w_pe=0.80),
+    "resnet18": dict(fps=85, gops=463.90, gops_w=267.53, gops_w_pe=0.76),
+    "spikingformer-4-256": dict(fps=197, gops=123.25, gops_w=82.78,
+                                gops_w_pe=0.24),
+    "spikingformer-2-512": dict(fps=51, gops=696.64, gops_w=None,
+                                gops_w_pe=None),
+    "segnet": dict(fps=1633, gops=762.87, gops_w=None, gops_w_pe=None),
+}
+
+
+def _cnn_layers_cycles(stats, conv_specs, img, batch, apec2: bool):
+    layers = []
+    for i, (layer, s) in enumerate(zip(conv_specs, stats)):
+        t_, b, h, w, c = s.shape
+        s_in = stats[i - 1] if i > 0 else s
+        hi, wi, ci = (s_in.shape[2], s_in.shape[3], s_in.shape[4]) \
+            if i > 0 else (img, img, 3)
+        n_events = float(jnp.sum(s_in)) / batch if i > 0 \
+            else hi * wi * ci * t_      # first layer: direct-coded dense
+        elim = ov_pos = 0.0
+        if apec2 and i > 0:
+            flat = s_in.reshape(-1, s_in.shape[-1])
+            p = flat.shape[0] - flat.shape[0] % 2
+            st = apec.apec_stats(flat[:p], 2)
+            elim = float(st.eliminated) / batch
+            ov_pos = float(st.groups_with_overlap) / batch
+        layers.append(costmodel.conv_layer_cycles(
+            f"l{i}", n_events, hi * wi * t_, hi, wi, ci,
+            layer.out_ch if hasattr(layer, "out_ch") else c, 3,
+            apec_group=2 if apec2 else 1, apec_eliminated=elim,
+            apec_overlap_positions=ov_pos))
+    return layers
+
+
+def run() -> list[str]:
+    rows = []
+    batch = 4
+
+    # --- VGG11 / ResNet18
+    for name, maps_fn, spec_source in (
+            ("vgg11", vgg11_spike_maps,
+             [l for l in cnn.VGG11_LAYERS if l.kind == "conv"]),
+            ("resnet18", resnet18_spike_maps, None)):
+        cfg, params, stats = maps_fn(batch=batch)
+        conv_specs = spec_source or [
+            type("L", (), {"out_ch": s.shape[-1]})() for s in stats]
+        for apec2 in (False, True):
+            layers = _cnn_layers_cycles(stats, conv_specs, cfg.img, batch,
+                                        apec2)
+            summ = costmodel.summarize(layers, apec=apec2)
+            tag = "apec2" if apec2 else "baseline"
+            paper = PAPER_ROWS[name]
+            rows.append(csv_row(
+                f"table2/{name}/{tag}", summ["latency_ms"] * 1e3,
+                f"fps={summ['fps']:.0f};gops={summ['gops']:.1f};"
+                f"gops_w={summ['gops_per_w']:.1f};"
+                f"gops_w_pe={summ['gops_per_w_per_pe']:.2f};"
+                f"paper_fps={paper['fps']};paper_gops={paper['gops']}"))
+
+    # --- SpikingFormers (token blocks + SDSA linear attention)
+    for name, depth, dim in (("spikingformer-4-256", 4, 256),
+                             ("spikingformer-2-512", 2, 512)):
+        _, maps = spikingformer_spike_maps(depth, dim, batch=batch)
+        layers = []
+        for i, s in enumerate(maps):
+            c = s.shape[-1]
+            flat = s.reshape(-1, c)
+            n_events = float(jnp.sum(s)) / batch
+            n_pos = flat.shape[0] / batch
+            layers.append(costmodel.fc_layer_cycles(
+                f"b{i}", n_events, c, dim))
+        layers.append(costmodel.sdsa_cycles("sdsa", 64 * depth, dim))
+        summ = costmodel.summarize(layers)
+        paper = PAPER_ROWS[name]
+        rows.append(csv_row(
+            f"table2/{name}/baseline", summ["latency_ms"] * 1e3,
+            f"fps={summ['fps']:.0f};gops={summ['gops']:.1f};"
+            f"gops_w={summ['gops_per_w']:.1f};"
+            f"gops_w_pe={summ['gops_per_w_per_pe']:.2f};"
+            f"paper_fps={paper['fps']};paper_gops={paper['gops']}"))
+
+    # --- SegNet
+    from repro.data.synthetic import seg_batch
+    seg_cfg = CNNConfig(name="segnet", layers=cnn.SEGNET_LAYERS, img=64,
+                        n_classes=2)
+    p = cnn.segnet_init(seg_cfg, jax.random.PRNGKey(0))
+    imgs = jnp.asarray(seg_batch(0, 0, 0, batch)["image"])
+    _, stats = cnn.segnet_apply(seg_cfg, p, imgs, collect_stats=True)
+    layers = []
+    for i, s in enumerate(stats):
+        t_, b, h, w, c = s.shape
+        n_events = float(jnp.sum(s)) / batch
+        layers.append(costmodel.conv_layer_cycles(
+            f"seg{i}", n_events, h * w * t_, h, w, c,
+            cnn.SEGNET_LAYERS[min(i + 1, len(cnn.SEGNET_LAYERS) - 1)].out_ch,
+            3))
+    summ = costmodel.summarize(layers)
+    paper = PAPER_ROWS["segnet"]
+    rows.append(csv_row(
+        f"table2/segnet/baseline", summ["latency_ms"] * 1e3,
+        f"fps={summ['fps']:.0f};gops={summ['gops']:.1f};"
+        f"paper_fps={paper['fps']};paper_gops={paper['gops']}"))
+    return rows
+
+
+import jax  # noqa: E402  (used in segnet init)
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,45 @@
+"""Batched serving demo: continuous-batching decode over slot state.
+
+Compares the two serving modes the dry-run exercises:
+  * spiking (SDSA) — O(d) per-slot state, constant-memory long contexts;
+  * dense baseline — real KV cache, the decode_32k regime.
+
+Run: PYTHONPATH=src python examples/serve_spiking_lm.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs.base import LMConfig, SpikingConfig
+from repro.launch.serve import Request, Server
+
+CFG = LMConfig(name="serve-demo", family="dense", n_layers=4, d_model=256,
+               n_heads=8, n_kv_heads=4, d_ff=512, vocab=4096,
+               spiking=SpikingConfig(t_steps=2), remat="none",
+               loss_chunk=32)
+
+
+def drive(spiking: bool, label: str):
+    server = Server(CFG, n_slots=4, max_seq=128, spiking=spiking)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=list(rng.integers(0, CFG.vocab, 12)),
+                    max_new=24) for i in range(10)]
+    t0 = time.time()
+    for r in reqs:
+        server.submit(r)
+    server.run_until_drained()
+    dt = time.time() - t0
+    toks = sum(len(r.generated) for r in reqs)
+    import jax
+    state_elems = sum(x.size for x in jax.tree.leaves(server.state))
+    print(f"[{label}] {len(reqs)} reqs x 24 new tokens: {toks} tokens in "
+          f"{dt:.1f}s ({toks/dt:.1f} tok/s), decode state "
+          f"{state_elems/1e6:.2f}M elems")
+    return reqs
+
+
+if __name__ == "__main__":
+    a = drive(spiking=True, label="spiking SDSA (O(d) state)")
+    b = drive(spiking=False, label="dense GQA  (KV cache)  ")
+    print("sample generations (spiking):",
+          [r.generated[:6] for r in a[:2]])

@@ -1,0 +1,4 @@
+"""Fault-tolerant checkpointing: async sharded save/restore + manager."""
+from . import checkpointer, manager
+from .manager import CheckpointManager
+__all__ = ["checkpointer", "manager", "CheckpointManager"]

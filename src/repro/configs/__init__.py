@@ -1,0 +1,6 @@
+"""Arch configs: assigned 10-arch pool + paper workloads. See registry."""
+from .base import (CNNConfig, HybridSpec, LMConfig, MoESpec, ShapeSpec,
+                   SHAPES, SpikingConfig, XLSTMSpec)
+
+__all__ = ["CNNConfig", "HybridSpec", "LMConfig", "MoESpec", "ShapeSpec",
+           "SHAPES", "SpikingConfig", "XLSTMSpec"]

@@ -1,0 +1,23 @@
+"""ExSpike core: the paper's contribution as composable JAX modules.
+
+  surrogate     — spike function with ATan surrogate gradient
+  lif           — LIF neuron dynamics (scan reference; Pallas kernel in kernels/)
+  spikes        — bit-packing, popcount, tile occupancy (event filter analog)
+  direct_coding — OPT1: bit-sliced direct coding (Algorithm 1, l.1-4)
+  econv         — OPT2: event-driven convolution (Algorithm 1, l.5-16)
+  eafc          — OPT3: fused event-driven avgpool+FC (Algorithm 1, l.17-24)
+  sdsa          — spike-driven self-attention (Attention Core, Fig. 6)
+  apec          — adjacent-position event compression (Eq. 1-4, Fig. 5)
+  events        — AER streams + sparsity instrumentation (Sparse Core)
+  costmodel     — analytic cycle/GOPS model (Figs. 2/8, Tables I/II)
+"""
+from . import apec, costmodel, direct_coding, eafc, econv, events, sdsa, spikes, surrogate
+from . import lif as lif  # noqa: PLC0414 — keep module importable by name
+from .lif import LIFConfig, lif_scan, lif_step, multistep_lif
+from .surrogate import spike
+
+__all__ = [
+    "apec", "costmodel", "direct_coding", "eafc", "econv", "events", "lif",
+    "sdsa", "spikes", "surrogate", "LIFConfig", "lif_scan", "lif_step",
+    "multistep_lif", "spike",
+]

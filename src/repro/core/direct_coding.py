@@ -1,0 +1,110 @@
+"""OPT1 — direct coding via bit-slicing (Algorithm 1, lines 1-4).
+
+The first layer of a direct-coded SNN receives multi-bit fixed-point
+activations, which breaks pure event-driven execution. ExSpike quantizes
+the input to signed B-bit fixed point, bit-slices it into B binary planes,
+and duplicates/shifts the weights so the coding layer runs as binary
+shift-and-accumulate — exactly representable on the same event machinery
+as every other layer.
+
+Signed two's complement: value = -b_{B-1} 2^{B-1} + sum_{i<B-1} b_i 2^i,
+so the MSB plane's weight copy carries a negative scale. The decomposition
+is exact in integer arithmetic, which the tests assert bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, bits: int, x_max: float | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric signed quantization to `bits` bits.
+
+    Returns (q, scale) with q int32 in [-2^{B-1}, 2^{B-1}-1] and
+    x ~= q * scale.
+    """
+    if x_max is None:
+        x_max = jnp.max(jnp.abs(x))
+    qmax = 2 ** (bits - 1) - 1
+    scale = x_max / qmax
+    q = jnp.clip(jnp.round(x / scale), -(qmax + 1), qmax).astype(jnp.int32)
+    return q, scale
+
+
+def bit_slice(q: jax.Array, bits: int) -> jax.Array:
+    """Slice signed int q into B binary planes, leading axis (B, ...).
+
+    Plane b holds bit b of the two's-complement representation (in
+    `bits`-bit width). Planes are exact binary {0,1} float tensors — i.e.
+    spike events, as consumed by the event-driven layers.
+    """
+    uq = q.astype(jnp.uint32) & jnp.uint32((1 << bits) - 1)
+    shifts = jnp.arange(bits, dtype=jnp.uint32)
+    planes = (uq[None, ...] >> shifts.reshape((bits,) + (1,) * q.ndim)) & jnp.uint32(1)
+    return planes.astype(jnp.float32)
+
+
+def plane_scales(bits: int, scale: jax.Array | float = 1.0) -> jax.Array:
+    """Per-plane weight scale (the paper's DuplicateShift): 2^b, MSB negative."""
+    s = 2.0 ** jnp.arange(bits, dtype=jnp.float32)
+    s = s.at[bits - 1].set(-s[bits - 1])  # two's-complement sign plane
+    return s * scale
+
+
+def direct_coded_matmul(
+    x: jax.Array, w: jax.Array, bits: int = 8, x_max: float | None = None
+) -> jax.Array:
+    """Event-form first-layer matmul: bit-sliced x against shifted weights.
+
+    Equivalent to (quantize(x) * scale) @ w, but every multiply is a
+    binary-activation accumulate — the paper's multiplier-free claim.
+    x: (..., K); w: (K, N).
+    """
+    q, scale = quantize(x, bits, x_max)
+    planes = bit_slice(q, bits)                      # (B, ..., K) binary
+    scales = plane_scales(bits, scale)               # (B,)
+    # One binary matmul per plane; scale-and-add (shift-accumulate analog).
+    per_plane = jnp.einsum("b...k,kn->b...n", planes, w)
+    return jnp.einsum("b,b...n->...n", scales, per_plane)
+
+
+def direct_coded_conv(
+    x: jax.Array,
+    w: jax.Array,
+    bits: int = 8,
+    stride: int = 1,
+    padding: str = "SAME",
+    x_max: float | None = None,
+) -> jax.Array:
+    """Event-form direct-coding conv layer (NHWC, HWIO weights)."""
+    q, scale = quantize(x, bits, x_max)
+    planes = bit_slice(q, bits)                      # (B, N, H, W, C)
+    scales = plane_scales(bits, scale)
+
+    def one_plane(p):
+        return jax.lax.conv_general_dilated(
+            p, w, (stride, stride), padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    per_plane = jax.vmap(one_plane)(planes)
+    return jnp.einsum("b,bnhwc->nhwc", scales, per_plane)
+
+
+def reference_quantized_matmul(
+    x: jax.Array, w: jax.Array, bits: int = 8, x_max: float | None = None
+) -> jax.Array:
+    """Oracle: dequantized fixed-point matmul the event form must match."""
+    q, scale = quantize(x, bits, x_max)
+    return (q.astype(jnp.float32) * scale) @ w
+
+
+def reference_quantized_conv(
+    x: jax.Array, w: jax.Array, bits: int = 8, stride: int = 1,
+    padding: str = "SAME", x_max: float | None = None,
+) -> jax.Array:
+    q, scale = quantize(x, bits, x_max)
+    return jax.lax.conv_general_dilated(
+        q.astype(jnp.float32) * scale, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))

@@ -1,0 +1,60 @@
+"""OPT3 — event-driven average-pool + fully-connected fusion (EAFC).
+
+Average pooling divides spike counts by the window size, producing
+non-binary intermediates that break event purity (Sec. II-B). ExSpike
+folds the 1/pool^2 scale into the FC weights *offline* and drives the FC
+directly from the pre-pool spike events (Algorithm 1, lines 17-24): for a
+pre-pool event at (h, w, c), the FC update uses the weight rows belonging
+to pooled position (h//p, w//p) and channel c, scaled by 1/p^2.
+
+Exact for divisible windows (what the paper's models use); equivalence is
+property-tested against avgpool -> flatten -> FC.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def avgpool2d(s: jax.Array, pool: int) -> jax.Array:
+    """(N,H,W,C) -> (N,H/p,W/p,C) mean pooling (the non-event baseline)."""
+    n, h, w, c = s.shape
+    return s.reshape(n, h // pool, pool, w // pool, pool, c).mean(axis=(2, 4))
+
+
+def avgpool_fc_ref(s: jax.Array, w_fc: jax.Array, pool: int) -> jax.Array:
+    """Oracle: avgpool -> flatten (H',W',C order) -> FC.
+
+    w_fc: (H/p * W/p * C, n_out).
+    """
+    pooled = avgpool2d(s, pool)
+    flat = pooled.reshape(pooled.shape[0], -1)
+    return flat @ w_fc
+
+
+def scale_fc_weights(w_fc: jax.Array, pool: int) -> jax.Array:
+    """Offline weight scaling (Sec. III-B): each weight divided by pool^2."""
+    return w_fc / float(pool * pool)
+
+
+def eafc(s: jax.Array, w_fc: jax.Array, pool: int) -> jax.Array:
+    """Event-driven fused avgpool+FC on pre-pool spikes.
+
+    s: (N,H,W,C) binary; w_fc: (H/p * W/p * C, n_out). Every pre-pool event
+    at (h,w,c) contributes w_scaled[row(h//p, w//p, c)] — implemented as a
+    position-summed einsum over the pooling window so each active event
+    performs exactly one weight-row accumulation (binary activations), with
+    no non-binary intermediate.
+    """
+    n, h, w, c = s.shape
+    hp, wp = h // pool, w // pool
+    ws = scale_fc_weights(w_fc, pool).reshape(hp, wp, c, -1)
+    # Group pre-pool positions by their pooled cell; events inside a cell
+    # share the same weight row (scaled), exactly Algorithm 1 lines 18-23.
+    sg = s.reshape(n, hp, pool, wp, pool, c)
+    return jnp.einsum("nhawbc,hwco->no", sg, ws)
+
+
+def eafc_event_ops(s: jax.Array, n_out: int) -> jax.Array:
+    """EAFC accumulation count: one n_out-row accumulate per active event."""
+    return jnp.sum(s.astype(jnp.int64)) * n_out

@@ -1,0 +1,72 @@
+"""AER (address-event representation) utilities — the Sparse Core analog.
+
+The Sparse Core (Sec. III, Fig. 4) fetches spike words, extracts one valid
+event position per cycle via a lowest-set-bit priority encoder + LUT, and
+pushes (position) entries into the AER FIFO that triggers the EPE Core.
+
+On TPU we keep two views of the same information:
+  * a dense binary tensor (what the MXU paths consume), and
+  * packed words + per-tile occupancy (what the Pallas kernels consume).
+This module provides the reference event-filter semantics (for tests and
+for the cycle cost model, which needs exact per-word event counts), plus
+sparsity instrumentation used throughout the benchmarks.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .spikes import pack_spikes, popcount
+
+
+class EventStream(NamedTuple):
+    """Padded AER stream: linear addresses + validity mask."""
+    addr: jax.Array   # (max_events,) int32 linear index into the flat map
+    valid: jax.Array  # (max_events,) bool
+
+
+def fast_event_filter(word: jax.Array, width: int = 32) -> jax.Array:
+    """Reference of the hardware fast event filter on one packed word.
+
+    Emits the bit positions of set bits in ascending order (lowest active
+    bit first — the one-hot + LUT scheme), padded with -1. Static output
+    length = `width`.
+    """
+    positions = jnp.arange(width, dtype=jnp.int32)
+    set_mask = ((word >> positions.astype(jnp.uint32)) & jnp.uint32(1)).astype(bool)
+    order = jnp.argsort(~set_mask, stable=True)      # set bits first, ascending
+    sorted_pos = jnp.where(jnp.sort(~set_mask) == 0, positions[order], -1)
+    return sorted_pos.astype(jnp.int32)
+
+
+def to_event_stream(s: jax.Array, max_events: int) -> EventStream:
+    """Flatten a binary tensor into a padded AER stream (raster order)."""
+    flat = s.reshape(-1)
+    (lin,) = jnp.nonzero(flat, size=max_events, fill_value=-1)
+    return EventStream(addr=lin.astype(jnp.int32), valid=lin >= 0)
+
+
+def events_per_position(s: jax.Array) -> jax.Array:
+    """(..., P, C) -> (..., P) active-channel counts per spatial position
+    ("spike events ... collected at the same spatial location", Alg. 1 l.9).
+    """
+    return jnp.sum(s.astype(jnp.int32), axis=-1)
+
+
+def word_event_counts(s: jax.Array, axis: int = -1) -> jax.Array:
+    """Popcount per packed 32-channel word (Spike SRAM word granularity)."""
+    return popcount(pack_spikes(s, axis=axis))
+
+
+def layer_sparsity_report(name: str, s: jax.Array) -> dict:
+    """Instrumentation record used by the Fig. 2 / Fig. 7 benchmarks."""
+    total = float(jnp.asarray(s.size))
+    active = float(jnp.sum(s.astype(jnp.float32)))
+    return {
+        "layer": name,
+        "total_sites": total,
+        "events": active,
+        "sparsity": 1.0 - active / max(total, 1.0),
+    }

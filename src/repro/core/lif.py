@@ -1,0 +1,79 @@
+"""Leaky integrate-and-fire (LIF) neuron dynamics.
+
+The paper (Sec. II) uses LIF neurons with tau = 0.5 trained in SpikingJelly.
+We adopt the decay-multiplier form
+
+    v[t+1] = decay * v[t] + x[t]
+    s[t]   = Heaviside(v[t+1] - v_th)        (surrogate gradient in bwd)
+    reset:  soft: v <- v - s * v_th          (membrane-potential subtraction)
+            hard: v <- v * (1 - s)
+
+with decay = tau = 0.5 and v_th = 1.0 by default. The temporal loop is a
+`jax.lax.scan` here (the pure-JAX reference); `repro.kernels.lif_scan`
+provides the fused Pallas kernel that keeps `v` resident in VMEM across the
+temporal loop — the TPU analogue of the paper's MPE stage, which keeps
+membrane potentials in on-chip registers between eFIFO pushes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .surrogate import spike
+
+
+@dataclasses.dataclass(frozen=True)
+class LIFConfig:
+    decay: float = 0.5          # tau in the paper's notation
+    v_th: float = 1.0
+    soft_reset: bool = True
+    surrogate_alpha: float = 2.0
+
+
+def lif_step(
+    v: jax.Array, x: jax.Array, cfg: LIFConfig = LIFConfig()
+) -> Tuple[jax.Array, jax.Array]:
+    """One LIF timestep. Returns (new membrane potential, spikes)."""
+    v = cfg.decay * v + x
+    s = spike(v - cfg.v_th, cfg.surrogate_alpha)
+    if cfg.soft_reset:
+        v = v - s * cfg.v_th
+    else:
+        v = v * (1.0 - s)
+    return v, s
+
+
+def lif_scan(
+    x: jax.Array, cfg: LIFConfig = LIFConfig(), v0: jax.Array | None = None
+) -> jax.Array:
+    """Run LIF over the leading time axis. x: (T, ...) -> spikes (T, ...)."""
+    if v0 is None:
+        v0 = jnp.zeros_like(x[0])
+
+    def step(v, xt):
+        v, s = lif_step(v, xt, cfg)
+        return v, s
+
+    _, s = jax.lax.scan(step, v0, x)
+    return s
+
+
+def lif_scan_with_state(
+    x: jax.Array, v0: jax.Array, cfg: LIFConfig = LIFConfig()
+) -> Tuple[jax.Array, jax.Array]:
+    """Like `lif_scan` but also returns the final membrane state (serving)."""
+
+    def step(v, xt):
+        v, s = lif_step(v, xt, cfg)
+        return v, s
+
+    vT, s = jax.lax.scan(step, v0, x)
+    return vT, s
+
+
+def multistep_lif(x: jax.Array, cfg: LIFConfig = LIFConfig()) -> jax.Array:
+    """LIF over axis 0 (= T micro-timesteps). Alias used by model code."""
+    return lif_scan(x, cfg)

@@ -1,0 +1,96 @@
+"""Spike-driven self-attention (SDSA) — the Attention Core (Sec. III-C).
+
+The paper computes attention over binary Q, K, V spikes in two stages:
+
+  Stage 1 (KV):   kv_mask = K AND V              (elementwise, N x d)
+                  status  = column-wise OR of kv_mask   (d bits)
+  Stage 2 (QKV):  attn[i] = Q[i] AND status      (per row)
+
+Properties that matter at system level (all tested):
+  * linear in sequence length N — no N x N score matrix;
+  * the entire cross-token state is the d-bit status vector, so streaming
+    decode carries O(d) state per head ("KV cache" of constant size) —
+    this is what makes the 500k-token long-context shape sub-quadratic;
+  * status is a monotone, permutation-invariant OR-reduction, so prefill
+    and token-by-token decode agree exactly.
+
+The OR form is the paper's hardware semantics and is used for inference.
+For training, OR saturates gradients, so we also provide the sum form used
+by the Spike-driven Transformer line of work (SDSA as Q * sum_t(K_t * V_t),
+followed by an LIF fire stage) — `mode="sum"`. Both keep binary inputs and
+avoid softmax/QK^T entirely.
+
+Shapes: (..., N, d) where d is the per-head dim; heads live in leading axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_status_or(k: jax.Array, v: jax.Array) -> jax.Array:
+    """Stage 1, OR form: (..., N, d) -> (..., d) binary status vector."""
+    kv = k * v                      # AND for binary tensors
+    return jnp.max(kv, axis=-2)     # column-wise OR
+
+
+def kv_status_sum(k: jax.Array, v: jax.Array) -> jax.Array:
+    """Stage 1, sum form: integer-valued column accumulation."""
+    return jnp.sum(k * v, axis=-2)
+
+
+def sdsa(q: jax.Array, k: jax.Array, v: jax.Array, mode: str = "or") -> jax.Array:
+    """Full SDSA. q,k,v: (..., N, d) binary spikes -> (..., N, d).
+
+    mode="or": paper-faithful Attention Core output (binary).
+    mode="sum": accumulated form; caller applies LIF/threshold to re-binarize
+    (the FPE stage in hardware does exactly this fire step).
+    """
+    if mode == "or":
+        status = kv_status_or(k, v)
+    elif mode == "sum":
+        status = kv_status_sum(k, v)
+    else:
+        raise ValueError(f"unknown SDSA mode: {mode}")
+    return q * status[..., None, :, ]
+
+
+def sdsa_decode_init(head_shape: tuple, mode: str = "or", dtype=jnp.float32) -> jax.Array:
+    """Initial streaming state: zeros(..., d)."""
+    del mode
+    return jnp.zeros(head_shape, dtype)
+
+
+def sdsa_decode_update(
+    status: jax.Array, k_t: jax.Array, v_t: jax.Array, mode: str = "or"
+) -> jax.Array:
+    """Fold one token's K,V spikes into the running status (O(d) update).
+
+    Mirrors the hardware's on-the-fly OR during V write-back (Sec. III-C).
+    """
+    kv = k_t * v_t
+    if mode == "or":
+        return jnp.maximum(status, kv)
+    return status + kv
+
+
+def sdsa_decode_attend(q_t: jax.Array, status: jax.Array) -> jax.Array:
+    """Stage 2 for one token: Q AND/times status."""
+    return q_t * status
+
+
+def sdsa_cross(q: jax.Array, k_enc: jax.Array, v_enc: jax.Array, mode: str = "or") -> jax.Array:
+    """Cross-attention variant (whisper decoder): status from encoder K,V."""
+    return sdsa(q, k_enc, v_enc, mode=mode)
+
+
+def sdsa_ops(n: int, d: int) -> int:
+    """Logic-op count: stage1 AND (N*d) + OR-reduce (N*d) + stage2 AND (N*d).
+
+    Contrast with softmax attention's 2*N^2*d MACs — the Fig. 6 economics.
+    """
+    return 3 * n * d
+
+
+def softmax_attention_ops(n: int, d: int) -> int:
+    return 2 * n * n * d

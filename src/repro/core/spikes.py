@@ -1,0 +1,86 @@
+"""Spike-tensor utilities: bit-packing, popcount, tile occupancy.
+
+The paper stores spike sequences so that "each address in the Spike SRAM
+stores spike data from all input channels at the same spatial location"
+(Sec. III-A, feature 1) and filters events with a priority encoder. On TPU
+the unit of event-driven execution is a VMEM tile, not a wire, so the
+equivalents are:
+
+  * bit-packed spike words (uint32 lanes) for the VPU logic paths
+    (SDSA AND/OR, APEC overlap extraction) — 32x memory-traffic reduction
+    over bf16 0/1 tensors;
+  * per-tile occupancy maps (popcount > 0) that let the Pallas spike-matmul
+    kernel skip all-zero tiles — the block-level analogue of the paper's
+    fast event filter + AER FIFO.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PACK = 32  # bits per packed word
+
+
+def pack_spikes(s: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack a binary {0,1} tensor into uint32 words along `axis`.
+
+    The packed axis length must be a multiple of 32 (pad upstream).
+    Bit i of word w corresponds to channel w*32 + i (little-endian).
+    """
+    s = jnp.moveaxis(s, axis, -1)
+    c = s.shape[-1]
+    if c % PACK != 0:
+        raise ValueError(f"pack axis {c} not a multiple of {PACK}")
+    bits = s.reshape(s.shape[:-1] + (c // PACK, PACK)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(PACK, dtype=jnp.uint32))
+    packed = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_spikes(p: jax.Array, axis: int = -1, dtype=jnp.float32) -> jax.Array:
+    """Inverse of `pack_spikes`."""
+    p = jnp.moveaxis(p, axis, -1)
+    shifts = jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (p[..., None] >> shifts) & jnp.uint32(1)
+    out = bits.reshape(p.shape[:-1] + (p.shape[-1] * PACK,)).astype(dtype)
+    return jnp.moveaxis(out, -1, axis)
+
+
+def popcount(p: jax.Array) -> jax.Array:
+    """Per-word population count of packed spikes."""
+    return jax.lax.population_count(p)
+
+
+def event_count(s: jax.Array) -> jax.Array:
+    """Total number of active events in a binary spike tensor."""
+    return jnp.sum(s.astype(jnp.int32))
+
+
+def sparsity(s: jax.Array) -> jax.Array:
+    """Fraction of zeros (the paper's per-layer 'input sparsity', Fig. 2)."""
+    return 1.0 - jnp.mean(s.astype(jnp.float32))
+
+
+def tile_occupancy(s: jax.Array, tile_m: int, tile_k: int) -> jax.Array:
+    """Occupancy map over (M, K) spike matrix tiled (tile_m, tile_k).
+
+    Returns an int32 (M/tile_m, K/tile_k) array of per-tile event counts.
+    Zero entries are tiles the event-driven matmul kernel can skip entirely
+    (the TPU analogue of 'AER FIFO empty -> no computation triggered').
+    """
+    m, k = s.shape[-2], s.shape[-1]
+    if m % tile_m or k % tile_k:
+        raise ValueError(f"shape ({m},{k}) not tileable by ({tile_m},{tile_k})")
+    t = s.reshape(s.shape[:-2] + (m // tile_m, tile_m, k // tile_k, tile_k))
+    return jnp.sum(t.astype(jnp.int32), axis=(-3, -1))
+
+
+def occupancy_fraction(s: jax.Array, tile_m: int, tile_k: int) -> jax.Array:
+    """Fraction of non-empty tiles — predicts the tile-skip speedup."""
+    occ = tile_occupancy(s, tile_m, tile_k)
+    return jnp.mean((occ > 0).astype(jnp.float32))
+
+
+def to_binary(x: jax.Array) -> jax.Array:
+    """Clamp any tensor to exact {0,1} in its own dtype (defensive)."""
+    return (x > 0).astype(x.dtype)

@@ -1,0 +1,59 @@
+"""Surrogate-gradient spike function.
+
+The Heaviside step `s = 1[v >= 0]` has zero gradient a.e.; SNN training
+(SpikingJelly convention, used by the paper's training setup, Sec. IV)
+replaces the backward pass with a smooth surrogate. We use the ATan
+surrogate, SpikingJelly's default:
+
+    d s / d v  :=  alpha / (2 * (1 + (pi/2 * alpha * v)^2))
+
+Forward output is an exact binary {0,1} tensor, so all downstream
+"full-event" guarantees (bitwise SDSA, APEC overlap logic, event counting)
+hold bit-exactly during training as well.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_ALPHA = 2.0
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def spike(v: jax.Array, alpha: float = DEFAULT_ALPHA) -> jax.Array:
+    """Binary spike: Heaviside(v) with ATan surrogate gradient."""
+    return (v >= 0).astype(v.dtype)
+
+
+def _spike_fwd(v, alpha):
+    return (v >= 0).astype(v.dtype), v
+
+
+def _spike_bwd(alpha, v, g):
+    # ATan surrogate derivative (SpikingJelly `surrogate.ATan`).
+    half_pi_alpha = 0.5 * math.pi * alpha
+    dv = alpha / 2.0 / (1.0 + (half_pi_alpha * v) ** 2)
+    return (g * dv.astype(g.dtype),)
+
+
+spike.defvjp(_spike_fwd, _spike_bwd)
+
+
+def spike_st(v: jax.Array) -> jax.Array:
+    """Straight-through variant (identity backward); used in ablations."""
+
+    @jax.custom_vjp
+    def _st(x):
+        return (x >= 0).astype(x.dtype)
+
+    def _fwd(x):
+        return (x >= 0).astype(x.dtype), None
+
+    def _bwd(_, g):
+        return (g,)
+
+    _st.defvjp(_fwd, _bwd)
+    return _st(v)

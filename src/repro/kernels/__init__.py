@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the ExSpike hot spots.
+
+  lif_scan      — fused temporal LIF (membrane resident in VMEM)
+  sdsa_kernel   — bit-packed Attention Core stages (AND / column-OR / AND)
+  spike_matmul  — occupancy-skipping event matmul (AER-FIFO tile analog)
+
+Each has a pure-jnp oracle in ref.py and a jit'd shape-agnostic wrapper in
+ops.py. Kernels validate in interpret=True on CPU; TPU is the target.
+"""
+from . import ops, ref
+from .lif_scan import lif_scan_pallas
+from .sdsa_kernel import sdsa_apply_pallas, sdsa_packed, sdsa_status_pallas
+from .spike_matmul import spike_matmul_pallas
+
+__all__ = [
+    "ops", "ref", "lif_scan_pallas", "sdsa_apply_pallas", "sdsa_packed",
+    "sdsa_status_pallas", "spike_matmul_pallas",
+]

@@ -1,0 +1,72 @@
+"""Fused temporal LIF scan — Pallas TPU kernel.
+
+The EPE Core's MPE stage keeps membrane potentials on-chip between eFIFO
+pushes; the TPU analogue is keeping the membrane tensor resident in VMEM
+across the T-step temporal loop instead of round-tripping it through HBM
+per timestep (what a naive `lax.scan` of elementwise ops compiles to when
+the tensor exceeds registers).
+
+Grid: (M/bm, N/bn) over the flattened neuron axes; each program owns a
+(T, bm, bn) input/output block and a (bm, bn) f32 VMEM scratch for the
+membrane potential. VPU-aligned blocks: bm multiple of 8, bn multiple of
+128. HBM traffic: read T*bm*bn once, write T*bm*bn once — the membrane
+state never leaves VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lif_kernel(x_ref, out_ref, v_ref, *, t_steps: int, decay: float,
+                v_th: float, soft_reset: bool):
+    v_ref[...] = jnp.zeros_like(v_ref)
+
+    def body(t, _):
+        v = v_ref[...] * decay + x_ref[t].astype(jnp.float32)
+        s = (v >= v_th).astype(jnp.float32)
+        if soft_reset:
+            v_ref[...] = v - s * v_th
+        else:
+            v_ref[...] = v * (1.0 - s)
+        out_ref[t] = s.astype(out_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, t_steps, body, ())
+
+
+def lif_scan_pallas(
+    x: jax.Array,
+    *,
+    decay: float = 0.5,
+    v_th: float = 1.0,
+    soft_reset: bool = True,
+    block_m: int = 8,
+    block_n: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """LIF over leading time axis. x: (T, M, N) -> binary spikes (T, M, N)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    t_steps, m, n = x.shape
+    if m % block_m or n % block_n:
+        raise ValueError(f"(M,N)=({m},{n}) must tile by ({block_m},{block_n})")
+
+    kernel = functools.partial(
+        _lif_kernel, t_steps=t_steps, decay=decay, v_th=v_th,
+        soft_reset=soft_reset)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[pl.BlockSpec((t_steps, block_m, block_n),
+                               lambda i, j: (0, i, j))],
+        out_specs=pl.BlockSpec((t_steps, block_m, block_n),
+                               lambda i, j: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,121 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle padding to block multiples, dtype plumbing, head/batch axis
+flattening, and CPU-interpret fallback, so model code can call them on
+arbitrary shapes. Each wrapper is shape-polymorphic under jit and safe to
+use inside pjit/shard_map (pure, no host callbacks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spikes import PACK, pack_spikes, unpack_spikes
+from .lif_scan import lif_scan_pallas
+from .sdsa_kernel import sdsa_packed, sdsa_status_pallas
+from .spike_matmul import spike_matmul_pallas
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("decay", "v_th", "soft_reset"))
+def lif(x: jax.Array, decay: float = 0.5, v_th: float = 1.0,
+        soft_reset: bool = True) -> jax.Array:
+    """Fused LIF over leading time axis, any trailing shape."""
+    t = x.shape[0]
+    rest = x.shape[1:]
+    flat = x.reshape(t, -1)
+    total = flat.shape[1]
+    # Fold into (T, M, N) with N a lane multiple.
+    n = 128
+    flat, orig = _pad_to(flat, 1, n * 8)
+    m = flat.shape[1] // n
+    out = lif_scan_pallas(flat.reshape(t, m, n), decay=decay, v_th=v_th,
+                          soft_reset=soft_reset)
+    return out.reshape(t, -1)[:, :orig].reshape((t,) + rest)
+
+
+@jax.jit
+def sdsa_or(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Paper-faithful OR-form SDSA on dense binary tensors of shape
+    (..., N, d); internally bit-packed and run through the Pallas kernels.
+    """
+    lead = q.shape[:-2]
+    n, d = q.shape[-2:]
+    dt = q.dtype
+
+    def prep(x):
+        x = x.reshape(-1, n, d)
+        x, _ = _pad_to(x, 2, PACK)
+        return pack_spikes(x, axis=-1)
+
+    qp, kp, vp = prep(q), prep(k), prep(v)
+    # Pad N to sublane multiple for the kernel grid.
+    qp, n_orig = _pad_to(qp, 1, 8)
+    kp, _ = _pad_to(kp, 1, 8)
+    vp, _ = _pad_to(vp, 1, 8)
+    block_n = min(256, qp.shape[1])
+    out_p = sdsa_packed(qp, kp, vp, block_n=block_n)
+    out = unpack_spikes(out_p, axis=-1, dtype=dt)[:, :n_orig, :d]
+    return out.reshape(lead + (n, d))
+
+
+@jax.jit
+def sdsa_status(k: jax.Array, v: jax.Array) -> jax.Array:
+    """Status vector only (decode prefill path). (..., N, d) -> (..., d)."""
+    lead = k.shape[:-2]
+    n, d = k.shape[-2:]
+
+    def prep(x):
+        x = x.reshape(-1, n, d)
+        x, _ = _pad_to(x, 2, PACK)
+        x, _ = _pad_to(x, 1, 8)
+        return pack_spikes(x, axis=-1)
+
+    kp, vp = prep(k), prep(v)
+    st = sdsa_status_pallas(kp, vp, block_n=min(256, kp.shape[1]))
+    return unpack_spikes(st, axis=-1, dtype=k.dtype)[:, :d].reshape(lead + (d,))
+
+
+@functools.partial(jax.jit, static_argnames=("g",))
+def apec_decompose(s: jax.Array, g: int = 2):
+    """Dense binary (P, C) spikes -> (overlap (P/g, C), residual (P, C))
+    via the packed bitwise kernel. P must divide by g."""
+    from .apec_kernel import apec_decompose_packed
+    p, c = s.shape
+    sp, _ = _pad_to(s, 1, PACK)
+    packed = pack_spikes(sp, axis=-1)
+    packed, p_orig = _pad_to(packed, 0, g * 8)
+    ov_p, res_p = apec_decompose_packed(packed, g,
+                                        block_n=min(128, packed.shape[1]))
+    ov = unpack_spikes(ov_p, axis=-1, dtype=s.dtype)[: p_orig // g, :c]
+    res = unpack_spikes(res_p, axis=-1, dtype=s.dtype)[:p_orig, :c]
+    return ov, res
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def spike_matmul(s: jax.Array, w: jax.Array, block_m: int = 128,
+                 block_n: int = 128, block_k: int = 128) -> jax.Array:
+    """Occupancy-skipping spike matmul for (..., M, K) x (K, N)."""
+    lead = s.shape[:-2]
+    m, k = s.shape[-2:]
+    n = w.shape[-1]
+    s2 = s.reshape(-1, k) if lead else s.reshape(m, k)
+    s2, m_orig = _pad_to(s2, 0, block_m)
+    s2, _ = _pad_to(s2, 1, block_k)
+    w2, _ = _pad_to(w, 0, block_k)
+    w2, n_orig = _pad_to(w2, 1, block_n)
+    out = spike_matmul_pallas(s2, w2, block_m=block_m, block_n=block_n,
+                              block_k=block_k)
+    out = out[:m_orig, :n_orig]
+    return out.reshape(lead + (m, n)) if lead else out

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFConfig, lif_scan as _lif_scan_core
+from repro.core.sdsa import kv_status_or
+
+
+def lif_scan_ref(x: jax.Array, *, decay: float = 0.5, v_th: float = 1.0,
+                 soft_reset: bool = True) -> jax.Array:
+    """Oracle for kernels.lif_scan: the core lax.scan implementation."""
+    cfg = LIFConfig(decay=decay, v_th=v_th, soft_reset=soft_reset)
+    return _lif_scan_core(x.astype(jnp.float32), cfg).astype(x.dtype)
+
+
+def sdsa_status_ref(k_packed: jax.Array, v_packed: jax.Array) -> jax.Array:
+    """Oracle for sdsa_status_pallas: OR-reduce of AND, on packed words."""
+    kv = k_packed & v_packed
+    return jax.lax.reduce(kv, jnp.uint32(0), jax.lax.bitwise_or, (1,))
+
+
+def sdsa_apply_ref(q_packed: jax.Array, status: jax.Array) -> jax.Array:
+    """Oracle for sdsa_apply_pallas."""
+    return q_packed & status[:, None, :]
+
+
+def sdsa_packed_ref(q_packed, k_packed, v_packed):
+    return sdsa_apply_ref(q_packed, sdsa_status_ref(k_packed, v_packed))
+
+
+def sdsa_unpacked_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Cross-check against the dense core implementation (OR form)."""
+    return q * kv_status_or(k, v)[..., None, :]
+
+
+def spike_matmul_ref(s: jax.Array, w: jax.Array) -> jax.Array:
+    """Oracle for spike_matmul_pallas: plain dense matmul."""
+    return jnp.dot(s, w, preferred_element_type=jnp.float32).astype(w.dtype)
+
+
+def apec_decompose_packed_ref(s_packed: jax.Array, g: int):
+    """Oracle for apec_decompose_packed: jnp bitwise reduce."""
+    p, dw = s_packed.shape
+    grp = s_packed.reshape(p // g, g, dw)
+    ov = grp[:, 0, :]
+    for i in range(1, g):
+        ov = ov & grp[:, i, :]
+    res = (grp & ~ov[:, None, :]).reshape(p, dw)
+    return ov, res

@@ -1,0 +1,40 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import; smoke
+tests see the real single CPU device).
+
+Target: TPU v5e pods — 256 chips/pod as a (16, 16) (data, model) mesh;
+multi-pod prepends a "pod" axis: (2, 16, 16). Hardware constants used by
+the roofline are defined here as the single source of truth.
+"""
+from __future__ import annotations
+
+import jax
+
+
+# TPU v5e per-chip constants (roofline denominators).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s/link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def chips(mesh: jax.sharding.Mesh) -> int:
+    return mesh.devices.size

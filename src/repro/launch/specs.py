@@ -1,0 +1,74 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these. Shape policy (DESIGN.md §4):
+
+  train_4k     -> train_step   (spiking mode: the paper's technique)
+  prefill_32k  -> serve_prefill (spiking)
+  decode_32k   -> serve_step   (dense baseline: real GQA KV cache of 32k)
+  long_500k    -> serve_step   (spiking: SDSA/SSM O(d) state — the
+                  sub-quadratic path; dense baseline would be quadratic
+                  and is skipped for this shape)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, ShapeSpec
+from repro.models import lm
+
+
+def spiking_for_shape(shape: ShapeSpec) -> bool:
+    return shape.kind != "decode"
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def frontend_spec(cfg: LMConfig, b: int) -> jax.ShapeDtypeStruct | None:
+    if cfg.encoder_decoder:
+        return _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.n_frontend_tokens:
+        return _sds((b, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def train_batch_spec(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - cfg.n_frontend_tokens if cfg.n_frontend_tokens else s
+    batch = {
+        "tokens": _sds((b, s_text), jnp.int32),
+        "labels": _sds((b, s_text), jnp.int32),
+    }
+    fe = frontend_spec(cfg, b)
+    if fe is not None:
+        batch["frontend"] = fe
+    return batch
+
+
+def prefill_spec(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    s_text = s - cfg.n_frontend_tokens if cfg.n_frontend_tokens else s
+    out = {"tokens": _sds((b, s_text), jnp.int32)}
+    fe = frontend_spec(cfg, b)
+    if fe is not None:
+        out["frontend"] = fe
+    return out
+
+
+def decode_specs(cfg: LMConfig, shape: ShapeSpec, spiking: bool
+                 ) -> Tuple[Any, Any, Any]:
+    """(state_abstract, token_spec, pos_spec) for serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    state = jax.eval_shape(functools.partial(
+        lm.init_decode_state, cfg, b, s, spiking))
+    return state, _sds((b,), jnp.int32), _sds((), jnp.int32)
+
+
+def abstract_params(cfg: LMConfig):
+    return lm.abstract_params(cfg)

@@ -1,0 +1,92 @@
+"""Step-function factories: train_step / serve_prefill / serve_step.
+
+These close over the config and return pure functions suitable for
+jax.jit(in_shardings=..., out_shardings=..., donate_argnums=...) — the
+exact functions the dry-run lowers and the real launchers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import lm
+from repro.optim import adamw, grad_compress, schedule as sched
+
+
+def make_train_step(
+    cfg: LMConfig,
+    opt_cfg: Optional[adamw.AdamWConfig] = None,
+    schedule_fn: Callable = sched.constant,
+    spiking: Optional[bool] = None,
+    grad_compression: bool = False,
+) -> Callable:
+    """train_step(params, opt_state, [ef_state,] batch) -> (... , metrics).
+
+    Microbatch gradient accumulation (cfg.microbatches) runs as a scan so
+    the per-microbatch backward (and its data-parallel collectives) overlap
+    the next microbatch's forward in the XLA pipeline — the standard
+    compute/comm overlap trick.
+    """
+    if opt_cfg is None:
+        opt_cfg = adamw.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    spk = cfg.spiking.enabled if spiking is None else spiking
+    m = max(1, cfg.microbatches)
+
+    def loss_of(params, batch):
+        return lm.loss_fn(cfg, params, batch, spk)
+
+    def grads_of(params, batch):
+        if m == 1:
+            return jax.value_and_grad(loss_of)(params, batch)
+        micro = jax.tree.map(
+            lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(loss_of)(params, mb)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, g_acc, g)), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(body, (0.0, zero_g), micro)
+        return loss_sum / m, jax.tree.map(lambda g: g / m, g_sum)
+
+    if not grad_compression:
+        def train_step(params, opt_state, batch):
+            loss, grads = grads_of(params, batch)
+            lr_scale = schedule_fn(opt_state.step)
+            new_params, new_opt = adamw.update(
+                grads, opt_state, params, opt_cfg, lr_scale)
+            metrics = {"loss": loss,
+                       "grad_norm": adamw.global_norm(grads)}
+            return new_params, new_opt, metrics
+        return train_step
+
+    def train_step_ef(params, opt_state, ef_state, batch):
+        loss, grads = grads_of(params, batch)
+        wire, scales, new_ef = grad_compress.compress(grads, ef_state)
+        grads = grad_compress.decompress(wire, scales)
+        lr_scale = schedule_fn(opt_state.step)
+        new_params, new_opt = adamw.update(
+            grads, opt_state, params, opt_cfg, lr_scale)
+        metrics = {"loss": loss, "grad_norm": adamw.global_norm(grads)}
+        return new_params, new_opt, new_ef, metrics
+    return train_step_ef
+
+
+def make_prefill(cfg: LMConfig, spiking: bool) -> Callable:
+    def serve_prefill(params, batch: Dict[str, Any]):
+        return lm.prefill(cfg, params, batch["tokens"], spiking,
+                          frontend=batch.get("frontend"))
+    return serve_prefill
+
+
+def make_serve_step(cfg: LMConfig, spiking: bool) -> Callable:
+    def serve_step(params, state, token, pos):
+        return lm.decode_step(cfg, params, state, token, pos, spiking)
+    return serve_step

@@ -1,0 +1,4 @@
+"""Model zoo: unified LM builder + the paper's own SNN workloads."""
+from . import cnn, layers, lm, moe, spikingformer, ssm, transformer
+
+__all__ = ["cnn", "layers", "lm", "moe", "spikingformer", "ssm", "transformer"]

@@ -1,0 +1,183 @@
+"""The paper's own SCNN workloads: spiking VGG11, ResNet18, SegNet.
+
+Faithful to the evaluated stack (Sec. IV): LIF neurons (tau=0.5), T=4
+timesteps, direct-coded first layer (OPT1), event-driven-equivalent convs
+(OPT2 — executed as dense convs on binary spikes; the event formulations in
+core/econv and the tile-skipping kernel are numerically identical), and an
+EAFC avgpool+FC head (OPT3). Residual connections add membrane drives
+before the fire stage — the Residual Spike SRAM path of Fig. 3.
+
+`apply(..., collect_stats=True)` returns per-layer spike maps for the
+Fig. 2 / Fig. 7 sparsity + APEC benchmarks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig, CNNLayer
+from repro.core.direct_coding import quantize
+from repro.core.econv import tconv
+from repro.core.eafc import eafc
+from repro.core.lif import LIFConfig, lif_scan
+
+Params = Dict[str, Any]
+
+# ------------------------------------------------------- model definitions
+VGG11_LAYERS: Tuple[CNNLayer, ...] = (
+    CNNLayer("conv", 64), CNNLayer("maxpool"),
+    CNNLayer("conv", 128), CNNLayer("maxpool"),
+    CNNLayer("conv", 256), CNNLayer("conv", 256), CNNLayer("maxpool"),
+    CNNLayer("conv", 512), CNNLayer("conv", 512), CNNLayer("maxpool"),
+    CNNLayer("conv", 512), CNNLayer("conv", 512),
+)
+
+SEGNET_LAYERS: Tuple[CNNLayer, ...] = (   # 8C3-16C3-32C3-32C3-16TC3-2TC3
+    CNNLayer("conv", 8), CNNLayer("conv", 16, stride=2),
+    CNNLayer("conv", 32, stride=2), CNNLayer("conv", 32),
+    CNNLayer("tconv", 16, stride=2), CNNLayer("tconv", 2, stride=2),
+)
+
+RESNET18_STAGES = ((64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2))
+
+
+def _conv_init(key, k: int, ci: int, co: int) -> jax.Array:
+    scale = (2.0 / (k * k * ci)) ** 0.5
+    return jax.random.normal(key, (k, k, ci, co), jnp.float32) * scale
+
+
+# ------------------------------------------------------------------- VGG11
+def vgg11_init(cfg: CNNConfig, key) -> Params:
+    p: Params = {"convs": []}
+    ci = cfg.in_ch
+    keys = jax.random.split(key, len(VGG11_LAYERS) + 1)
+    spatial = cfg.img
+    for i, layer in enumerate(VGG11_LAYERS):
+        if layer.kind == "conv":
+            p["convs"].append(_conv_init(keys[i], layer.kernel, ci, layer.out_ch))
+            ci = layer.out_ch
+        else:
+            p["convs"].append(None)
+            spatial //= 2
+    pooled = spatial // cfg.fc_pool
+    p["fc"] = jax.random.normal(
+        keys[-1], (pooled * pooled * ci, cfg.n_classes), jnp.float32) \
+        * (1.0 / (pooled * pooled * ci)) ** 0.5
+    return p
+
+
+def vgg11_apply(cfg: CNNConfig, p: Params, x: jax.Array,
+                collect_stats: bool = False):
+    """x: (B, H, W, C) image -> logits (B, n_classes) [, spike maps]."""
+    lif = LIFConfig(decay=cfg.spiking.lif_decay, v_th=cfg.spiking.lif_vth)
+    t = cfg.spiking.t_steps
+    q, scale = quantize(x, cfg.direct_coding_bits)
+    s = jnp.broadcast_to((q.astype(jnp.float32) * scale)[None],
+                         (t,) + x.shape)   # direct-coded drive, each step
+    stats: List[jax.Array] = []
+    for layer, w in zip(VGG11_LAYERS, p["convs"]):
+        if layer.kind == "maxpool":
+            s = jax.lax.reduce_window(
+                s, -jnp.inf, jax.lax.max,
+                (1, 1, layer.pool, layer.pool, 1),
+                (1, 1, layer.pool, layer.pool, 1), "VALID")
+            continue
+        drive = jax.vmap(lambda st: tconv(st, w))(s)
+        s = lif_scan(drive, lif)          # binary spikes, all timesteps
+        if collect_stats:
+            stats.append(s)
+    # EAFC head (OPT3): event-driven avgpool+FC over every timestep.
+    logits = jnp.mean(jax.vmap(lambda st: eafc(st, p["fc"], cfg.fc_pool))(s),
+                      axis=0)
+    return (logits, stats) if collect_stats else logits
+
+
+# ---------------------------------------------------------------- ResNet18
+def resnet18_init(cfg: CNNConfig, key) -> Params:
+    keys = iter(jax.random.split(key, 64))
+    p: Params = {"stem": _conv_init(next(keys), 3, cfg.in_ch, 64), "blocks": []}
+    ci = 64
+    for co, n_blocks, stride in RESNET18_STAGES:
+        for b in range(n_blocks):
+            s0 = stride if b == 0 else 1
+            blk = {
+                "conv1": _conv_init(next(keys), 3, ci, co),
+                "conv2": _conv_init(next(keys), 3, co, co),
+                "stride": s0,
+            }
+            if s0 != 1 or ci != co:
+                blk["proj"] = _conv_init(next(keys), 1, ci, co)
+            p["blocks"].append(blk)
+            ci = co
+    pooled = cfg.img // 8 // cfg.fc_pool
+    p["fc"] = jax.random.normal(
+        next(keys), (pooled * pooled * ci, cfg.n_classes), jnp.float32) \
+        * (1.0 / (pooled * pooled * ci)) ** 0.5
+    return p
+
+
+def resnet18_apply(cfg: CNNConfig, p: Params, x: jax.Array,
+                   collect_stats: bool = False):
+    lif = LIFConfig(decay=cfg.spiking.lif_decay, v_th=cfg.spiking.lif_vth)
+    t = cfg.spiking.t_steps
+    q, scale = quantize(x, cfg.direct_coding_bits)
+    xin = jnp.broadcast_to((q.astype(jnp.float32) * scale)[None],
+                           (t,) + x.shape)
+    drive = jax.vmap(lambda st: tconv(st, p["stem"]))(xin)
+    s = lif_scan(drive, lif)
+    stats: List[jax.Array] = [s] if collect_stats else []
+    for blk in p["blocks"]:
+        st0 = blk["stride"]
+        h = jax.vmap(lambda ss: tconv(ss, blk["conv1"], stride=st0))(s)
+        h = lif_scan(h, lif)
+        h2 = jax.vmap(lambda ss: tconv(ss, blk["conv2"]))(h)
+        # Residual Spike SRAM path: shortcut drives added pre-fire.
+        short = s
+        if "proj" in blk:
+            short = jax.vmap(lambda ss: tconv(ss, blk["proj"], stride=st0))(s)
+        s = lif_scan(h2 + short, lif)
+        if collect_stats:
+            stats.append(s)
+    logits = jnp.mean(jax.vmap(lambda ss: eafc(ss, p["fc"], cfg.fc_pool))(s),
+                      axis=0)
+    return (logits, stats) if collect_stats else logits
+
+
+# ------------------------------------------------------------------ SegNet
+def segnet_init(cfg: CNNConfig, key) -> Params:
+    keys = iter(jax.random.split(key, 16))
+    p: Params = {"convs": []}
+    ci = cfg.in_ch
+    for layer in SEGNET_LAYERS:
+        p["convs"].append(_conv_init(next(keys), layer.kernel, ci,
+                                     layer.out_ch))
+        ci = layer.out_ch
+    return p
+
+
+def segnet_apply(cfg: CNNConfig, p: Params, x: jax.Array,
+                 collect_stats: bool = False):
+    """x: (B, H, W, C) -> per-pixel logits (B, H, W, 2)."""
+    lif = LIFConfig(decay=cfg.spiking.lif_decay, v_th=cfg.spiking.lif_vth)
+    t = cfg.spiking.t_steps
+    q, scale = quantize(x, cfg.direct_coding_bits)
+    s = jnp.broadcast_to((q.astype(jnp.float32) * scale)[None], (t,) + x.shape)
+    stats: List[jax.Array] = []
+    mp_total = jnp.zeros(())
+    for i, (layer, w) in enumerate(zip(SEGNET_LAYERS, p["convs"])):
+        last = i == len(SEGNET_LAYERS) - 1
+        if layer.kind == "conv":
+            drive = jax.vmap(lambda ss: tconv(ss, w, stride=layer.stride))(s)
+        else:  # transposed conv
+            drive = jax.vmap(lambda ss: jax.lax.conv_transpose(
+                ss, w, (layer.stride, layer.stride), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC")))(s)
+        if last:
+            return (jnp.mean(drive, axis=0), stats) if collect_stats \
+                else jnp.mean(drive, axis=0)
+        s = lif_scan(drive, lif)
+        if collect_stats:
+            stats.append(s)
+    raise AssertionError("unreachable")

@@ -1,0 +1,115 @@
+"""Shared model layers: params as plain pytrees, pure apply functions.
+
+Conventions
+-----------
+* Params are nested dicts of jax.Arrays; init functions are traceable so
+  `jax.eval_shape(init)` yields allocation-free abstract trees for the
+  dry-run (ShapeDtypeStruct stand-ins).
+* Sharding is name-based: `runtime.sharding` maps param-tree paths to
+  PartitionSpecs, so layers stay sharding-agnostic.
+* Spiking layers take/return an explicit leading T axis (micro-timesteps);
+  LIF is the only op that couples timesteps.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFConfig, lif_scan
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.truncated_normal(key, -2, 2, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2, 2, (vocab, d), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, d_head: int, theta: float = 1e4) -> tuple:
+    """positions: (..., N) int -> (sin, cos) of shape (..., N, d_head/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: (..., N, H, d_head); sin/cos: (..., N, d_head/2) broadcastable."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    s, c = sin[..., None, :], cos[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- LIF helper
+def lif_fire(x: jax.Array, lif_cfg: LIFConfig) -> jax.Array:
+    """Binarize pre-activations into spikes over the leading T axis.
+
+    x: (T, ...) membrane drive -> (T, ...) binary spikes. This is the FPE
+    fire stage; in spiking mode every heavy op consumes its output.
+    """
+    return lif_scan(x, lif_cfg)
+
+
+# --------------------------------------------------------------- SwiGLU MLP
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, spiking: bool,
+              lif_cfg: LIFConfig | None = None) -> jax.Array:
+    """SwiGLU in dense mode; spike-gated two-matmul MLP in spiking mode.
+
+    Spiking mode (x is binary (T, ...)): hidden drive = x @ (w_gate + w_up)
+    is fired through LIF (binary hidden spikes), then down-projected —
+    every matmul sees binary activations (full-event execution). SiLU
+    gating is replaced by the LIF threshold, the FPE analog.
+    """
+    if spiking:
+        h = x @ (p["w_gate"].astype(x.dtype))
+        h = h + x @ (p["w_up"].astype(x.dtype))
+        h = lif_fire(h, lif_cfg)
+        return h @ p["w_down"].astype(h.dtype)
+    g = x @ p["w_gate"].astype(x.dtype)
+    u = x @ p["w_up"].astype(x.dtype)
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) \
+        @ p["w_down"].astype(x.dtype)

@@ -1,0 +1,631 @@
+"""Unified LM builder: every assigned architecture from one LMConfig.
+
+A model is a repeated *pattern* of heterogeneous blocks (dense = 1-long
+pattern; jamba = 8-long Mamba/attn pattern; xlstm = 8-long mLSTM/sLSTM
+pattern), scanned over `n_groups` repetitions with stacked params — one
+compiled body per pattern regardless of depth (88-layer mistral compiles
+the same HLO size as 22-layer tinyllama).
+
+Two execution modes per model (DESIGN.md §4):
+  spiking=True  — the paper's technique: LIF-fired binary activations into
+                  every matmul, SDSA attention (O(N) / O(d) state), event
+                  accounting; leading T micro-timestep axis.
+  spiking=False — the dense ANN baseline (softmax GQA, SiLU MLP), used for
+                  the decode_32k KV-cache serving shape and for
+                  baseline-vs-technique comparisons.
+
+All functions are pure; params/state are pytrees; `jax.eval_shape` over
+`init_params` gives allocation-free abstract trees for the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.core.lif import LIFConfig
+from . import moe as moe_lib
+from . import ssm
+from . import transformer as tfm
+from .layers import dense_init, embed_init, lif_fire, mlp_apply, mlp_init, \
+    rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------ pattern plan
+class BlockSpec(NamedTuple):
+    kind: str          # attn | mamba | mlstm | slstm
+    ffn: str           # mlp | moe | none
+
+
+def layer_pattern(cfg: LMConfig) -> Tuple[List[BlockSpec], int]:
+    """Return (pattern, n_groups) with n_layers == len(pattern) * n_groups."""
+    if cfg.xlstm is not None:
+        period = cfg.xlstm.period
+        pat = [BlockSpec("slstm" if i == cfg.xlstm.slstm_index else "mlstm",
+                         "none") for i in range(period)]
+        assert cfg.n_layers % period == 0
+        return pat, cfg.n_layers // period
+
+    def ffn_kind(layer_idx: int) -> str:
+        if cfg.moe is None:
+            return "mlp"
+        return "moe" if layer_idx % cfg.moe.moe_every == cfg.moe.moe_offset \
+            else "mlp"
+
+    if cfg.hybrid is not None:
+        period = cfg.hybrid.period
+        pat = [BlockSpec(
+            "attn" if i == cfg.hybrid.attn_index else "mamba", ffn_kind(i))
+            for i in range(period)]
+        assert cfg.n_layers % period == 0
+        return pat, cfg.n_layers // period
+
+    period = cfg.moe.moe_every if cfg.moe is not None else 1
+    pat = [BlockSpec("attn", ffn_kind(i)) for i in range(period)]
+    assert cfg.n_layers % period == 0
+    return pat, cfg.n_layers // period
+
+
+def lif_cfg_of(cfg: LMConfig) -> LIFConfig:
+    return LIFConfig(decay=cfg.spiking.lif_decay, v_th=cfg.spiking.lif_vth)
+
+
+# ------------------------------------------------------------------- init
+def _block_init(cfg: LMConfig, spec: BlockSpec, key, cross: bool) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    if spec.kind == "attn":
+        p["ln1"] = rmsnorm_init(cfg.d_model)
+        p["attn"] = tfm.attn_init(ks[0], cfg.d_model, cfg.n_heads,
+                                  cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm)
+    elif spec.kind == "mamba":
+        hy = cfg.hybrid
+        p["ln1"] = rmsnorm_init(cfg.d_model)
+        p["mamba"] = ssm.mamba_init(ks[0], cfg.d_model, hy.d_state,
+                                    hy.d_conv, hy.expand)
+    elif spec.kind == "mlstm":
+        p["mlstm"] = ssm.mlstm_init(ks[0], cfg.d_model, cfg.n_heads)
+    elif spec.kind == "slstm":
+        p["slstm"] = ssm.slstm_init(ks[0], cfg.d_model, cfg.n_heads)
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, (4 * cfg.d_model) // 3)
+    if cross and spec.kind == "attn":
+        p["cross_ln"] = rmsnorm_init(cfg.d_model)
+        p["cross_attn"] = tfm.attn_init(ks[2], cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim, False)
+    if spec.ffn == "mlp":
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff)
+    elif spec.ffn == "moe":
+        m = cfg.moe
+        p["ln2"] = rmsnorm_init(cfg.d_model)
+        p["moe"] = moe_lib.moe_init(ks[3], cfg.d_model, m.d_ff_expert,
+                                    m.n_experts, m.n_shared,
+                                    bank_size=m.bank_size)
+    return p
+
+
+def _stack_init(cfg: LMConfig, key, n_groups: int, pattern: List[BlockSpec],
+                cross: bool) -> List[Params]:
+    """Per pattern position: params stacked over the group axis."""
+    out = []
+    for i, spec in enumerate(pattern):
+        pos_key = jax.random.fold_in(key, i)
+        keys = jax.random.split(pos_key, n_groups)
+        out.append(jax.vmap(
+            lambda k: _block_init(cfg, spec, k, cross))(keys))
+    return out
+
+
+def init_params(cfg: LMConfig, key: jax.Array) -> Params:
+    pattern, n_groups = layer_pattern(cfg)
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model),
+        "blocks": _stack_init(cfg, ks[1], n_groups, pattern,
+                              cross=cfg.encoder_decoder),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "lm_head": dense_init(ks[2], cfg.d_model, cfg.vocab),
+    }
+    if cfg.encoder_decoder:
+        enc_pattern = [BlockSpec("attn", "mlp")]
+        p["encoder"] = {
+            "blocks": _stack_init(cfg, ks[3], cfg.n_encoder_layers,
+                                  enc_pattern, cross=False),
+            "final_norm": rmsnorm_init(cfg.d_model),
+        }
+    if cfg.n_frontend_tokens or cfg.encoder_seq:
+        # Stub frontend projection (assignment: precomputed embeddings in).
+        p["frontend_proj"] = dense_init(ks[4], cfg.d_model, cfg.d_model)
+    return p
+
+
+def abstract_params(cfg: LMConfig) -> Params:
+    """ShapeDtypeStruct tree — dry-run stand-in, no allocation."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+# -------------------------------------------------------- block application
+def _apply_block(cfg: LMConfig, spec: BlockSpec, p: Params, x: jax.Array,
+                 spiking: bool, *, causal: bool = True,
+                 enc_kv: Optional[tuple] = None) -> jax.Array:
+    """Full-sequence block. x: (T,B,N,D) spiking / (B,N,D) dense."""
+    lif = lif_cfg_of(cfg)
+    if spec.kind == "attn":
+        if spiking:
+            s = lif_fire(rmsnorm(p["ln1"], x), lif)
+            a = tfm.attention_sdsa(
+                p["attn"], s, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                d_head=cfg.head_dim, lif_cfg=lif,
+                mode=cfg.spiking.sdsa_mode, causal=causal)
+        else:
+            a = tfm.attention_dense(
+                p["attn"], rmsnorm(p["ln1"], x), n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=cfg.head_dim, causal=causal,
+                window=cfg.sliding_window, qk_norm=cfg.qk_norm,
+                rope_theta=cfg.rope_theta)
+        x = x + a
+        if enc_kv is not None and "cross_attn" in p:
+            x = x + _cross_attn_full(cfg, p, x, enc_kv, spiking)
+    elif spec.kind == "mamba":
+        def mamba_one(xb):
+            out, _ = ssm.mamba_apply(p["mamba"], rmsnorm(p["ln1"], xb),
+                                     None, cfg.hybrid.d_state,
+                                     cfg.hybrid.d_conv)
+            return out
+        if spiking:
+            s = lif_fire(rmsnorm(p["ln1"], x), lif)
+            out, _ = jax.vmap(lambda st: ssm.mamba_apply(
+                p["mamba"], st, None, cfg.hybrid.d_state,
+                cfg.hybrid.d_conv))(s)
+            x = x + out
+        else:
+            x = x + mamba_one(x)
+    elif spec.kind == "mlstm":
+        if spiking:
+            s = lif_fire(x, lif)
+            out, _ = jax.vmap(lambda st: ssm.mlstm_apply(
+                p["mlstm"], st, cfg.n_heads))(s)
+            x = out
+        else:
+            x, _ = ssm.mlstm_apply(p["mlstm"], x, cfg.n_heads)
+    elif spec.kind == "slstm":
+        if spiking:
+            s = lif_fire(x, lif)
+            out, _ = jax.vmap(lambda st: ssm.slstm_apply(
+                p["slstm"], st, cfg.n_heads))(s)
+            x = out
+        else:
+            x, _ = ssm.slstm_apply(p["slstm"], x, cfg.n_heads)
+
+    if spec.ffn == "mlp":
+        h = rmsnorm(p["ln2"], x)
+        if spiking:
+            h = lif_fire(h, lif)
+        x = x + mlp_apply(p["mlp"], h, spiking=spiking, lif_cfg=lif)
+    elif spec.ffn == "moe":
+        h = rmsnorm(p["ln2"], x)
+        if spiking:
+            h = lif_fire(h, lif)
+        if cfg.moe_shard_map:
+            moe_out = moe_lib.moe_apply_shard_map(
+                p["moe"], h, top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, spiking=spiking,
+                lif_cfg=lif)
+        else:
+            moe_out = moe_lib.moe_apply(
+                p["moe"], h, top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, spiking=spiking,
+                lif_cfg=lif, dispatch_groups=cfg.moe_dispatch_groups)
+        x = x + moe_out
+    return x
+
+
+def _cross_attn_full(cfg, p, x, enc_kv, spiking):
+    """Cross-attention to (pre-projected) encoder keys/values."""
+    k_enc, v_enc = enc_kv
+    lif = lif_cfg_of(cfg)
+    h = rmsnorm(p["cross_ln"], x)
+    if spiking:
+        q = lif_fire(h, lif)
+        qh = (q @ p["cross_attn"]["w_q"].astype(q.dtype)).reshape(
+            q.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+        qh = lif_fire(qh, lif)
+        status = jnp.max(k_enc * v_enc, axis=-3)           # (B,KV,dh) OR
+        status = jnp.repeat(status, cfg.n_heads // cfg.n_kv_heads, axis=-2)
+        out = qh * status[None, :, None]
+        out = out.reshape(q.shape[:-1] + (cfg.n_heads * cfg.head_dim,))
+        return out @ p["cross_attn"]["w_o"].astype(out.dtype)
+    qh = (h @ p["cross_attn"]["w_q"].astype(h.dtype)).reshape(
+        h.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+    rep = cfg.n_heads // cfg.n_kv_heads
+    kk = jnp.repeat(k_enc, rep, axis=-2).swapaxes(-3, -2)  # (B,H,S,dh)
+    vv = jnp.repeat(v_enc, rep, axis=-2).swapaxes(-3, -2)
+    qq = qh.swapaxes(-3, -2)
+    sc = jnp.einsum("...hqd,...hkd->...hqk", qq, kk).astype(jnp.float32)
+    pr = jax.nn.softmax(sc * cfg.head_dim ** -0.5, axis=-1).astype(h.dtype)
+    out = jnp.einsum("...hqk,...hkd->...hqd", pr, vv).swapaxes(-3, -2)
+    out = out.reshape(h.shape[:-1] + (cfg.n_heads * cfg.head_dim,))
+    return out @ p["cross_attn"]["w_o"].astype(out.dtype)
+
+
+# ------------------------------------------------------------ full forward
+def _remat_wrap(cfg: LMConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    return jax.checkpoint(fn, policy=policy)
+
+
+def forward_hidden(cfg: LMConfig, params: Params, tokens: jax.Array,
+                   spiking: bool, frontend: Optional[jax.Array] = None,
+                   causal: bool = True) -> jax.Array:
+    """tokens (B, N) -> final hidden (B, N, D) (T-averaged if spiking)."""
+    pattern, n_groups = layer_pattern(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)           # (B,N,D)
+    if frontend is not None and not cfg.encoder_decoder:
+        # VLM-style stub frontend: precomputed patch embeds prepended to
+        # the decoder stream. (Audio frontends feed the encoder instead.)
+        fe = frontend @ params["frontend_proj"].astype(frontend.dtype)
+        x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+    if spiking:
+        x = jnp.broadcast_to(x[None], (cfg.spiking.t_steps,) + x.shape)
+
+    enc_kv = None
+    if cfg.encoder_decoder:
+        enc_hidden = _encoder_forward(cfg, params, frontend, spiking)
+        enc_kv = enc_hidden  # per-layer projection happens inside blocks
+    x = _run_blocks(cfg, params["blocks"], x, spiking, pattern, n_groups,
+                    causal, enc_kv)
+    if spiking:
+        x = jnp.mean(x, axis=0)                             # rate decoding
+    return rmsnorm(params["final_norm"], x)
+
+
+def _unshard_weights(tree):
+    """ZeRO-3 per-layer weight gather: constrain every matrix to replicated
+    right before use. Without this GSPMD may keep weights sharded and
+    gather the (1000x larger) activations instead (§Perf cell C)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if not (getattr(mesh, "axis_names", None)):
+            return tree
+    except Exception:
+        return tree
+
+    def one(w):
+        if w.ndim < 2:
+            return w
+        return jax.lax.with_sharding_constraint(
+            w, jax.sharding.PartitionSpec(*([None] * w.ndim)))
+    return jax.tree.map(one, tree)
+
+
+def _run_blocks(cfg, blocks, x, spiking, pattern, n_groups, causal, enc_kv):
+    # Heterogeneous patterns (jamba's 8-layer group) nest a second remat
+    # around each sub-layer: backward then holds ONE sub-layer's internals
+    # instead of the whole group's — 8x smaller live set at the cost of one
+    # extra forward (already paid by remat="full").
+    nested = cfg.remat == "full" and len(pattern) > 1
+
+    def sub_block(spec, i):
+        def f(x, group_params):
+            kv = None
+            if enc_kv is not None and spec.kind == "attn":
+                kv = _project_enc_kv(cfg, group_params[i], enc_kv, spiking)
+            return _apply_block(cfg, spec, group_params[i], x, spiking,
+                                causal=causal, enc_kv=kv)
+        return jax.checkpoint(f) if nested else f
+
+    subs = [sub_block(spec, i) for i, spec in enumerate(pattern)]
+
+    def group_body(x, group_params):
+        if cfg.pure_fsdp:
+            group_params = _unshard_weights(group_params)
+        for f in subs:
+            x = f(x, group_params)
+        return x, None
+
+    body = _remat_wrap(cfg, group_body)
+    x, _ = jax.lax.scan(lambda c, p: body(c, p), x, tuple(blocks))
+    return x
+
+
+def _project_enc_kv(cfg, p, enc_hidden, spiking):
+    """Project encoder hidden into this layer's cross K/V (heads layout)."""
+    if "cross_attn" not in p:
+        return None
+    pa = p["cross_attn"]
+    h = enc_hidden
+    k = (h @ pa["w_k"].astype(h.dtype)).reshape(
+        h.shape[:-1] + (cfg.n_kv_heads, cfg.head_dim))
+    v = (h @ pa["w_v"].astype(h.dtype)).reshape(
+        h.shape[:-1] + (cfg.n_kv_heads, cfg.head_dim))
+    if spiking:
+        lif = lif_cfg_of(cfg)
+        k = lif_fire(k[None], lif)[0]
+        v = lif_fire(v[None], lif)[0]
+    return k, v
+
+
+def _encoder_forward(cfg: LMConfig, params: Params,
+                     frontend: Optional[jax.Array], spiking: bool):
+    """Whisper-style encoder over stub frame embeddings (non-causal)."""
+    enc = params["encoder"]
+    fe = frontend
+    if fe is None:
+        raise ValueError("encoder-decoder arch requires frontend embeddings")
+    x = fe @ params["frontend_proj"].astype(fe.dtype)
+    if spiking:
+        x = jnp.broadcast_to(x[None], (cfg.spiking.t_steps,) + x.shape)
+    pattern = [BlockSpec("attn", "mlp")]
+    x = _run_blocks(cfg, enc["blocks"], x, spiking, pattern,
+                    cfg.n_encoder_layers, causal=False, enc_kv=None)
+    if spiking:
+        x = jnp.mean(x, axis=0)
+    return rmsnorm(enc["final_norm"], x)
+
+
+# ------------------------------------------------------------------- loss
+def chunked_ce_loss(hidden: jax.Array, w_head: jax.Array, labels: jax.Array,
+                    chunk: int) -> jax.Array:
+    """Cross-entropy without materializing (N, vocab) logits: scan over
+    sequence chunks, rematerialized in backward (memory = chunk x vocab)."""
+    b, n, d = hidden.shape
+    if n % chunk:
+        chunk = n  # fall back for tiny smoke shapes
+    nc = n // chunk
+    h_c = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    l_c = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        hh, ll = xs
+        logits = (hh @ w_head.astype(hh.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(ll, 0)[..., None], axis=-1)[..., 0]
+        mask = (ll >= 0).astype(jnp.float32)
+        return (carry[0] + jnp.sum((lse - tgt) * mask),
+                carry[1] + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (h_c, l_c))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(cfg: LMConfig, params: Params, batch: Dict[str, jax.Array],
+            spiking: bool) -> jax.Array:
+    hidden = forward_hidden(cfg, params, batch["tokens"], spiking,
+                            frontend=batch.get("frontend"))
+    if cfg.pure_fsdp:
+        # gather the head once, not once per CE chunk
+        params = {**params, "lm_head": _unshard_weights(
+            {"w": params["lm_head"]})["w"]}
+    labels = batch["labels"]
+    if cfg.n_frontend_tokens and "frontend" in batch:
+        # frontend positions carry no LM loss
+        pad = -jnp.ones(labels.shape[:1] + (cfg.n_frontend_tokens,),
+                        labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return chunked_ce_loss(hidden, params["lm_head"], labels, cfg.loss_chunk)
+
+
+# ------------------------------------------------------------------ serving
+class LayerState(NamedTuple):
+    """Union state for one pattern position (unused fields are None)."""
+    kv: Any = None          # tfm.KVCache        (dense attn decode)
+    sdsa: Any = None        # tfm.SDSAState      (spiking attn decode)
+    mamba: Any = None       # ssm.MambaState
+    mlstm: Any = None
+    slstm: Any = None
+    cross_kv: Any = None    # (k_enc, v_enc) static
+    cross_status: Any = None
+
+
+def init_state(cfg: LMConfig, spec: BlockSpec, b: int, s: int, spiking: bool,
+               n_groups: int) -> LayerState:
+    """Stacked (n_groups, ...) decode state for one pattern position."""
+    def stack(tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups,) + x.shape), tree)
+
+    st = LayerState()
+    if spec.kind == "attn":
+        if spiking:
+            st = st._replace(sdsa=stack(tfm.sdsa_state_init(
+                b, cfg.n_heads, cfg.head_dim)))
+        else:
+            st = st._replace(kv=stack(tfm.kv_cache_init(
+                b, s, cfg.n_kv_heads, cfg.head_dim)))
+    elif spec.kind == "mamba":
+        st = st._replace(mamba=stack(ssm.mamba_state_init(
+            b, cfg.d_model, cfg.hybrid.d_state, cfg.hybrid.d_conv,
+            cfg.hybrid.expand)))
+    elif spec.kind == "mlstm":
+        st = st._replace(mlstm=stack(ssm.mlstm_state_init(
+            b, cfg.d_model, cfg.n_heads)))
+    elif spec.kind == "slstm":
+        st = st._replace(slstm=stack(ssm.slstm_state_init(b, cfg.d_model)))
+    if cfg.encoder_decoder and spec.kind == "attn":
+        k_enc = jnp.zeros((b, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim),
+                          jnp.bfloat16)
+        if spiking:
+            st = st._replace(cross_status=stack(
+                jnp.zeros((b, cfg.n_heads, cfg.head_dim), jnp.bfloat16)))
+        else:
+            st = st._replace(cross_kv=stack((k_enc, k_enc)))
+    return st
+
+
+def init_decode_state(cfg: LMConfig, b: int, s: int, spiking: bool):
+    pattern, n_groups = layer_pattern(cfg)
+    return [init_state(cfg, spec, b, s, spiking, n_groups)
+            for spec in pattern]
+
+
+def decode_step(cfg: LMConfig, params: Params, state: list,
+                token: jax.Array, pos: jax.Array, spiking: bool):
+    """One serving step. token: (B,) int32; pos: scalar int32 position.
+
+    Returns (logits (B, vocab), new_state). Dense mode appends to the KV
+    cache; spiking mode updates O(d) SDSA statuses; SSM kinds update their
+    recurrent states.
+    """
+    pattern, n_groups = layer_pattern(cfg)
+    lif = lif_cfg_of(cfg)
+    x = jnp.take(params["embed"], token, axis=0)            # (B, D)
+    if spiking:
+        x = jnp.broadcast_to(x[None], (cfg.spiking.t_steps,) + x.shape)
+
+    def group_body(x, xs):
+        group_params, group_state = xs
+        new_states = []
+        for i, spec in enumerate(pattern):
+            p, st = group_params[i], group_state[i]
+            x, st = _apply_block_decode(cfg, spec, p, st, x, pos, spiking)
+            new_states.append(st)
+        return x, tuple(new_states)
+
+    x, new_state = jax.lax.scan(
+        group_body, x, (tuple(params["blocks"]), tuple(state)))
+    if spiking:
+        x = jnp.mean(x, axis=0)
+    h = rmsnorm(params["final_norm"], x)
+    logits = (h @ params["lm_head"].astype(h.dtype)).astype(jnp.float32)
+    return logits, list(new_state)
+
+
+def _apply_block_decode(cfg, spec, p, st: LayerState, x, pos, spiking):
+    lif = lif_cfg_of(cfg)
+    if spec.kind == "attn":
+        if spiking:
+            s = lif_fire(rmsnorm(p["ln1"], x), lif)          # (T,B,D)
+            a, new_sdsa = tfm.attention_sdsa_decode(
+                p["attn"], s, st.sdsa, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=cfg.head_dim, lif_cfg=lif,
+                mode=cfg.spiking.sdsa_mode)
+            x = x + a
+            st = st._replace(sdsa=new_sdsa)
+            if st.cross_status is not None:
+                q = lif_fire(rmsnorm(p["cross_ln"], x), lif)
+                qh = (q @ p["cross_attn"]["w_q"].astype(q.dtype)).reshape(
+                    q.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+                out = lif_fire(qh, lif) * st.cross_status[None].astype(q.dtype)
+                out = out.reshape(q.shape[:-1] + (-1,))
+                x = x + out @ p["cross_attn"]["w_o"].astype(x.dtype)
+        else:
+            a, new_kv = tfm.attention_dense_decode(
+                p["attn"], rmsnorm(p["ln1"], x), st.kv, pos,
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                d_head=cfg.head_dim, window=cfg.sliding_window,
+                qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+                masked_cache_update=cfg.decode_masked_update)
+            x = x + a
+            st = st._replace(kv=new_kv)
+            if st.cross_kv is not None:
+                x = x + _cross_attn_full(
+                    cfg, p, x[:, None, :], st.cross_kv, False)[:, 0, :]
+    elif spec.kind == "mamba":
+        h = rmsnorm(p["ln1"], x)
+        if spiking:
+            h = lif_fire(h, lif)
+            h = jnp.mean(h, axis=0)                          # collapse T
+        out, new_m = ssm.mamba_apply(p["mamba"], h[:, None, :], st.mamba,
+                                     cfg.hybrid.d_state, cfg.hybrid.d_conv)
+        out = out[:, 0, :]
+        if spiking:
+            out = jnp.broadcast_to(out[None], x.shape)
+        x = x + out
+        st = st._replace(mamba=new_m)
+    elif spec.kind == "mlstm":
+        h = jnp.mean(lif_fire(x, lif), axis=0) if spiking else x
+        out, new_s = ssm.mlstm_apply(p["mlstm"], h[:, None, :], cfg.n_heads,
+                                     st.mlstm)
+        out = out[:, 0, :]
+        x = jnp.broadcast_to(out[None], x.shape) if spiking else out
+        st = st._replace(mlstm=new_s)
+    elif spec.kind == "slstm":
+        h = jnp.mean(lif_fire(x, lif), axis=0) if spiking else x
+        out, new_s = ssm.slstm_apply(p["slstm"], h[:, None, :], cfg.n_heads,
+                                     st.slstm)
+        out = out[:, 0, :]
+        x = jnp.broadcast_to(out[None], x.shape) if spiking else out
+        st = st._replace(slstm=new_s)
+
+    if spec.ffn != "none":
+        h = rmsnorm(p["ln2"], x)
+        if spiking:
+            h = lif_fire(h, lif)
+        if spec.ffn == "mlp":
+            x = x + mlp_apply(p["mlp"], h, spiking=spiking, lif_cfg=lif)
+        else:
+            moe_fn = moe_lib.moe_apply_shard_map if cfg.moe_shard_map \
+                else moe_lib.moe_apply
+            x = x + moe_fn(
+                p["moe"], h[..., None, :], top_k=cfg.moe.top_k,
+                capacity_factor=cfg.moe.capacity_factor, spiking=spiking,
+                lif_cfg=lif)[..., 0, :]
+    return x, st
+
+
+def prefill(cfg: LMConfig, params: Params, tokens: jax.Array, spiking: bool,
+            frontend: Optional[jax.Array] = None):
+    """Full-sequence prefill returning last-position logits.
+
+    (For SDSA/SSM serving the production path re-uses forward_hidden and
+    folds states via the streaming updates; the dry-run lowers this
+    function for the prefill_32k shape.)
+    """
+    hidden = forward_hidden(cfg, params, tokens, spiking, frontend=frontend)
+    h_last = hidden[:, -1, :]
+    return (h_last @ params["lm_head"].astype(h_last.dtype)).astype(jnp.float32)
+
+
+def prefill_with_state(cfg: LMConfig, params: Params, tokens: jax.Array,
+                       spiking: bool, max_seq: Optional[int] = None):
+    """Streaming prefill producing the decode state (serving handoff).
+
+    Scans `decode_step` over the prompt — for SDSA/SSM this is the O(N)
+    streaming form (state is O(d)); for dense mode it fills the KV cache.
+    Returns (last-position logits, state ready for generation at pos=N).
+    """
+    b, n = tokens.shape
+    state = init_decode_state(cfg, b, max_seq or n, spiking)
+
+    def body(st, i):
+        logits, st = decode_step(cfg, params, st, tokens[:, i], i, spiking)
+        return st, logits
+
+    state, logits_seq = jax.lax.scan(body, state, jnp.arange(n))
+    return logits_seq[-1], state
+
+
+def param_count(cfg: LMConfig) -> int:
+    tree = abstract_params(cfg)
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def active_param_count(cfg: LMConfig) -> int:
+    """Active params per token (MoE top-k instead of all experts)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    tree = abstract_params(cfg)
+    import numpy as np
+    expert_leaves = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = [getattr(k, "key", None) for k in path]
+        if any(k in ("w_gate", "w_up", "w_down") for k in keys) and \
+           any(k == "moe" for k in keys):
+            expert_leaves += int(np.prod(leaf.shape))
+    active_frac = cfg.moe.top_k / cfg.moe.n_experts
+    return int(total - expert_leaves * (1 - active_frac))

@@ -1,0 +1,98 @@
+"""SpikingFormer-L-D (the paper's transformer workloads, Table II).
+
+Structure per the SpikingFormer line of work, matching the paper's
+benchmark split (Fig. 7): a Spiking Patch Splitting (SPS) conv stem that
+downsamples 32x32 CIFAR images into 8x8 = 64 tokens of dimension D, then
+L encoder blocks of spike-driven self-attention (SSA — the Attention Core
+semantics) + spiking MLP (FFN). Membrane shortcut residuals; rate-decoded
+classification head.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SpikingConfig
+from repro.core.econv import tconv
+from repro.core.lif import LIFConfig, lif_scan
+from repro.core.sdsa import sdsa as sdsa_core
+from .cnn import _conv_init
+from .layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def spikingformer_init(key, depth: int, dim: int, n_classes: int = 10,
+                       in_ch: int = 3) -> Params:
+    keys = iter(jax.random.split(key, 16 + 8 * depth))
+    sps_dims = (dim // 8, dim // 4, dim // 2, dim)
+    p: Params = {"sps": [], "blocks": []}
+    ci = in_ch
+    for co in sps_dims:
+        p["sps"].append(_conv_init(next(keys), 3, ci, co))
+        ci = co
+    for _ in range(depth):
+        p["blocks"].append({
+            "w_q": dense_init(next(keys), dim, dim, jnp.float32),
+            "w_k": dense_init(next(keys), dim, dim, jnp.float32),
+            "w_v": dense_init(next(keys), dim, dim, jnp.float32),
+            "w_o": dense_init(next(keys), dim, dim, jnp.float32),
+            "w_fc1": dense_init(next(keys), dim, 4 * dim, jnp.float32),
+            "w_fc2": dense_init(next(keys), 4 * dim, dim, jnp.float32),
+        })
+    p["head"] = dense_init(next(keys), dim, n_classes, jnp.float32)
+    return p
+
+
+def spikingformer_apply(p: Params, x: jax.Array, n_heads: int = 8,
+                        spiking_cfg: SpikingConfig = SpikingConfig(t_steps=4),
+                        collect_stats: bool = False):
+    """x: (B, 32, 32, C) -> logits (B, n_classes) [, spike maps]."""
+    lif = LIFConfig(decay=spiking_cfg.lif_decay, v_th=spiking_cfg.lif_vth)
+    t = spiking_cfg.t_steps
+    b = x.shape[0]
+    s = jnp.broadcast_to(x[None], (t,) + x.shape)
+    stats: List[jax.Array] = []
+
+    # SPS: conv -> LIF x4, maxpool after stages 2 and 3 (32 -> 8).
+    for i, w in enumerate(p["sps"]):
+        drive = jax.vmap(lambda ss: tconv(ss, w))(s)
+        s = lif_scan(drive, lif)
+        if i in (1, 2):
+            s = jax.lax.reduce_window(
+                s, -jnp.inf, jax.lax.max, (1, 1, 2, 2, 1), (1, 1, 2, 2, 1),
+                "VALID")
+        if collect_stats:
+            stats.append(s)
+
+    dim = s.shape[-1]
+    n_tok = s.shape[2] * s.shape[3]
+    tokens = s.reshape(t, b, n_tok, dim)                   # (T,B,N,D) spikes
+    x_mp = tokens                                           # membrane stream
+
+    for blk in p["blocks"]:
+        # SSA: q/k/v spikes -> Attention Core (non-causal OR form).
+        sq = lif_scan(x_mp @ blk["w_q"], lif).reshape(
+            t, b, n_tok, n_heads, dim // n_heads)
+        sk = lif_scan(x_mp @ blk["w_k"], lif).reshape(
+            t, b, n_tok, n_heads, dim // n_heads)
+        sv = lif_scan(x_mp @ blk["w_v"], lif).reshape(
+            t, b, n_tok, n_heads, dim // n_heads)
+        attn = sdsa_core(sq.swapaxes(2, 3), sk.swapaxes(2, 3),
+                         sv.swapaxes(2, 3), mode=spiking_cfg.sdsa_mode)
+        attn = attn.swapaxes(2, 3).reshape(t, b, n_tok, dim)
+        if collect_stats:
+            stats.append(attn)
+        x_mp = x_mp + attn @ blk["w_o"]
+        # Spiking MLP (FFN)
+        h = lif_scan(x_mp, lif)
+        h = lif_scan(h @ blk["w_fc1"], lif)
+        if collect_stats:
+            stats.append(h)
+        x_mp = x_mp + h @ blk["w_fc2"]
+
+    feats = jnp.mean(lif_scan(x_mp, lif), axis=(0, 2))      # rate + token avg
+    logits = feats @ p["head"]
+    return (logits, stats) if collect_stats else logits

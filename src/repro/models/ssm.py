@@ -1,0 +1,253 @@
+"""Recurrent-state blocks: Mamba (jamba hybrid) and xLSTM (mLSTM/sLSTM).
+
+These families carry O(d·d_state) recurrent state instead of a KV cache,
+which is why they run the 500k-token decode shape natively. They are
+kindred to the paper's LIF machinery — input-dependent state updates — and
+in spiking mode their block outputs are fired through LIF so downstream
+matmuls stay event-driven (DESIGN.md §4). Sequence recurrences use
+`jax.lax.scan` (single compiled loop body; analytic FLOP accounting in the
+roofline handles trip counts).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+
+# =============================================================== Mamba (S6)
+class MambaState(NamedTuple):
+    h: jax.Array        # (B, d_inner, d_state)
+    conv: jax.Array     # (B, d_conv-1, d_inner) rolling conv window
+
+
+def mamba_init(key, d_model: int, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: int | None = None,
+               dtype=jnp.bfloat16) -> Params:
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(16, d_model // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner), jnp.float32)
+                   * 0.1).astype(dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype),
+        "a_log": jnp.log(jnp.tile(
+            jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (d_inner, 1))),
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def _mamba_scan_step(h, inputs, a):
+    """h: (B, d_inner, d_state); one selective-SSM step.
+
+    Scan xs/ys are bf16 (the stacked (N, B, d_inner) buffers dominate jamba
+    training memory otherwise); the recurrence itself runs f32.
+    """
+    xt, dt, bt, ct = inputs      # (B,di) bf16, (B,di) f32, (B,ds) bf16 x2
+    xt32, bt32, ct32 = (t.astype(jnp.float32) for t in (xt, bt, ct))
+    da = jnp.exp(dt[..., None] * a[None])                   # (B,di,ds)
+    h = h * da + dt[..., None] * xt32[..., None] * bt32[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, ct32)
+    return h, y.astype(jnp.bfloat16)
+
+
+def mamba_apply(p: Params, x: jax.Array, state: MambaState | None = None,
+                d_state: int = 16, d_conv: int = 4):
+    """x: (B, N, D) -> (B, N, D), optionally carrying decode state.
+
+    Returns (out, new_state). Full-sequence mode initializes zero state.
+    """
+    b, n, d = x.shape
+    d_inner = p["in_proj"].shape[-1] // 2
+    dt_rank = p["x_proj"].shape[-1] - 2 * d_state
+
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                       # (B,N,di)
+
+    # Depthwise causal conv (window d_conv) with carried history.
+    if state is None:
+        hist = jnp.zeros((b, d_conv - 1, d_inner), xs.dtype)
+        h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    else:
+        hist, h0 = state.conv.astype(xs.dtype), state.h
+    xpad = jnp.concatenate([hist, xs], axis=1)              # (B,N+c-1,di)
+    idx = jnp.arange(n)[:, None] + jnp.arange(d_conv)[None, :]
+    windows = xpad[:, idx, :]                               # (B,N,c,di)
+    xc = jnp.einsum("bncd,cd->bnd", windows, p["conv_w"].astype(xs.dtype))
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(xs.dtype)
+
+    proj = xc @ p["x_proj"].astype(xc.dtype)
+    dt, bmat, cmat = jnp.split(
+        proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(
+        (dt @ p["dt_proj"].astype(dt.dtype)).astype(jnp.float32))
+    a = -jnp.exp(p["a_log"])                                 # (di,ds)
+
+    hN, ys = jax.lax.scan(
+        lambda h, inp: _mamba_scan_step(h, inp, a),
+        h0,
+        (xc.swapaxes(0, 1), dt.swapaxes(0, 1),
+         bmat.swapaxes(0, 1), cmat.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1) + (xc * p["d_skip"].astype(xc.dtype))  # (B,N,di)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["out_proj"].astype(y.dtype)
+    new_hist = xpad[:, n:, :] if n >= d_conv - 1 else xpad[:, -(d_conv - 1):, :]
+    return out, MambaState(h=hN, conv=new_hist.astype(jnp.bfloat16))
+
+
+def mamba_state_init(b: int, d_model: int, d_state: int = 16,
+                     d_conv: int = 4, expand: int = 2) -> MambaState:
+    d_inner = expand * d_model
+    return MambaState(h=jnp.zeros((b, d_inner, d_state), jnp.float32),
+                      conv=jnp.zeros((b, d_conv - 1, d_inner), jnp.bfloat16))
+
+
+# ================================================================== mLSTM
+class MLSTMState(NamedTuple):
+    c: jax.Array    # (B, H, dh, dh) matrix memory
+    n: jax.Array    # (B, H, dh) normalizer
+    m: jax.Array    # (B, H) stabilizer
+
+
+def mlstm_init(key, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> Params:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "norm": rmsnorm_init(d_model),
+        "w_q": dense_init(ks[0], d_model, d_model, dtype),
+        "w_k": dense_init(ks[1], d_model, d_model, dtype),
+        "w_v": dense_init(ks[2], d_model, d_model, dtype),
+        "w_i": dense_init(ks[3], d_model, n_heads, dtype),
+        "w_f": dense_init(ks[4], d_model, n_heads, dtype),
+        "w_o": dense_init(ks[5], d_model, d_model, dtype),
+        "out_norm": rmsnorm_init(dh),
+    }
+
+
+def _mlstm_step(state: MLSTMState, inp, dh: float):
+    q, k, v, i_raw, f_raw = inp   # (B,H,dh) x3, (B,H) x2
+    c, n, m = state
+    m_new = jnp.maximum(f_raw + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_raw + m - m_new)
+    c = f_g[..., None, None] * c + i_g[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), 1.0)
+    return MLSTMState(c, n, m_new), (num / den[..., None]).astype(jnp.bfloat16)
+
+
+def mlstm_apply(p: Params, x: jax.Array, n_heads: int,
+                state: MLSTMState | None = None):
+    """mLSTM block: (B, N, D) -> (B, N, D) with matrix-memory recurrence."""
+    b, nn, d = x.shape
+    dh = d // n_heads
+    xh = rmsnorm(p["norm"], x)
+
+    def heads(w):
+        return (xh @ w.astype(xh.dtype)).reshape(b, nn, n_heads, dh) \
+            .astype(jnp.float32)
+    q, k, v = heads(p["w_q"]) / (dh ** 0.5), heads(p["w_k"]), heads(p["w_v"])
+    i_raw = (xh @ p["w_i"].astype(xh.dtype)).astype(jnp.float32)
+    f_raw = jax.nn.log_sigmoid(
+        (xh @ p["w_f"].astype(xh.dtype)).astype(jnp.float32))
+
+    if state is None:
+        state = mlstm_state_init(b, d, n_heads)
+    state, ys = jax.lax.scan(
+        lambda s, inp: _mlstm_step(s, inp, dh),
+        state,
+        (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+         i_raw.swapaxes(0, 1), f_raw.swapaxes(0, 1)))
+    y = ys.swapaxes(0, 1)                                    # (B,N,H,dh)
+    y = rmsnorm(p["out_norm"], y).reshape(b, nn, d).astype(x.dtype)
+    return x + y @ p["w_o"].astype(x.dtype), state
+
+
+def mlstm_state_init(b: int, d_model: int, n_heads: int) -> MLSTMState:
+    dh = d_model // n_heads
+    return MLSTMState(
+        c=jnp.zeros((b, n_heads, dh, dh), jnp.float32),
+        n=jnp.zeros((b, n_heads, dh), jnp.float32),
+        m=jnp.full((b, n_heads), -1e30, jnp.float32))
+
+
+# ================================================================== sLSTM
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, D)
+    n: jax.Array   # (B, D)
+    h: jax.Array   # (B, D)
+    m: jax.Array   # (B, D)
+
+
+def slstm_init(key, d_model: int, n_heads: int, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 9)
+    dh = d_model // n_heads
+
+    def rec(k):  # block-diagonal recurrent weights, one block per head
+        return (jax.random.normal(k, (n_heads, dh, dh), jnp.float32)
+                / (dh ** 0.5)).astype(dtype)
+
+    return {
+        "norm": rmsnorm_init(d_model),
+        "w_i": dense_init(ks[0], d_model, d_model, dtype),
+        "w_f": dense_init(ks[1], d_model, d_model, dtype),
+        "w_z": dense_init(ks[2], d_model, d_model, dtype),
+        "w_o": dense_init(ks[3], d_model, d_model, dtype),
+        "r_i": rec(ks[4]), "r_f": rec(ks[5]), "r_z": rec(ks[6]),
+        "r_o": rec(ks[7]),
+        "w_out": dense_init(ks[8], d_model, d_model, dtype),
+    }
+
+
+def _slstm_step(state: SLSTMState, inp, p, n_heads):
+    xi, xf, xz, xo = inp          # (B, D) pre-activations each
+    c, n, h, m = state
+    b, d = h.shape
+    dh = d // n_heads
+    hh = h.reshape(b, n_heads, dh)
+
+    def rmul(r):
+        return jnp.einsum("bhd,hde->bhe", hh, r.astype(jnp.float32)) \
+            .reshape(b, d)
+    i_raw = xi + rmul(p["r_i"])
+    f_raw = xf + rmul(p["r_f"])
+    z = jnp.tanh(xz + rmul(p["r_z"]))
+    o = jax.nn.sigmoid(xo + rmul(p["r_o"]))
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_raw) + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(jax.nn.log_sigmoid(f_raw) + m - m_new)
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h = o * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c, n, h, m_new), h.astype(jnp.bfloat16)
+
+
+def slstm_apply(p: Params, x: jax.Array, n_heads: int,
+                state: SLSTMState | None = None):
+    """sLSTM block: (B, N, D) -> (B, N, D), scalar memory + recurrence."""
+    b, nn, d = x.shape
+    xh = rmsnorm(p["norm"], x)
+    pre = [(xh @ p[w].astype(xh.dtype)).astype(jnp.float32)
+           for w in ("w_i", "w_f", "w_z", "w_o")]
+    if state is None:
+        state = slstm_state_init(b, d)
+    state, hs = jax.lax.scan(
+        lambda s, inp: _slstm_step(s, inp, p, n_heads),
+        state, tuple(t.swapaxes(0, 1) for t in pre))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    return x + y @ p["w_out"].astype(x.dtype), state
+
+
+def slstm_state_init(b: int, d_model: int) -> SLSTMState:
+    z = jnp.zeros((b, d_model), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((b, d_model), -1e30, jnp.float32))

@@ -1,0 +1,273 @@
+"""Attention layers: dense GQA (baseline / KV-cache serving) and SDSA
+(the paper's Attention Core) — plus their decode counterparts.
+
+Dense GQA is the "TConv analogue": softmax attention with RoPE, optional
+qk-norm (qwen3) and sliding window (mixtral), O(N^2) with a real KV cache.
+SDSA is the paper's technique: binary Q/K/V spikes, causal cumulative-OR
+status vector, O(N) compute and O(d) decode state (DESIGN.md §2).
+
+Spiking tensors carry a leading T axis (micro-timesteps).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import LIFConfig
+from .layers import apply_rope, dense_init, lif_fire, rmsnorm, rope_angles
+
+Params = Dict[str, Any]
+
+
+def attn_init(key, d_model: int, n_heads: int, n_kv: int, d_head: int,
+              qk_norm: bool = False, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {
+        "w_q": dense_init(ks[0], d_model, n_heads * d_head, dtype),
+        "w_k": dense_init(ks[1], d_model, n_kv * d_head, dtype),
+        "w_v": dense_init(ks[2], d_model, n_kv * d_head, dtype),
+        "w_o": dense_init(ks[3], n_heads * d_head, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((d_head,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((d_head,), jnp.float32)}
+    return p
+
+
+def _project_qkv(p: Params, x: jax.Array, n_heads: int, n_kv: int,
+                 d_head: int):
+    """x: (..., N, D) -> q (..., N, H, dh), k/v (..., N, KV, dh)."""
+    q = (x @ p["w_q"].astype(x.dtype)).reshape(x.shape[:-1] + (n_heads, d_head))
+    k = (x @ p["w_k"].astype(x.dtype)).reshape(x.shape[:-1] + (n_kv, d_head))
+    v = (x @ p["w_v"].astype(x.dtype)).reshape(x.shape[:-1] + (n_kv, d_head))
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(..., N, KV, dh) -> (..., N, KV*n_rep, dh) head replication (GQA)."""
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=-2)
+
+
+# ------------------------------------------------------------- dense (GQA)
+def attention_dense(
+    p: Params, x: jax.Array, *, n_heads: int, n_kv: int, d_head: int,
+    causal: bool = True, window: int | None = None, qk_norm: bool = False,
+    rope_theta: float = 1e4, kv_block: int = 1024,
+) -> jax.Array:
+    """Full-sequence softmax GQA. x: (B, N, D) -> (B, N, D).
+
+    For N > kv_block, runs blockwise (flash-style) online-softmax over KV
+    chunks via lax.scan — O(N * kv_block) live score memory instead of
+    O(N^2) (production memory behaviour without a fused kernel).
+    """
+    b, n, _ = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv, d_head)
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    positions = jnp.arange(n)
+    sin, cos = rope_angles(positions, d_head, rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    k = _repeat_kv(k, n_heads // n_kv)
+    v = _repeat_kv(v, n_heads // n_kv)
+    # (B, H, N, dh)
+    q, k, v = (t.swapaxes(-3, -2) for t in (q, k, v))
+    scale = d_head ** -0.5
+
+    if n <= kv_block:
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+        scores = scores + _mask(n, n, 0, causal, window)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    else:
+        out = _blockwise_attention(q, k, v, scale, causal, window, kv_block)
+    out = out.swapaxes(-3, -2).reshape(b, n, n_heads * d_head)
+    return out @ p["w_o"].astype(out.dtype)
+
+
+def _mask(nq: int, nk: int, k_start: int, causal: bool,
+          window: int | None) -> jax.Array:
+    qpos = jnp.arange(nq)[:, None]
+    kpos = (k_start + jnp.arange(nk))[None, :]
+    m = jnp.zeros((nq, nk), jnp.float32)
+    if causal:
+        m = jnp.where(kpos > qpos, -jnp.inf, m)
+    if window is not None:
+        m = jnp.where(kpos < qpos - window + 1, -jnp.inf, m)
+    return m
+
+
+def _blockwise_attention(q, k, v, scale, causal, window, kv_block):
+    """Online-softmax over KV chunks (flash-attention recurrence in JAX)."""
+    b, h, n, dh = q.shape
+    n_blocks = n // kv_block
+    k_blocks = k.reshape(b, h, n_blocks, kv_block, dh).transpose(2, 0, 1, 3, 4)
+    v_blocks = v.reshape(b, h, n_blocks, kv_block, dh).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, blk):
+        m_run, l_run, acc = carry
+        kb, vb, idx = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kb).astype(jnp.float32) * scale
+        s = s + _mask_dyn(n, kv_block, idx * kv_block, causal, window)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, h, n), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, n), jnp.float32),
+            jnp.zeros((b, h, n, dh), jnp.float32))
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, init, (k_blocks, v_blocks, jnp.arange(n_blocks)))
+    return (acc / jnp.maximum(l_f, 1e-30)[..., None]).astype(q.dtype)
+
+
+def _mask_dyn(nq, nk, k_start, causal, window):
+    qpos = jnp.arange(nq)[:, None]
+    kpos = (k_start + jnp.arange(nk))[None, :]
+    m = jnp.zeros((nq, nk), jnp.float32)
+    if causal:
+        m = jnp.where(kpos > qpos, -jnp.inf, m)
+    if window is not None:
+        m = jnp.where(kpos < qpos - window + 1, -jnp.inf, m)
+    return m
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, S, KV, dh)
+    v: jax.Array      # (B, S, KV, dh)
+
+
+def kv_cache_init(b: int, s: int, n_kv: int, d_head: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(k=jnp.zeros((b, s, n_kv, d_head), dtype),
+                   v=jnp.zeros((b, s, n_kv, d_head), dtype))
+
+
+def attention_dense_decode(
+    p: Params, x_t: jax.Array, cache: KVCache, pos: jax.Array, *,
+    n_heads: int, n_kv: int, d_head: int, window: int | None = None,
+    qk_norm: bool = False, rope_theta: float = 1e4,
+    masked_cache_update: bool = True,
+) -> tuple[jax.Array, KVCache]:
+    """One-token GQA decode. x_t: (B, D); pos: scalar current position.
+
+    masked_cache_update=True writes the new K/V via an arithmetic one-hot
+    merge instead of dynamic_update_slice: elementwise on the (possibly
+    sequence-sharded) cache, so SPMD never reshards/all-gathers it — the
+    DUS form triggers XLA's "involuntary full rematerialization" of the
+    whole cache per token when S is the sharded dim (§Perf cell A).
+    """
+    b, _ = x_t.shape
+    s_len = cache.k.shape[1]
+    q, k, v = _project_qkv(p, x_t[:, None, :], n_heads, n_kv, d_head)
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    sin, cos = rope_angles(pos[None], d_head, rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    if masked_cache_update:
+        hit = (jnp.arange(s_len) == pos)[None, :, None, None]
+        new_k = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
+        new_v = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
+    else:
+        new_k = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, pos, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0))
+    # Grouped-query scores WITHOUT materializing the repeated cache:
+    # repeating KV to H heads broadcasts a (B,S,H,dh) tensor whose head dim
+    # must align with the model-sharded Q — SPMD then replicates the whole
+    # cache per token (208 GB/step on mistral decode_32k, §Perf cell A).
+    # Grouping Q as (B, KV, rep, dh) keeps the cache S-sharded; only Q
+    # (a few MB) moves.
+    rep = n_heads // n_kv
+    qg = q[:, 0, :, :].reshape(b, n_kv, rep, d_head)         # (B,KV,rep,dh)
+    scores = jnp.einsum("bgrd,bsgd->bgrs", qg, new_k).astype(jnp.float32)
+    scores = scores * (d_head ** -0.5)
+    kpos = jnp.arange(s_len)[None, None, None, :]
+    valid = kpos <= pos
+    if window is not None:
+        valid = valid & (kpos > pos - window)
+    scores = jnp.where(valid, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrs,bsgd->bgrd", probs, new_v)        # (B,KV,rep,dh)
+    out = out.reshape(b, n_heads * d_head)
+    return out @ p["w_o"].astype(out.dtype), KVCache(new_k, new_v)
+
+
+# ----------------------------------------------------------------- SDSA
+def attention_sdsa(
+    p: Params, s: jax.Array, *, n_heads: int, n_kv: int, d_head: int,
+    lif_cfg: LIFConfig, mode: str = "or", causal: bool = True,
+) -> jax.Array:
+    """Spike-driven self-attention over a spike sequence.
+
+    s: (T, B, N, D) binary. Q/K/V drives are fired through LIF (binary),
+    then: status[i] = cumOR_{j<=i} over tokens and micro-steps of K AND V;
+    out = Q AND status (paper Fig. 6, causal form for LMs). Cost O(N),
+    decode state O(d). GQA grouping applies to K/V spikes as in dense.
+    """
+    q, k, v = _project_qkv(p, s, n_heads, n_kv, d_head)
+    q, k, v = (lif_fire(t, lif_cfg) for t in (q, k, v))
+    k = _repeat_kv(k, n_heads // n_kv)
+    v = _repeat_kv(v, n_heads // n_kv)
+    kv = k * v                                   # AND     (T,B,N,H,dh)
+    if mode == "or":
+        phase = jnp.max(kv, axis=0)              # OR over micro-steps
+        status = jax.lax.cummax(phase, axis=1) if causal \
+            else jnp.max(phase, axis=1, keepdims=True)
+    else:
+        phase = jnp.sum(kv, axis=0)
+        status = jnp.cumsum(phase, axis=1) if causal \
+            else jnp.sum(phase, axis=1, keepdims=True)
+    out = q * status[None]                       # AND / weighted
+    if mode == "sum":
+        out = lif_fire(out, lif_cfg)             # FPE re-binarization
+    t, b, n = s.shape[0], s.shape[1], s.shape[2]
+    out = out.reshape(t, b, n, n_heads * d_head)
+    return out @ p["w_o"].astype(out.dtype)
+
+
+class SDSAState(NamedTuple):
+    status: jax.Array   # (B, H, dh) running OR/sum over all past events
+
+
+def sdsa_state_init(b: int, n_heads: int, d_head: int,
+                    dtype=jnp.bfloat16) -> SDSAState:
+    return SDSAState(status=jnp.zeros((b, n_heads, d_head), dtype))
+
+
+def attention_sdsa_decode(
+    p: Params, s_t: jax.Array, state: SDSAState, *, n_heads: int, n_kv: int,
+    d_head: int, lif_cfg: LIFConfig, mode: str = "or",
+) -> tuple[jax.Array, SDSAState]:
+    """One-token SDSA decode. s_t: (T, B, D) spikes for the new token.
+
+    Folds the token's K/V spike phases into the O(d) status (the on-the-fly
+    OR of Sec. III-C), then attends Q — exactly the streaming form of
+    `attention_sdsa` (property-tested equal).
+    """
+    q, k, v = _project_qkv(p, s_t, n_heads, n_kv, d_head)   # (T,B,heads,dh)
+    q, k, v = (lif_fire(t, lif_cfg) for t in (q, k, v))
+    k = _repeat_kv(k, n_heads // n_kv)
+    v = _repeat_kv(v, n_heads // n_kv)
+    kv = k * v
+    phase = jnp.max(kv, axis=0) if mode == "or" else jnp.sum(kv, axis=0)
+    status = jnp.maximum(state.status, phase.astype(state.status.dtype)) \
+        if mode == "or" else state.status + phase.astype(state.status.dtype)
+    out = q * status[None].astype(q.dtype)
+    if mode == "sum":
+        out = lif_fire(out, lif_cfg)
+    t, b = s_t.shape[0], s_t.shape[1]
+    out = out.reshape(t, b, n_heads * d_head)
+    return out @ p["w_o"].astype(out.dtype), SDSAState(status)

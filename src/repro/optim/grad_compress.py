@@ -1,0 +1,52 @@
+"""Error-feedback int8 gradient compression (distributed-optimization trick).
+
+At 1000-node scale the data-parallel gradient all-reduce dominates the
+collective term for dense archs. We quantize per-leaf gradients to int8
+with a per-leaf scale and carry the quantization error into the next step
+(error feedback, à la 1-bit Adam / EF-SGD), so convergence is preserved.
+Wire format is int8-valued numbers carried in bf16 (exact summation for
+<= 256 data shards), halving all-reduce bytes vs f32 — the HLO collective
+bytes in the dry-run shrink accordingly when enabled.
+
+The transform is pure: state (error buffers) lives alongside the optimizer
+state; compress() is applied to the microbatch-mean gradient *before* the
+cross-data-shard mean (under GSPMD the subsequent psum happens in the
+compressed dtype).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    error: Any   # residual tree, same structure as grads
+
+
+def init(params: Any) -> EFState:
+    return EFState(error=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.bfloat16), params))
+
+
+def compress(grads: Any, ef: EFState) -> Tuple[Any, Any, EFState]:
+    """Returns (wire_grads_bf16_int8valued, scales, new_ef)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127)
+        err = g32 - q * scale
+        return q.astype(jnp.bfloat16), scale, err.astype(jnp.bfloat16)
+
+    out = jax.tree.map(one, grads, ef.error)
+    is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+    wire = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    scales = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_err = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return wire, scales, EFState(error=new_err)
+
+
+def decompress(wire: Any, scales: Any) -> Any:
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, wire, scales)

@@ -1,0 +1,3 @@
+"""Distributed runtime: sharding rules, elastic restart, stragglers."""
+from . import elastic, sharding, straggler
+__all__ = ["elastic", "sharding", "straggler"]

@@ -1,0 +1,54 @@
+"""Elastic scaling: restart onto a different mesh after node failure.
+
+The checkpoint stores logical (unsharded) values; `reshard_restore` builds
+shardings for the *new* mesh and loads into it, and the data pipeline
+resumes from its step counter with the new shard count. `shrunk_mesh`
+computes the largest valid mesh after removing failed hosts: the `model`
+axis is preserved (param TP divisibility), the `data`/`pod` axes shrink —
+so the global batch per step is preserved by raising grad-accumulation
+microbatches instead (returned as part of the plan).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import LMConfig
+from . import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    microbatch_scale: int      # multiply cfg.microbatches by this
+
+
+def shrunk_mesh(old_shape: Tuple[int, ...], axis_names: Tuple[str, ...],
+                n_failed_data_groups: int) -> ElasticPlan:
+    """Drop `n_failed_data_groups` rows from the data axis; keep model."""
+    shape = list(old_shape)
+    data_idx = axis_names.index("data")
+    old_data = shape[data_idx]
+    new_data = old_data - n_failed_data_groups
+    # keep data axis a power-of-two divisor of the old (batch divisibility)
+    while new_data > 1 and old_data % new_data:
+        new_data -= 1
+    if new_data < 1:
+        raise RuntimeError("no healthy data groups left")
+    shape[data_idx] = new_data
+    return ElasticPlan(tuple(shape), axis_names,
+                       microbatch_scale=old_data // new_data)
+
+
+def reshard_restore(cfg: LMConfig, mgr: CheckpointManager,
+                    abstract_tree: Any, new_mesh: Mesh,
+                    ) -> Tuple[Optional[int], Any]:
+    """Restore the latest checkpoint onto `new_mesh` (different topology OK)."""
+    specs = sharding.param_specs(cfg, abstract_tree, new_mesh)
+    shardings = sharding.named(new_mesh, specs)
+    return mgr.restore_latest(abstract_tree, shardings)

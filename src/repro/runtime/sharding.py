@@ -1,0 +1,287 @@
+"""Sharding rules: param-tree paths / state structures -> PartitionSpecs.
+
+Policy (DESIGN.md §5):
+  * tensor-parallel over `model`: vocab, d_ff, flattened head dims, experts
+    (EP when n_experts divides the axis, else TP inside experts);
+  * batch over (`pod`, `data`) — as many of those axes as divide B;
+  * FSDP (cfg.fsdp): the non-TP matrix dim of params & optimizer moments is
+    additionally sharded over `data` (ZeRO-3 analogue; GSPMD inserts the
+    all-gathers);
+  * KV caches: kv-heads over `model` when divisible, else sequence over
+    `model`; SDSA statuses: heads over `model`;
+  * block params carry a leading layer-group axis (scan stacking) — specs
+    get a None prefix.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import LMConfig
+
+
+# ------------------------------------------------------------ mesh helpers
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def batch_axes(mesh: Mesh, b: int, include_model: bool = False
+               ) -> Tuple[str, ...]:
+    """Largest prefix of ('pod','data'[,'model']) whose product divides b.
+
+    include_model=True is the pure-FSDP regime: no tensor parallelism, the
+    whole mesh is data-parallel (small-model training)."""
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    axes = [a for a in names if a in mesh.shape]
+    out, prod = [], 1
+    for a in axes:
+        if b % (prod * mesh.shape[a]) == 0:
+            out.append(a)
+            prod *= mesh.shape[a]
+    return tuple(out)
+
+
+def _bspec(mesh: Mesh, b: int):
+    ax = batch_axes(mesh, b)
+    return ax if ax else None
+
+
+# ------------------------------------------------------------ param specs
+_COL_NAMES = {"w_q", "w_k", "w_v", "w_gate", "w_up", "in_proj", "dt_proj",
+              "frontend_proj", "w_i", "w_f", "w_z", "lm_head"}
+_ROW_NAMES = {"w_o", "w_down", "out_proj", "x_proj", "w_out"}
+
+
+def tp_axes(cfg: LMConfig, mesh: Mesh):
+    """Tensor-parallel mesh axes: ('model',) normally; (data, model) for
+    the tp2d serving regime (weights resident, no per-step FSDP gather)."""
+    if getattr(cfg, "tp2d", False):
+        return tuple(a for a in ("data", "model") if a in mesh.shape)
+    return ("model",)
+
+
+def _param_rule(path: Tuple[str, ...], shape: Tuple[int, ...],
+                cfg: LMConfig, mesh: Mesh) -> P:
+    tp = tp_axes(cfg, mesh)
+    m = int(np.prod([mesh.shape[a] for a in tp]))
+    tp_spec = tp if len(tp) > 1 else tp[0]
+    fsdp = "data" if (cfg.fsdp and "data" in mesh.shape
+                      and not getattr(cfg, "tp2d", False)) else None
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    in_blocks = "blocks" in path
+
+    def wrap(*spec):
+        if in_blocks:
+            return P(None, *spec)
+        return P(*spec)
+
+    core = shape[1:] if in_blocks else shape
+    m1 = model_size(mesh)   # single-axis fallback when 2D doesn't divide
+
+    if getattr(cfg, "pure_fsdp", False):
+        # ZeRO-3: no TP — shard ONE (largest divisible) dim of every matrix
+        # over the full (data x model) mesh purely for storage; GSPMD
+        # gathers weights per layer because activations are batch-sharded
+        # over the whole mesh.
+        axes_all = tuple(a for a in ("data", "model") if a in mesh.shape)
+        import numpy as _np
+        n_all = int(_np.prod([mesh.shape[a] for a in axes_all]))
+        if len(core) >= 2:
+            order = sorted(range(len(core)), key=lambda i: -core[i])
+            for nshards, ax in ((n_all, axes_all), (m1, "model")):
+                for i in order:
+                    if core[i] % nshards == 0:
+                        return wrap(*[ax if j == i else None
+                                      for j in range(len(core))])
+        return wrap(*([None] * len(core)))
+
+    def tp_for(dim: int):
+        """Largest of (2D tp axes, model-only, nothing) dividing `dim`."""
+        if dim % m == 0:
+            return tp_spec
+        if dim % m1 == 0:
+            return "model"
+        return None
+
+    if name == "embed":
+        v_ax = tp_for(shape[0])
+        if v_ax is not None:
+            return P(v_ax, fsdp)                     # vocab-sharded table
+        return P(None, tp_for(shape[1]) or fsdp)     # odd vocab (whisper)
+    if name == "lm_head":
+        v_ax = tp_for(shape[1])
+        if v_ax is not None:
+            return P(fsdp, v_ax)
+        return P(tp_for(shape[0]) or fsdp, None)
+    if name in ("r_i", "r_f", "r_z", "r_o"):         # tiny per-head recurrences
+        return wrap(*([None] * len(core)))
+    if len(core) == 3 and name in ("w_gate", "w_up", "w_down"):
+        e = core[0]
+        e_ax = tp_for(e)
+        # (pjit in_shardings require even splits, so uneven expert counts
+        # must be padded at the model level — MoESpec.pad_experts_to.)
+        if e_ax is not None:                         # expert parallelism
+            return wrap(e_ax, fsdp, None) if name != "w_down" \
+                else wrap(e_ax, None, fsdp)
+        # TP inside experts (mixtral 8e on 16-way model)
+        if name == "w_down":
+            return wrap(None, tp_for(core[1]), fsdp)
+        return wrap(None, fsdp, tp_for(core[2]))
+    if name in ("w_i", "w_f") and len(core) == 2 and core[1] <= 128:
+        return wrap(None, None)                      # mLSTM gate vectors
+    if name in _COL_NAMES and len(core) == 2:
+        ax = tp_for(core[1])
+        if ax is None:
+            return wrap(fsdp, None)
+        return wrap(fsdp, ax)
+    if name in _ROW_NAMES and len(core) == 2:
+        ax = tp_for(core[0])
+        if ax is None:
+            return wrap(None, fsdp)
+        return wrap(ax, fsdp)
+    if name == "conv_w":
+        return wrap(None, tp_for(core[1]))
+    if name == "a_log":
+        return wrap(tp_for(core[0]), None)
+    if name == "d_skip":
+        return wrap(tp_for(core[0]))
+    # norms, router, everything else: replicate (tiny)
+    return wrap(*([None] * len(core)))
+
+
+def _path_str(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def param_specs(cfg: LMConfig, abstract_params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching the param tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    specs = []
+    for path, leaf in flat:
+        rule_path = tuple(x for x in _path_str(path) if not x.isdigit())
+        spec = _param_rule(
+            rule_path if rule_path else ("param",), leaf.shape, cfg, mesh)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ------------------------------------------------------------- batch specs
+def batch_specs(cfg: LMConfig, batch: Dict[str, Any], mesh: Mesh) -> Dict:
+    out = {}
+    include_model = getattr(cfg, "pure_fsdp", False)
+    for k, v in batch.items():
+        b = v.shape[0]
+        bs = batch_axes(mesh, b, include_model=include_model) or None
+        out[k] = P(bs, *([None] * (v.ndim - 1)))
+    return out
+
+
+# ------------------------------------------------------------- state specs
+def decode_state_specs(cfg: LMConfig, state: Any, mesh: Mesh) -> Any:
+    """Specs for the (list of LayerState) decode state, built structurally
+    from the LayerState fields (no shape guessing)."""
+    from repro.models.lm import LayerState
+    m = model_size(mesh)
+    tp2d = getattr(cfg, "tp2d", False)
+    tp = tp_axes(cfg, mesh)
+    m2 = int(np.prod([mesh.shape[a] for a in tp]))
+
+    def kv_cache_spec(x):            # (G, B, S, KV, dh)
+        _, b, s_len, kv, _ = x.shape
+        if tp2d:
+            # weights own the data axis: keep B unsharded, spread the
+            # sequence over every TP axis (cache slice stays local)
+            if s_len % m2 == 0:
+                return P(None, None, tp if len(tp) > 1 else tp[0],
+                         None, None)
+            return P(None, None, "model" if s_len % m == 0 else None,
+                     None, None)
+        bs = _bspec(mesh, b)
+        if kv % m == 0:
+            return P(None, bs, None, "model", None)
+        if s_len % m == 0:
+            return P(None, bs, "model", None, None)
+        return P(None, bs, None, None, None)
+
+    def bs_of(b):
+        return None if tp2d else _bspec(mesh, b)
+
+    def status_spec(x):              # (G, B, H, dh)
+        _, b, h, _ = x.shape
+        return P(None, bs_of(b), "model" if h % m == 0 else None, None)
+
+    def dim2_model_spec(x):          # shard dim 2 over model if divisible
+        rest = [None] * (x.ndim - 3)
+        d2 = "model" if x.shape[2] % m == 0 else None
+        return P(None, bs_of(x.shape[1]), d2, *rest)
+
+    def dim3_model_spec(x):          # shard last dim over model if divisible
+        mid = [None] * (x.ndim - 3)
+        dl = "model" if x.shape[-1] % m == 0 else None
+        return P(None, bs_of(x.shape[1]), *mid, dl)
+
+    def batch_only_spec(x):
+        return P(None, bs_of(x.shape[1]), *([None] * (x.ndim - 2)))
+
+    def one(st: Any) -> Any:
+        f = {}
+        f["kv"] = jax.tree.map(kv_cache_spec, st.kv)
+        f["sdsa"] = jax.tree.map(status_spec, st.sdsa)
+        f["mamba"] = None
+        if st.mamba is not None:
+            f["mamba"] = type(st.mamba)(
+                h=dim2_model_spec(st.mamba.h),
+                conv=dim3_model_spec(st.mamba.conv))
+        f["mlstm"] = jax.tree.map(batch_only_spec, st.mlstm)
+        f["slstm"] = None
+        if st.slstm is not None:
+            f["slstm"] = jax.tree.map(dim2_model_spec, st.slstm)
+        f["cross_kv"] = jax.tree.map(kv_cache_spec, st.cross_kv)
+        f["cross_status"] = jax.tree.map(status_spec, st.cross_status)
+        return LayerState(**f)
+
+    return [one(st) for st in state]
+
+
+# ---------------------------------------------------------------- helpers
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def validate_specs(abstract_tree: Any, spec_tree: Any, mesh: Mesh) -> list:
+    """Check every sharded dim is splittable (jax pads uneven shards, so
+    only dim < n_shards is fatal); returns list of problems."""
+    problems = []
+    flat_a = jax.tree_util.tree_flatten_with_path(abstract_tree)[0]
+    flat_s = jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, P))
+    for (path, leaf), spec in zip(flat_a, flat_s):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if leaf.shape[dim] < size:
+                problems.append(
+                    (_path_str(path), leaf.shape, dim, ax, size))
+    return problems

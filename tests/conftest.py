@@ -1,0 +1,10 @@
+import os
+
+# Tests must see the single real CPU device (the dry-run sets its own
+# device-count flag in its own process; never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

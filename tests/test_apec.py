@@ -1,0 +1,83 @@
+"""APEC properties (Sec. III-A2): exactness for any spike tensor, Eq. 1-4."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import apec
+
+
+def _spike_tensor(seed, p_positions, channels, density):
+    key = jax.random.PRNGKey(seed)
+    return (jax.random.uniform(key, (p_positions, channels))
+            < density).astype(jnp.float32)
+
+
+@given(seed=st.integers(0, 2**16), g=st.sampled_from([2, 4, 8]),
+       density=st.floats(0.05, 0.95))
+def test_apec_matmul_exact(seed, g, density):
+    """Eq. 1 decomposition preserves the accumulation exactly — the paper's
+    central correctness claim ('APEC preserves numerical equivalence')."""
+    s = _spike_tensor(seed, 16, 24, density)
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (24, 12))
+    np.testing.assert_allclose(apec.apec_matmul(s, w, g), s @ w,
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 2**16), g=st.sampled_from([2, 4]))
+def test_apec_decompose_disjoint_and_reconstructs(seed, g):
+    s = _spike_tensor(seed, 8, 32, 0.4)
+    overlap, residual = apec.apec_decompose(s, g)
+    # overlap AND residual_i == 0 (disjointness, Fig. 5)
+    assert float(jnp.sum(overlap[..., None, :] * residual)) == 0.0
+    np.testing.assert_array_equal(apec.apec_reconstruct(overlap, residual), s)
+
+
+@given(seed=st.integers(0, 2**16))
+def test_apec_eliminated_events_eq2(seed):
+    """dN = (g-1)|O_G| and events_after + dN == events_before."""
+    g = 2
+    s = _spike_tensor(seed, 32, 16, 0.5)
+    stats = apec.apec_stats(s, g)
+    assert float(stats.events_before) == float(
+        stats.events_after + stats.eliminated)
+    overlap, _ = apec.apec_decompose(s, g)
+    assert float(stats.eliminated) == (g - 1) * float(jnp.sum(overlap))
+
+
+def test_apec_eq3_accumulation_savings():
+    # Paper's concrete Fig. 5 example: 14 -> 8 events, 3x3 conv, 64 channels
+    # eliminates 6*64*9 = 3456 accumulations.
+    s1 = jnp.zeros((2, 16)).at[0, :10].set(1.0).at[1, 2:12].set(1.0)
+    stats = apec.apec_stats(s1, 2)
+    assert float(stats.events_before) == 20.0
+    overlap = float(jnp.sum(jnp.min(s1.reshape(1, 2, 16), axis=1)))
+    assert float(stats.eliminated) == overlap
+    savings = stats.accum_savings(co=64, k=3)
+    assert float(savings) == overlap * 64 * 9
+
+
+def test_apec_overlap_decays_with_group_size():
+    """|O_G| shrinks with g (the paper's inset observation) for smooth maps."""
+    key = jax.random.PRNGKey(0)
+    base = (jax.random.uniform(key, (128, 1, 64)) < 0.5)
+    # spatially correlated spikes: adjacent positions share base pattern
+    s = jnp.repeat(base, 8, axis=1).reshape(1024, 64).astype(jnp.float32)
+    noise = (jax.random.uniform(jax.random.PRNGKey(1), s.shape) < 0.1)
+    s = jnp.clip(s + noise, 0, 1)
+    o2 = float(apec.apec_stats(s, 2).overlap_mean)
+    o4 = float(apec.apec_stats(s, 4).overlap_mean)
+    o8 = float(apec.apec_stats(s, 8).overlap_mean)
+    assert o2 >= o4 >= o8
+
+
+def test_apec_overhead_eq4():
+    assert apec.apec_overhead_bits(64, 3, 16) == 64 * 9 * 16
+
+
+def test_apec_spatial_grouping():
+    s = (jax.random.uniform(jax.random.PRNGKey(2), (2, 4, 8, 16))
+         < 0.3).astype(jnp.float32)
+    overlap, residual = apec.apec_spatial(s, 2)
+    assert overlap.shape == (2, 4, 4, 16)
+    assert residual.shape == (2, 4, 4, 2, 16)

@@ -1,0 +1,130 @@
+"""Core dataflow optimizations: OPT1/OPT2/OPT3 + LIF + events (Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import direct_coding as dc
+from repro.core import eafc, econv, events, lif, spikes
+
+
+def _spikes(key, shape, p=0.2):
+    return (jax.random.uniform(key, shape) < p).astype(jnp.float32)
+
+
+# ------------------------------------------------------------------- OPT2
+@pytest.mark.parametrize("hw,ci,co,k", [(8, 16, 24, 3), (6, 8, 32, 3),
+                                        (10, 4, 8, 5)])
+def test_econv_scatter_equals_tconv(hw, ci, co, k):
+    s = _spikes(jax.random.PRNGKey(0), (2, hw, hw, ci))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, k, ci, co))
+    ref = econv.tconv(s, w)
+    ev = econv.econv_scatter(s, w)
+    np.testing.assert_allclose(ev, ref, atol=1e-5)
+
+
+def test_econv_event_cost_scales_with_sparsity():
+    co, k = 64, 3
+    dense = _spikes(jax.random.PRNGKey(0), (1, 16, 16, 32), p=0.9)
+    sparse = _spikes(jax.random.PRNGKey(1), (1, 16, 16, 32), p=0.1)
+    assert econv.event_ops(sparse, co, k) < econv.event_ops(dense, co, k)
+    # TConv cost is sparsity-independent (Fig. 1c)
+    assert econv.tconv_ops(16, 16, 32, co, k) == 16 * 16 * 9 * 32 * co
+
+
+# ------------------------------------------------------------------- OPT3
+@pytest.mark.parametrize("pool", [2, 4])
+def test_eafc_equals_avgpool_fc(pool):
+    s = _spikes(jax.random.PRNGKey(2), (3, 8, 8, 16))
+    w = jax.random.normal(jax.random.PRNGKey(3),
+                          ((8 // pool) ** 2 * 16, 10))
+    np.testing.assert_allclose(eafc.eafc(s, w, pool),
+                               eafc.avgpool_fc_ref(s, w, pool),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_eafc_weight_scaling():
+    w = jnp.ones((4, 4))
+    np.testing.assert_allclose(eafc.scale_fc_weights(w, 4), w / 16.0)
+
+
+# ------------------------------------------------------------------- OPT1
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_direct_coding_matmul_exact(bits):
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, 32))
+    w = jax.random.normal(jax.random.PRNGKey(5), (32, 16))
+    ref = dc.reference_quantized_matmul(x, w, bits)
+    ev = dc.direct_coded_matmul(x, w, bits)
+    np.testing.assert_allclose(ev, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_direct_coding_conv_exact():
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 8, 8, 3))
+    w = jax.random.normal(jax.random.PRNGKey(7), (3, 3, 3, 8))
+    ref = dc.reference_quantized_conv(x, w, 8)
+    ev = dc.direct_coded_conv(x, w, 8)
+    np.testing.assert_allclose(ev, ref, atol=1e-3, rtol=1e-3)
+
+
+def test_bit_slice_planes_are_binary():
+    q, _ = dc.quantize(jax.random.normal(jax.random.PRNGKey(8), (16,)), 8)
+    planes = dc.bit_slice(q, 8)
+    assert planes.shape == (8, 16)
+    assert bool(jnp.all((planes == 0) | (planes == 1)))
+
+
+# -------------------------------------------------------------------- LIF
+def test_lif_spikes_binary_and_membrane_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(9), (16, 4, 32)) * 3
+    s = lif.lif_scan(x)
+    assert bool(jnp.all((s == 0) | (s == 1)))
+    # soft reset with decay<1 keeps membrane geometrically bounded:
+    # |v| <= max|x| / (1 - decay) + v_th
+    cfg = lif.LIFConfig()
+    bound = float(jnp.max(jnp.abs(x))) / (1 - cfg.decay) + cfg.v_th
+    v = jnp.zeros((4, 32))
+    for t in range(16):
+        v, _ = lif.lif_step(v, x[t], cfg)
+        assert bool(jnp.all(jnp.abs(v) <= bound))
+
+
+def test_lif_never_fires_below_threshold():
+    x = jnp.full((8, 2, 16), 0.4)   # geometric sum 0.4/(1-0.5) = 0.8 < 1.0
+    s = lif.lif_scan(x)
+    assert float(jnp.sum(s)) == 0.0
+
+
+def test_lif_surrogate_gradient_nonzero():
+    def f(x):
+        return jnp.sum(lif.lif_scan(x))
+    g = jax.grad(f)(jnp.full((4, 2, 8), 0.9))
+    assert float(jnp.sum(jnp.abs(g))) > 0.0
+
+
+# ------------------------------------------------------------------ events
+def test_fast_event_filter_orders_lowest_first():
+    out = events.fast_event_filter(jnp.uint32(0b10110))
+    assert list(out[:3]) == [1, 2, 4]
+    assert int(out[3]) == -1
+
+
+def test_event_stream_roundtrip():
+    s = _spikes(jax.random.PRNGKey(10), (4, 4, 8), p=0.3)
+    stream = events.to_event_stream(s, max_events=int(4 * 4 * 8))
+    n = int(jnp.sum(s))
+    assert int(jnp.sum(stream.valid)) == n
+
+
+def test_word_event_counts_match_dense_sum():
+    s = _spikes(jax.random.PRNGKey(11), (4, 64), p=0.5)
+    assert int(jnp.sum(events.word_event_counts(s))) == int(jnp.sum(s))
+
+
+# ----------------------------------------------------------------- spikes
+def test_tile_occupancy():
+    s = jnp.zeros((8, 256))
+    s = s.at[0, 0].set(1.0)
+    occ = spikes.tile_occupancy(s, 8, 128)
+    assert occ.shape == (1, 2)
+    assert int(occ[0, 0]) == 1 and int(occ[0, 1]) == 0
+    assert float(spikes.occupancy_fraction(s, 8, 128)) == 0.5
