@@ -1,0 +1,63 @@
+"""Registry sweep: wall time of every (op x backend) pair on this host.
+
+Rows: ``backend/<op>/<backend>,us_per_call,...`` — the measured (not
+asserted) side of the dispatch registry. New kernels show up here the
+moment they register, exactly like they show up in the parity harness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import dispatch
+from .common import csv_row, time_fn
+
+# Larger-than-parity shapes so per-call time is signal, not overhead.
+_BENCH_SHAPES = {
+    "lif_scan": lambda key: ((jax.random.normal(key, (8, 64, 256)) * 2,), {}),
+    "spike_matmul": lambda key: (
+        ((jax.random.uniform(key, (256, 512)) < 0.1).astype("float32"),
+         jax.random.normal(jax.random.PRNGKey(1), (512, 256), "float32")), {}),
+    "apec_matmul": lambda key: (
+        ((jax.random.uniform(key, (256, 256)) < 0.3).astype("float32"),
+         jax.random.normal(jax.random.PRNGKey(1), (256, 128), "float32")),
+        {"g": 2}),
+    "sdsa": lambda key: (
+        tuple((jax.random.uniform(k, (8, 128, 64)) < 0.3).astype("float32")
+              for k in jax.random.split(key, 3)), {"mode": "or"}),
+    "econv": lambda key: (
+        ((jax.random.uniform(key, (4, 32, 32, 16)) < 0.15).astype("float32"),
+         jax.random.normal(jax.random.PRNGKey(1), (3, 3, 16, 32), "float32")),
+        {}),
+}
+
+
+def run() -> list[str]:
+    rows = []
+    platform = jax.default_backend()
+    for op in dispatch.op_names():
+        make = _BENCH_SHAPES.get(op)
+        if make is None:
+            args, kwargs = dispatch.example_inputs(op, jax.random.PRNGKey(0))
+        else:
+            args, kwargs = make(jax.random.PRNGKey(0))
+        for be in dispatch.backend_names(op):
+            backend = dispatch.get_backend(op, be)
+            if platform not in backend.platforms:
+                continue
+            if backend.supports is not None \
+                    and backend.supports(*args, **kwargs) is not None:
+                continue
+            # kwargs (g, mode, ...) are Python-level statics: close over them
+            fn = jax.jit(functools.partial(backend.fn, **kwargs))
+            t = time_fn(fn, *args)
+            rows.append(csv_row(
+                f"backend/{op}/{be}", t * 1e6,
+                f"platform={platform};"
+                f"default={dispatch.resolve_name(op, *args, **kwargs)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

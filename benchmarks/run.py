@@ -3,18 +3,38 @@
 ``PYTHONPATH=src python -m benchmarks.run`` prints
 ``name,us_per_call,derived`` CSV covering Fig. 2 / Fig. 7 / Fig. 8 /
 Table I / Table II / Fig. 9 plus the roofline summary (if dry-run
-artifacts exist under results/dryrun/).
+artifacts exist under results/dryrun/) and the kernel-backend sweep.
+
+Backend sweeps (speedups are measured, not asserted):
+
+    # the registry sweep under two kernel routings, same CSV schema
+    python -m benchmarks.run --only backends --backend ref --backend \\
+        sdsa=pallas-interpret,ref
+
+Each ``--backend`` value uses the EXSPIKE_BACKEND grammar (a backend name
+for all ops, or comma-separated ``op=backend`` entries) and reruns the
+selected suites with that routing; rows are prefixed ``<override>/``.
+Only suites that route through the dispatch registry respond to the
+override — ``backends`` (every registered pair) and the model-driven
+suites whose spike collection runs registry ops; the paper-figure suites
+that time fixed formulations against each other (fig2's tconv-vs-scatter
+anchor, the cost-model tables) print identical numbers under any
+override, by design.
 """
 from __future__ import annotations
 
+import argparse
+import contextlib
+import os
 import sys
 import traceback
 
 
-def main() -> None:
+def _suites():
     from . import (fig2_econv_vs_tconv, fig7_apec, fig8_breakdown, fig9_cpu,
-                   roofline, table1_resources, table2_throughput)
-    suites = [
+                   kernel_backends, roofline, table1_resources,
+                   table2_throughput)
+    return [
         ("fig2", fig2_econv_vs_tconv.run),
         ("fig7", fig7_apec.run),
         ("fig8", fig8_breakdown.run),
@@ -22,17 +42,59 @@ def main() -> None:
         ("table2", table2_throughput.run),
         ("fig9", fig9_cpu.run),
         ("roofline", roofline.run),
+        ("backends", kernel_backends.run),
     ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of suite names to run (default: all)")
+    ap.add_argument("--backend", action="append", default=None,
+                    help="EXSPIKE_BACKEND override to sweep; repeatable. "
+                         "Each value reruns the suites under that routing.")
+    args = ap.parse_args()
+
+    suites = _suites()
+    if args.only:
+        wanted = {s.strip() for s in args.only.split(",")}
+        unknown = wanted - {name for name, _ in suites}
+        if unknown:
+            raise SystemExit(f"unknown suites: {sorted(unknown)}")
+        suites = [(n, f) for n, f in suites if n in wanted]
+
+    from repro.kernels import dispatch
+
+    @contextlib.contextmanager
+    def _env_override(value):
+        old = os.environ.get(dispatch.ENV_VAR)
+        if value is not None:
+            os.environ[dispatch.ENV_VAR] = value
+        try:
+            yield
+        finally:
+            if value is not None:
+                if old is None:
+                    os.environ.pop(dispatch.ENV_VAR, None)
+                else:
+                    os.environ[dispatch.ENV_VAR] = old
+
+    sweeps = [(None, "")] if not args.backend \
+        else [(ov, f"{ov}/") for ov in args.backend]
+
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn in suites:
-        try:
-            for row in fn():
-                print(row, flush=True)
-        except Exception as e:
-            failures += 1
-            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
-            traceback.print_exc(file=sys.stderr)
+    for override, prefix in sweeps:
+        with _env_override(override):
+            for name, fn in suites:
+                try:
+                    for row in fn():
+                        print(prefix + row, flush=True)
+                except Exception as e:
+                    failures += 1
+                    print(f"{prefix}{name}/ERROR,0.0,"
+                          f"{type(e).__name__}:{e}", flush=True)
+                    traceback.print_exc(file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

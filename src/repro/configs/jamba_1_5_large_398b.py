@@ -12,7 +12,11 @@ CONFIG = LMConfig(
     fsdp=True, microbatches=8, opt_state_dtype="bfloat16",
 )
 
+# One shortened period still covers every block kind (mamba + attn, and
+# moe_every=2 puts a dense ffn on one and MoE on the other) at a quarter
+# of the distinct-block compile cost of period=8.
 REDUCED = CONFIG.replace(
-    n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, vocab=512,
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, vocab=512,
     moe=MoESpec(n_experts=4, top_k=2, d_ff_expert=32, moe_every=2),
+    hybrid=HybridSpec(period=2, attn_index=1),
     fsdp=False, microbatches=1, remat="none", loss_chunk=16)

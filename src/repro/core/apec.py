@@ -71,17 +71,26 @@ def apec_reconstruct(overlap: jax.Array, residual: jax.Array) -> jax.Array:
     return ungroup(sg)
 
 
-def apec_matmul(s: jax.Array, w: jax.Array, g: int) -> jax.Array:
+def apec_matmul_jnp(s: jax.Array, w: jax.Array, g: int) -> jax.Array:
     """Event accumulation through APEC: W.T @ s_i per position, but the
     overlap's partial sum is computed once per group and reused.
 
     s: (..., P, C); w: (C, F). Returns (..., P, F), exactly s @ w.
+    (This is the `jnp` backend of the dispatch registry; `ref` is the
+    plain dense s @ w it must match.)
     """
     overlap, residual = apec_decompose(s, g)
     psum_ov = overlap @ w                            # cached partial sums
     psum_res = residual @ w                          # unique contributions
     out = psum_res + psum_ov[..., None, :]           # reuse across members
     return out.reshape(s.shape[:-1] + (w.shape[-1],))
+
+
+def apec_matmul(s: jax.Array, w: jax.Array, g: int) -> jax.Array:
+    """APEC matmul routed through the backend registry: the overlap-reuse
+    jnp form by default, packed Pallas kernels under TPU / override."""
+    from repro.kernels.dispatch import dispatch   # lazy: no import cycle
+    return dispatch("apec_matmul", s, w, g=g)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -96,6 +96,18 @@ def econv_scatter(
     return jax.vmap(one_image)(s.astype(jnp.float32))
 
 
+def econv(s: jax.Array, w: jax.Array, stride: int = 1,
+          padding: str = "SAME") -> jax.Array:
+    """Event convolution routed through the backend registry.
+
+    Default resolution: `ref` (lax TConv) on CPU, im2col + the
+    occupancy-skipping spike matmul on TPU; ``EXSPIKE_BACKEND=econv=jnp``
+    selects the faithful per-event scatter form.
+    """
+    from repro.kernels.dispatch import dispatch   # lazy: no import cycle
+    return dispatch("econv", s, w, stride=stride, padding=padding)
+
+
 def econv_gather(s: jax.Array, w: jax.Array) -> jax.Array:
     """Dense event-form: same per-position accumulation order as Algorithm 1
     (loop over positions, accumulate active channels' weight patches) but

@@ -39,8 +39,9 @@ def kv_status_sum(k: jax.Array, v: jax.Array) -> jax.Array:
     return jnp.sum(k * v, axis=-2)
 
 
-def sdsa(q: jax.Array, k: jax.Array, v: jax.Array, mode: str = "or") -> jax.Array:
-    """Full SDSA. q,k,v: (..., N, d) binary spikes -> (..., N, d).
+def sdsa_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+             mode: str = "or") -> jax.Array:
+    """Dense-jnp SDSA (the `ref` oracle of the dispatch registry).
 
     mode="or": paper-faithful Attention Core output (binary).
     mode="sum": accumulated form; caller applies LIF/threshold to re-binarize
@@ -53,6 +54,17 @@ def sdsa(q: jax.Array, k: jax.Array, v: jax.Array, mode: str = "or") -> jax.Arra
     else:
         raise ValueError(f"unknown SDSA mode: {mode}")
     return q * status[..., None, :, ]
+
+
+def sdsa(q: jax.Array, k: jax.Array, v: jax.Array, mode: str = "or") -> jax.Array:
+    """Full SDSA. q,k,v: (..., N, d) binary spikes -> (..., N, d).
+
+    Routes through the backend registry (`kernels.dispatch`): the dense
+    oracle by default on CPU, the bit-packed Pallas kernels on TPU, or
+    whatever ``EXSPIKE_BACKEND`` selects.
+    """
+    from repro.kernels.dispatch import dispatch   # lazy: no import cycle
+    return dispatch("sdsa", q, k, v, mode=mode)
 
 
 def sdsa_decode_init(head_shape: tuple, mode: str = "or", dtype=jnp.float32) -> jax.Array:

@@ -72,7 +72,9 @@ def tile_occupancy(s: jax.Array, tile_m: int, tile_k: int) -> jax.Array:
     if m % tile_m or k % tile_k:
         raise ValueError(f"shape ({m},{k}) not tileable by ({tile_m},{tile_k})")
     t = s.reshape(s.shape[:-2] + (m // tile_m, tile_m, k // tile_k, tile_k))
-    return jnp.sum(t.astype(jnp.int32), axis=(-3, -1))
+    # Count nonzeros, not a sum-cast: fractional drive (direct-coded first
+    # layer) must never truncate to an "empty" tile and get skipped.
+    return jnp.sum((t != 0).astype(jnp.int32), axis=(-3, -1))
 
 
 def occupancy_fraction(s: jax.Array, tile_m: int, tile_k: int) -> jax.Array:

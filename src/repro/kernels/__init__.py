@@ -1,18 +1,46 @@
-"""Pallas TPU kernels for the ExSpike hot spots.
+"""Pallas TPU kernels for the ExSpike hot spots + the backend registry.
+
+Kernels (each with a pure-jnp oracle in ref.py and a jit'd shape-agnostic
+wrapper in ops.py; interpret=True on CPU, compiled on TPU):
 
   lif_scan      — fused temporal LIF (membrane resident in VMEM)
   sdsa_kernel   — bit-packed Attention Core stages (AND / column-OR / AND)
   spike_matmul  — occupancy-skipping event matmul (AER-FIFO tile analog)
+  apec_kernel   — packed overlap/residual extraction (Fig. 5)
 
-Each has a pure-jnp oracle in ref.py and a jit'd shape-agnostic wrapper in
-ops.py. Kernels validate in interpret=True on CPU; TPU is the target.
+Backend registry (`dispatch.py`) — every hot-path op routes through one
+switchboard so kernels are drop-in registrations, parity-tested the moment
+they register (tests/test_dispatch_parity.py):
+
+  op            backends (default first)           constraints
+  ------------  ---------------------------------  --------------------------
+  lif_scan      cpu: ref · tpu: pallas             pallas = hard Heaviside
+                (+ pallas-interpret, manual)         (no surrogate grad —
+                                                      train with ref)
+  spike_matmul  cpu: ref · tpu: pallas             —
+                (+ jnp tile-masked, manual)
+  apec_matmul   jnp (overlap-reuse) · tpu: pallas  P % g == 0, else -> ref
+                (+ ref = dense s @ w)
+  sdsa          cpu: ref · tpu: pallas             packed paths: mode="or"
+                (+ jnp bit-packed, manual)           only, else -> ref
+  econv         cpu: ref (TConv) · tpu: pallas     jnp scatter: odd kernel,
+                (+ jnp event scatter, manual)        stride 1, SAME
+
+Override with the ``EXSPIKE_BACKEND`` env var — a single backend name
+applies to all ops (``EXSPIKE_BACKEND=ref``), and ``op=backend`` entries
+pin single ops (``EXSPIKE_BACKEND=sdsa=pallas,ref``) — or programmatically
+with ``dispatch.use_backend(name, op=...)``. Fallback rule: whenever the
+selected backend is unregistered or its capability check fails (platform,
+mode, shape divisibility), the call runs the `ref` oracle and emits a
+RuntimeWarning instead of erroring. ``benchmarks/run.py --backend``
+sweeps backends so speedups are measured, not asserted.
 """
-from . import ops, ref
+from . import dispatch, ops, ref
 from .lif_scan import lif_scan_pallas
 from .sdsa_kernel import sdsa_apply_pallas, sdsa_packed, sdsa_status_pallas
 from .spike_matmul import spike_matmul_pallas
 
 __all__ = [
-    "ops", "ref", "lif_scan_pallas", "sdsa_apply_pallas", "sdsa_packed",
-    "sdsa_status_pallas", "spike_matmul_pallas",
+    "dispatch", "ops", "ref", "lif_scan_pallas", "sdsa_apply_pallas",
+    "sdsa_packed", "sdsa_status_pallas", "spike_matmul_pallas",
 ]

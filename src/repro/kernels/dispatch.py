@@ -1,0 +1,518 @@
+"""Backend dispatch registry for the ExSpike hot-path ops.
+
+One event-driven dataflow (LIF -> spike encoding -> APEC -> occupancy-
+skipping matmul / SDSA) serves every workload in this repo, but each op
+has several numerically-equivalent realizations: a pure-jnp oracle, an
+alternative vectorized jnp form, and the Pallas TPU kernels (compiled on
+TPU, interpret mode on CPU). This module is the single switchboard:
+
+  op          backends                         notes
+  ----------  -------------------------------  ---------------------------
+  lif_scan    ref | pallas-interpret | pallas  ref keeps surrogate grads
+  spike_matmul ref | jnp | pallas-interpret | pallas
+  apec_matmul ref | jnp | pallas-interpret | pallas   jnp is the default
+  sdsa        ref | jnp | pallas-interpret | pallas   packed paths: mode=or
+  econv       ref | jnp | pallas-interpret | pallas   jnp = event scatter
+
+Selection order per call:
+  1. explicit override — `use_backend(...)` context or the
+     ``EXSPIKE_BACKEND`` env var (``ref`` for all ops, or a comma list of
+     ``op=backend`` entries, e.g. ``EXSPIKE_BACKEND=sdsa=pallas,ref``);
+  2. otherwise the highest-priority backend registered for the current
+     platform whose capability check (`supports`) passes;
+  3. the `ref` oracle as the universal fallback — if an override or a
+     chosen kernel can't handle the inputs (shape divisibility, dtype,
+     unsupported mode), the call falls back to `ref` with a warning
+     instead of erroring.
+
+Resolution happens at trace time (shapes/dtypes are static under jit), so
+dispatch adds zero runtime cost to compiled code.
+
+Registering a new kernel is one `register(...)` call; the parity harness
+(`tests/test_dispatch_parity.py`) enumerates every registered
+(op x backend) pair against `ref` automatically, and
+``benchmarks/run.py --backend`` sweeps it.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import os
+import warnings
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ENV_VAR = "EXSPIKE_BACKEND"
+REF = "ref"
+ALL_PLATFORMS = ("cpu", "gpu", "tpu")
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One registered implementation of an op.
+
+    `supports(*args, **kwargs) -> str | None` returns a reason string when
+    the backend CANNOT handle the call (None means supported). `auto`
+    backends participate in automatic selection; non-auto ones run only
+    under an explicit override (and in the parity harness).
+    """
+    name: str
+    fn: Callable[..., Any]
+    platforms: Tuple[str, ...] = ALL_PLATFORMS
+    priority: int = 0
+    auto: bool = True
+    supports: Optional[Callable[..., Optional[str]]] = None
+
+    def unsupported_reason(self, *args, **kwargs) -> Optional[str]:
+        platform = jax.default_backend()
+        if platform not in self.platforms:
+            return f"platform {platform} not in {self.platforms}"
+        if self.supports is not None:
+            return self.supports(*args, **kwargs)
+        return None
+
+
+@dataclasses.dataclass
+class OpSpec:
+    name: str
+    make_example: Callable[[jax.Array], Tuple[tuple, dict]]
+    backends: Dict[str, Backend] = dataclasses.field(default_factory=dict)
+
+
+_REGISTRY: Dict[str, OpSpec] = {}
+_OVERRIDES: list = []   # stack of {op_or_None: backend_name} dicts
+
+
+# ----------------------------------------------------------- registration
+def register_op(name: str, make_example) -> None:
+    if name not in _REGISTRY:
+        _REGISTRY[name] = OpSpec(name=name, make_example=make_example)
+
+
+def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
+             auto=True, supports=None):
+    """Decorator: register `fn` as backend `name` for `op`."""
+    def deco(fn):
+        if op not in _REGISTRY:
+            raise KeyError(f"unknown op {op!r}; register_op it first")
+        _REGISTRY[op].backends[name] = Backend(
+            name=name, fn=fn, platforms=tuple(platforms), priority=priority,
+            auto=auto, supports=supports)
+        return fn
+    return deco
+
+
+def op_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def backend_names(op: str) -> Tuple[str, ...]:
+    return tuple(_REGISTRY[op].backends)
+
+
+def get_backend(op: str, name: str) -> Backend:
+    try:
+        return _REGISTRY[op].backends[name]
+    except KeyError:
+        raise KeyError(
+            f"op {op!r} has no backend {name!r}; "
+            f"registered: {backend_names(op)}") from None
+
+
+def example_inputs(op: str, key: jax.Array) -> Tuple[tuple, dict]:
+    """Small CPU-friendly (args, kwargs) for the parity harness."""
+    return _REGISTRY[op].make_example(key)
+
+
+# -------------------------------------------------------------- overrides
+@functools.lru_cache(maxsize=8)
+def _parse_env(value: str) -> Tuple[Tuple[Optional[str], str], ...]:
+    """'ref' -> ((None,'ref'),); 'sdsa=pallas,ref' -> per-op + global."""
+    out = []
+    for part in value.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" in part:
+            op, be = part.split("=", 1)
+            out.append((op.strip(), be.strip()))
+        else:
+            out.append((None, part))
+    return tuple(out)
+
+
+def _override_for(op: str) -> Optional[str]:
+    for frame in reversed(_OVERRIDES):
+        if op in frame:
+            return frame[op]
+        if None in frame:
+            return frame[None]
+    env = os.environ.get(ENV_VAR, "")
+    if env:
+        glob = None
+        for o, be in _parse_env(env):
+            if o == op:
+                return be
+            if o is None:
+                glob = be
+        return glob
+    return None
+
+
+@contextlib.contextmanager
+def use_backend(name: str, op: Optional[str] = None):
+    """Force backend `name` for one op (or all ops when op=None)."""
+    _OVERRIDES.append({op: name})
+    try:
+        yield
+    finally:
+        _OVERRIDES.pop()
+
+
+# -------------------------------------------------------------- resolution
+def _fallback(op: str, wanted: str, reason: str) -> Backend:
+    warnings.warn(
+        f"exspike dispatch: backend {wanted!r} for op {op!r} unavailable "
+        f"({reason}); falling back to {REF!r}", RuntimeWarning, stacklevel=3)
+    return _REGISTRY[op].backends[REF]
+
+
+def resolve(op: str, *args, **kwargs) -> Backend:
+    """Pick the backend that `dispatch` would run for these inputs."""
+    spec = _REGISTRY[op]
+    override = _override_for(op)
+    if override is not None:
+        be = spec.backends.get(override)
+        if be is None:
+            return _fallback(op, override, "not registered")
+        reason = be.unsupported_reason(*args, **kwargs)
+        if reason is not None:
+            return _fallback(op, override, reason)
+        return be
+    platform = jax.default_backend()
+    candidates = sorted(
+        (b for b in spec.backends.values()
+         if b.auto and platform in b.platforms),
+        key=lambda b: -b.priority)
+    cap_failure = None
+    for be in candidates:
+        if be.name == REF:
+            break
+        reason = be.supports(*args, **kwargs) if be.supports else None
+        if reason is None:
+            return be
+        if cap_failure is None:
+            cap_failure = (be.name, reason)
+    if cap_failure is not None:
+        # A capability failure (shape/dtype/mode) silently degrading to
+        # the oracle would hide lost compression/kernel coverage — warn.
+        # (Platform filtering above is expected and stays silent.)
+        return _fallback(op, *cap_failure)
+    return spec.backends[REF]
+
+
+def resolve_name(op: str, *args, **kwargs) -> str:
+    return resolve(op, *args, **kwargs).name
+
+
+def dispatch(op: str, *args, **kwargs):
+    """Run `op` on the resolved backend."""
+    return resolve(op, *args, **kwargs).fn(*args, **kwargs)
+
+
+def call_backend(op: str, name: str, *args, **kwargs):
+    """Run a specific backend, erroring (not falling back) if unsupported.
+
+    The parity harness uses this so an unsupported pair is an explicit
+    skip, never a silent ref-vs-ref comparison.
+    """
+    be = get_backend(op, name)
+    if be.supports is not None:
+        reason = be.supports(*args, **kwargs)
+        if reason is not None:
+            raise ValueError(f"{op}/{name} unsupported: {reason}")
+    return be.fn(*args, **kwargs)
+
+
+def resolved_backends() -> Dict[str, str]:
+    """op -> backend that would run on this platform/override for each
+    op's canonical example shapes (serve startup log)."""
+    out = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        for op in op_names():
+            ex_args, ex_kwargs = example_inputs(op, jax.random.PRNGKey(0))
+            out[op] = resolve_name(op, *ex_args, **ex_kwargs)
+    return out
+
+
+def table() -> str:
+    """Human-readable registry dump (debugging / REPL aid)."""
+    lines = []
+    for op, spec in _REGISTRY.items():
+        bes = ", ".join(
+            f"{b.name}(p{b.priority}{'' if b.auto else ',manual'})"
+            for b in sorted(spec.backends.values(), key=lambda b: -b.priority))
+        lines.append(f"{op:14s} -> {bes}")
+    return "\n".join(lines)
+
+
+# ======================================================================
+# Op definitions + backend implementations
+# ======================================================================
+# ------------------------------------------------------------- lif_scan
+def _lif_example(key):
+    x = jax.random.normal(key, (4, 3, 40)) * 2.0
+    return (x,), {"decay": 0.5, "v_th": 1.0, "soft_reset": True}
+
+
+register_op("lif_scan", _lif_example)
+
+
+@register("lif_scan", REF, priority=0)
+def _lif_ref(x, *, decay=0.5, v_th=1.0, soft_reset=True,
+             surrogate_alpha=2.0):
+    from repro.core.lif import LIFConfig, lif_scan
+    cfg = LIFConfig(decay=decay, v_th=v_th, soft_reset=soft_reset,
+                    surrogate_alpha=surrogate_alpha)
+    return lif_scan(x.astype(jnp.float32), cfg).astype(x.dtype)
+
+
+def _lif_pallas(x, *, decay=0.5, v_th=1.0, soft_reset=True,
+                surrogate_alpha=2.0):
+    # Hard-Heaviside kernel: forward-exact vs ref; no surrogate gradient.
+    del surrogate_alpha
+    from repro.kernels import ops
+    return ops.lif(x, decay=decay, v_th=v_th, soft_reset=soft_reset)
+
+
+register("lif_scan", "pallas-interpret", platforms=("cpu",), priority=1,
+         auto=False)(_lif_pallas)
+register("lif_scan", "pallas", platforms=("tpu",), priority=20)(_lif_pallas)
+
+
+# --------------------------------------------------------- spike_matmul
+def _spike_matmul_example(key):
+    k1, k2 = jax.random.split(key)
+    s = (jax.random.uniform(k1, (2, 48, 96)) < 0.3).astype(jnp.float32)
+    w = jax.random.normal(k2, (96, 56), jnp.float32)
+    return (s, w), {}
+
+
+register_op("spike_matmul", _spike_matmul_example)
+
+
+@register("spike_matmul", REF, priority=0)
+def _spike_matmul_ref(s, w):
+    return jnp.dot(s, w, preferred_element_type=jnp.float32).astype(w.dtype)
+
+
+@register("spike_matmul", "jnp", priority=5, auto=False)
+def _spike_matmul_jnp(s, w, block_m: int = 8, block_k: int = 32):
+    """Tile-masked jnp emulation of the occupancy-skipping kernel: per-tile
+    partial products are gated by the same occupancy map the Pallas kernel
+    consumes (numerically identical to dense — empty tiles contribute 0)."""
+    lead = s.shape[:-2]
+    m, k = s.shape[-2:]
+    s2 = s.reshape((-1, k)).astype(jnp.float32)
+    rows = s2.shape[0]
+    pad_m, pad_k = (-rows) % block_m, (-k) % block_k
+    s2 = jnp.pad(s2, ((0, pad_m), (0, pad_k)))
+    w2 = jnp.pad(w.astype(jnp.float32), ((0, pad_k), (0, 0)))
+    mt, kt = s2.shape[0] // block_m, s2.shape[1] // block_k
+    st = s2.reshape(mt, block_m, kt, block_k)
+    wt = w2.reshape(kt, block_k, w.shape[1])
+    occ = (jnp.sum(st, axis=(1, 3)) > 0).astype(jnp.float32)  # (mt, kt)
+    part = jnp.einsum("aibk,bkn->abin", st, wt)               # per-tile dots
+    out = jnp.sum(part * occ[:, :, None, None], axis=1)
+    out = out.reshape(mt * block_m, -1)[:rows]
+    return out.reshape(lead + (m, w.shape[1])).astype(w.dtype)
+
+
+def _spike_matmul_pallas(s, w):
+    from repro.kernels import ops
+    return ops.spike_matmul(s, w)
+
+
+register("spike_matmul", "pallas-interpret", platforms=("cpu",), priority=1,
+         auto=False)(_spike_matmul_pallas)
+register("spike_matmul", "pallas", platforms=("tpu",),
+         priority=20)(_spike_matmul_pallas)
+
+
+# ---------------------------------------------------------- apec_matmul
+def _apec_example(key):
+    k1, k2 = jax.random.split(key)
+    s = (jax.random.uniform(k1, (2, 16, 48)) < 0.4).astype(jnp.float32)
+    w = jax.random.normal(k2, (48, 24), jnp.float32)
+    return (s, w), {"g": 2}
+
+
+register_op("apec_matmul", _apec_example)
+
+
+def _apec_divisibility(s, w, *, g=2) -> Optional[str]:
+    del w
+    if s.shape[-2] % g:
+        return f"positions {s.shape[-2]} not divisible by group {g}"
+    return None
+
+
+@register("apec_matmul", REF, priority=0)
+def _apec_matmul_ref(s, w, *, g=2):
+    del g    # the oracle is the plain dense accumulation s @ w
+    return jnp.dot(s.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(w.dtype)
+
+
+@register("apec_matmul", "jnp", priority=10, supports=_apec_divisibility)
+def _apec_matmul_jnp(s, w, *, g=2):
+    from repro.core.apec import apec_matmul_jnp
+    return apec_matmul_jnp(s, w, g)
+
+
+def _apec_matmul_pallas(s, w, *, g=2):
+    from repro.kernels import ops
+    return ops.apec_matmul(s, w, g=g)
+
+
+register("apec_matmul", "pallas-interpret", platforms=("cpu",), priority=1,
+         auto=False, supports=_apec_divisibility)(_apec_matmul_pallas)
+register("apec_matmul", "pallas", platforms=("tpu",), priority=20,
+         supports=_apec_divisibility)(_apec_matmul_pallas)
+
+
+# ------------------------------------------------------------------ sdsa
+def _sdsa_example(key):
+    ks = jax.random.split(key, 3)
+    q, k, v = ((jax.random.uniform(kk, (2, 3, 24, 40)) < 0.4)
+               .astype(jnp.float32) for kk in ks)
+    return (q, k, v), {"mode": "or"}
+
+
+register_op("sdsa", _sdsa_example)
+
+
+def _sdsa_or_only(q, k, v, *, mode="or") -> Optional[str]:
+    del q, k, v
+    if mode != "or":
+        return f"packed bitwise path supports mode='or' only, got {mode!r}"
+    return None
+
+
+@register("sdsa", REF, priority=0)
+def _sdsa_ref(q, k, v, *, mode="or"):
+    from repro.core.sdsa import sdsa_jnp
+    return sdsa_jnp(q, k, v, mode=mode)
+
+
+@register("sdsa", "jnp", priority=5, auto=False, supports=_sdsa_or_only)
+def _sdsa_packed_jnp(q, k, v, *, mode="or"):
+    """Bit-packed pure-jnp path (the kernels' uint32 semantics without
+    Pallas): pack -> AND / column-OR / AND -> unpack."""
+    del mode
+    from repro.core.spikes import PACK, pack_spikes, unpack_spikes
+    from repro.kernels.ref import sdsa_packed_ref
+    lead, (n, d) = q.shape[:-2], q.shape[-2:]
+    pad = (-d) % PACK
+
+    def prep(x):
+        x = x.reshape((-1, n, d))
+        return pack_spikes(jnp.pad(x, ((0, 0), (0, 0), (0, pad))), axis=-1)
+
+    out_p = sdsa_packed_ref(prep(q), prep(k), prep(v))
+    out = unpack_spikes(out_p, axis=-1, dtype=q.dtype)[..., :d]
+    return out.reshape(lead + (n, d))
+
+
+def _sdsa_pallas(q, k, v, *, mode="or"):
+    del mode
+    from repro.kernels import ops
+    return ops.sdsa_or(q, k, v)
+
+
+register("sdsa", "pallas-interpret", platforms=("cpu",), priority=1,
+         auto=False, supports=_sdsa_or_only)(_sdsa_pallas)
+register("sdsa", "pallas", platforms=("tpu",), priority=20,
+         supports=_sdsa_or_only)(_sdsa_pallas)
+
+
+# ----------------------------------------------------------------- econv
+def _econv_example(key):
+    k1, k2 = jax.random.split(key)
+    s = (jax.random.uniform(k1, (2, 8, 8, 6)) < 0.25).astype(jnp.float32)
+    w = jax.random.normal(k2, (3, 3, 6, 10), jnp.float32)
+    return (s, w), {"stride": 1, "padding": "SAME"}
+
+
+register_op("econv", _econv_example)
+
+
+def _econv_scatter_supports(s, w, *, stride=1, padding="SAME"):
+    del s
+    kh, kw = w.shape[:2]
+    if kh % 2 == 0 or kw % 2 == 0:
+        return f"event scatter needs odd kernels, got {(kh, kw)}"
+    if stride != 1 or padding != "SAME":
+        return f"event scatter is stride-1/SAME only, got {stride}/{padding}"
+    return None
+
+
+@register("econv", REF, priority=0)
+def _econv_ref(s, w, *, stride=1, padding="SAME"):
+    from repro.core.econv import tconv
+    return tconv(s, w, stride=stride, padding=padding)
+
+
+@register("econv", "jnp", priority=5, auto=False,
+          supports=_econv_scatter_supports)
+def _econv_scatter(s, w, *, stride=1, padding="SAME"):
+    del stride, padding
+    from repro.core.econv import econv_scatter
+    return econv_scatter(s, w)
+
+
+def _econv_pallas(s, w, *, stride=1, padding="SAME"):
+    """im2col + occupancy-skipping spike matmul: binary patches of a binary
+    map stay binary, so the event matmul kernel is the conv's MXU form."""
+    from repro.kernels import ops
+    kh, kw, ci, co = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        s, (kh, kw), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    n, ho, wo, _ = patches.shape
+    # patch features are ordered (Ci, kh, kw): transpose weights to match
+    w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(ci * kh * kw, co)
+    out = ops.spike_matmul(patches.reshape(n * ho * wo, -1),
+                           w2.astype(jnp.float32))
+    return out.reshape(n, ho, wo, co)
+
+
+register("econv", "pallas-interpret", platforms=("cpu",), priority=1,
+         auto=False)(_econv_pallas)
+register("econv", "pallas", platforms=("tpu",), priority=20)(_econv_pallas)
+
+
+# --------------------------------------------------- dispatch entry points
+def lif_scan(x, *, decay=0.5, v_th=1.0, soft_reset=True, surrogate_alpha=2.0):
+    return dispatch("lif_scan", x, decay=decay, v_th=v_th,
+                    soft_reset=soft_reset, surrogate_alpha=surrogate_alpha)
+
+
+def spike_matmul(s, w):
+    return dispatch("spike_matmul", s, w)
+
+
+def apec_matmul(s, w, *, g=2):
+    return dispatch("apec_matmul", s, w, g=g)
+
+
+def sdsa(q, k, v, *, mode="or"):
+    return dispatch("sdsa", q, k, v, mode=mode)
+
+
+def econv(s, w, *, stride=1, padding="SAME"):
+    return dispatch("econv", s, w, stride=stride, padding=padding)

@@ -103,6 +103,29 @@ def apec_decompose(s: jax.Array, g: int = 2):
     return ov, res
 
 
+@functools.partial(jax.jit, static_argnames=("g",))
+def apec_matmul(s: jax.Array, w: jax.Array, g: int = 2) -> jax.Array:
+    """APEC matmul on the packed kernels: bitwise overlap/residual
+    decomposition, then two occupancy-skipping matmuls with the overlap
+    partial sums reused across each group's members.
+
+    s: (..., P, C) binary with P % g == 0; w: (C, F) -> (..., P, F).
+    Leading axes are flattened into the position axis — safe because each
+    row contributes whole groups when P divides by g.
+    """
+    lead = s.shape[:-2]
+    p, c = s.shape[-2:]
+    if p % g:
+        raise ValueError(f"positions {p} not divisible by group {g}")
+    s2 = s.reshape(-1, c)
+    ov, res = apec_decompose(s2, g)                  # packed bitwise kernel
+    wf = w.astype(jnp.float32)
+    psum_ov = spike_matmul(ov, wf)                   # (R/g, F) cached sums
+    psum_res = spike_matmul(res, wf)                 # (R, F) residuals
+    out = psum_res + jnp.repeat(psum_ov, g, axis=0)  # reuse across members
+    return out.reshape(lead + (p, w.shape[-1])).astype(w.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
 def spike_matmul(s: jax.Array, w: jax.Array, block_m: int = 128,
                  block_n: int = 128, block_k: int = 128) -> jax.Array:

@@ -1,4 +1,8 @@
 import os
+# 512 *host* (CPU) devices; pin the platform so jax never probes the TPU
+# runtime (a multi-minute libtpu timeout on TPU-toolchain images with no
+# TPU attached — the dry-run is a CPU-side compile study by design).
+os.environ["JAX_PLATFORMS"] = "cpu"
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run (deliverable e).
@@ -31,7 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import registry
 from repro.launch import flops as flops_mod
 from repro.launch import hlo_analysis, specs, steps
-from repro.launch.mesh import make_production_mesh, chips
+from repro.launch.mesh import make_production_mesh, chips, use_concrete_mesh
 from repro.models import lm
 from repro.optim import adamw
 from repro.runtime import sharding
@@ -92,7 +96,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     repl = NamedSharding(mesh, P())
 
     t0 = time.time()
-    with mesh, jax.sharding.set_mesh(mesh):
+    with mesh, use_concrete_mesh(mesh):
         if shape.kind == "train":
             opt_abs = jax.eval_shape(functools.partial(
                 adamw.init, cfg=adamw.AdamWConfig(

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 from typing import List, Optional
 
@@ -23,6 +24,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.configs.base import LMConfig
+from repro.kernels import dispatch
 from repro.launch import steps as steps_mod
 from repro.models import lm
 
@@ -112,9 +114,15 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--backend", default=None,
+                    help="kernel backend override, same grammar as "
+                         "EXSPIKE_BACKEND (e.g. 'ref' or 'sdsa=pallas,ref')")
     args = ap.parse_args()
     cfg = (registry.get_reduced(args.arch) if args.reduced
            else registry.get_config(args.arch))
+    if args.backend:
+        os.environ[dispatch.ENV_VAR] = args.backend
+    print(f"[serve] kernel backends: {dispatch.resolved_backends()}")
     server = Server(cfg, n_slots=args.slots,
                     spiking=False if args.dense else None)
     rng = np.random.default_rng(0)

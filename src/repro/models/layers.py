@@ -17,7 +17,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.core.lif import LIFConfig, lif_scan
+from repro.core.lif import LIFConfig
 
 Params = Dict[str, Any]
 
@@ -81,8 +81,14 @@ def lif_fire(x: jax.Array, lif_cfg: LIFConfig) -> jax.Array:
 
     x: (T, ...) membrane drive -> (T, ...) binary spikes. This is the FPE
     fire stage; in spiking mode every heavy op consumes its output.
+    Routed through the backend registry: `ref` (surrogate-gradient scan)
+    by default on CPU — training needs its custom vjp — and the fused
+    Pallas kernel on TPU / under ``EXSPIKE_BACKEND`` override.
     """
-    return lif_scan(x, lif_cfg)
+    from repro.kernels.dispatch import dispatch
+    return dispatch("lif_scan", x, decay=lif_cfg.decay, v_th=lif_cfg.v_th,
+                    soft_reset=lif_cfg.soft_reset,
+                    surrogate_alpha=lif_cfg.surrogate_alpha)
 
 
 # --------------------------------------------------------------- SwiGLU MLP

@@ -294,8 +294,9 @@ def _unshard_weights(tree):
     """ZeRO-3 per-layer weight gather: constrain every matrix to replicated
     right before use. Without this GSPMD may keep weights sharded and
     gather the (1000x larger) activations instead (§Perf cell C)."""
+    from repro.launch.mesh import current_mesh
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = current_mesh()
         if not (getattr(mesh, "axis_names", None)):
             return tree
     except Exception:

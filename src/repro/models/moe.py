@@ -52,8 +52,9 @@ def moe_init(key, d_model: int, d_ff_expert: int, n_experts: int,
 def _maybe_constrain(x: jax.Array, *spec) -> jax.Array:
     """with_sharding_constraint when the ambient mesh has the axes; no-op
     on meshless CPU tests."""
+    from repro.launch.mesh import current_mesh
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = current_mesh()
         names = set(getattr(mesh, "axis_names", ()) or ())
         wanted = {a for s_ in spec if s_ is not None
                   for a in ((s_,) if isinstance(s_, str) else s_)}
@@ -170,7 +171,8 @@ def moe_apply_shard_map(
     lowering of the same math scatter/gathers multi-TB zero-buffers
     (§Perf cell B: 409 s -> see EXPERIMENTS.md).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.launch.mesh import current_mesh
+    mesh = current_mesh()
     names = set(getattr(mesh, "axis_names", ()) or ())
     if "model" not in names:
         return moe_apply(p, x, top_k=top_k, capacity_factor=capacity_factor,
@@ -229,14 +231,15 @@ def moe_apply_shard_map(
             out_sorted * w_sorted[:, None])
         return jax.lax.psum(local, "model")          # EP combine: (s_loc, d)
 
+    from repro.launch.mesh import shard_map
     P = jax.sharding.PartitionSpec
-    out = jax.shard_map(
+    out = shard_map(
         block, mesh=mesh,
         in_specs=(P(bt_axes or None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=P(bt_axes or None, None),
-        check_vma=False,
+        check_rep=False,
     )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
     if "shared" in p:

@@ -15,11 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SpikingConfig
-from repro.core.econv import tconv
-from repro.core.lif import LIFConfig, lif_scan
-from repro.core.sdsa import sdsa as sdsa_core
+from repro.core.lif import LIFConfig
+from repro.kernels import dispatch
 from .cnn import _conv_init
-from .layers import dense_init
+from .layers import dense_init, lif_fire
 
 Params = Dict[str, Any]
 
@@ -57,9 +56,17 @@ def spikingformer_apply(p: Params, x: jax.Array, n_heads: int = 8,
     stats: List[jax.Array] = []
 
     # SPS: conv -> LIF x4, maxpool after stages 2 and 3 (32 -> 8).
+    # Registry-routed econv over the flattened (T*B) batch: dense TConv on
+    # CPU, im2col + occupancy-skipping spike matmul on TPU. Stage 0 eats
+    # the direct-coded (multi-bit) image, which the event path doesn't
+    # model (OPT1 territory) — it stays on the dense oracle.
+    from repro.core.econv import econv, tconv
     for i, w in enumerate(p["sps"]):
-        drive = jax.vmap(lambda ss: tconv(ss, w))(s)
-        s = lif_scan(drive, lif)
+        tb = s.shape[:2]
+        flat = s.reshape((-1,) + s.shape[2:])
+        drive = tconv(flat, w) if i == 0 else econv(flat, w)
+        drive = drive.reshape(tb + drive.shape[1:])
+        s = lif_fire(drive, lif)
         if i in (1, 2):
             s = jax.lax.reduce_window(
                 s, -jnp.inf, jax.lax.max, (1, 1, 2, 2, 1), (1, 1, 2, 2, 1),
@@ -74,25 +81,25 @@ def spikingformer_apply(p: Params, x: jax.Array, n_heads: int = 8,
 
     for blk in p["blocks"]:
         # SSA: q/k/v spikes -> Attention Core (non-causal OR form).
-        sq = lif_scan(x_mp @ blk["w_q"], lif).reshape(
+        sq = lif_fire(x_mp @ blk["w_q"], lif).reshape(
             t, b, n_tok, n_heads, dim // n_heads)
-        sk = lif_scan(x_mp @ blk["w_k"], lif).reshape(
+        sk = lif_fire(x_mp @ blk["w_k"], lif).reshape(
             t, b, n_tok, n_heads, dim // n_heads)
-        sv = lif_scan(x_mp @ blk["w_v"], lif).reshape(
+        sv = lif_fire(x_mp @ blk["w_v"], lif).reshape(
             t, b, n_tok, n_heads, dim // n_heads)
-        attn = sdsa_core(sq.swapaxes(2, 3), sk.swapaxes(2, 3),
-                         sv.swapaxes(2, 3), mode=spiking_cfg.sdsa_mode)
+        attn = dispatch.sdsa(sq.swapaxes(2, 3), sk.swapaxes(2, 3),
+                             sv.swapaxes(2, 3), mode=spiking_cfg.sdsa_mode)
         attn = attn.swapaxes(2, 3).reshape(t, b, n_tok, dim)
         if collect_stats:
             stats.append(attn)
         x_mp = x_mp + attn @ blk["w_o"]
         # Spiking MLP (FFN)
-        h = lif_scan(x_mp, lif)
-        h = lif_scan(h @ blk["w_fc1"], lif)
+        h = lif_fire(x_mp, lif)
+        h = lif_fire(h @ blk["w_fc1"], lif)
         if collect_stats:
             stats.append(h)
         x_mp = x_mp + h @ blk["w_fc2"]
 
-    feats = jnp.mean(lif_scan(x_mp, lif), axis=(0, 2))      # rate + token avg
+    feats = jnp.mean(lif_fire(x_mp, lif), axis=(0, 2))      # rate + token avg
     logits = feats @ p["head"]
     return (logits, stats) if collect_stats else logits

@@ -1,10 +1,179 @@
 import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
 
 # Tests must see the single real CPU device (the dry-run sets its own
 # device-count flag in its own process; never here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+# Test models are tiny: XLA compile time dominates wall clock, so skip the
+# backend optimization pipeline (~30% faster suite; export XLA_FLAGS to
+# override).
+os.environ.setdefault("XLA_FLAGS", "--xla_backend_optimization_level=0")
 
-from hypothesis import settings
+try:
+    from hypothesis import settings
+except ImportError:
+    settings = None
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+if settings is not None:
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# Shared 8-host-device subprocess: every multi-device test payload runs in
+# ONE child process (one interpreter + jax import + compile session instead
+# of one per test module). Payloads are independent try/except sections, so
+# one failure doesn't mask the others; each test asserts its own marker.
+# ---------------------------------------------------------------------------
+MULTIDEVICE_SCRIPT = textwrap.dedent("""
+    import os
+    # 8 *host* (CPU) devices; pin the platform so jax never probes the TPU
+    # runtime — on TPU-toolchain images without a TPU attached, that probe
+    # blocks for minutes in libtpu initialization timeouts.
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               "--xla_backend_optimization_level=0")
+    import tempfile
+    import traceback
+
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh, use_concrete_mesh
+
+    def section(name, fn):
+        try:
+            fn()
+        except Exception:
+            print(name + "_FAIL", flush=True)
+            traceback.print_exc()
+        else:
+            print(name + "_OK", flush=True)
+
+    def ckpt_elastic():
+        from repro.checkpoint import checkpointer
+        with tempfile.TemporaryDirectory() as d:
+            # save on a (4, 2) mesh
+            mesh_a = make_mesh((4, 2), ("data", "model"))
+            x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+            xa = jax.device_put(x, NamedSharding(mesh_a, P("data", "model")))
+            checkpointer.save(d, 1, {"x": xa})
+            # restore onto a (2, 2) mesh — elastic shrink (data axis halved)
+            mesh_b = make_mesh((2, 2), ("data", "model"),
+                               devices=jax.devices()[:4])
+            sh = {"x": NamedSharding(mesh_b, P("data", "model"))}
+            out = checkpointer.restore(d + "/step_000000001", {"x": x}, sh)
+            assert out["x"].sharding.mesh.shape["data"] == 2
+            np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(x))
+
+    def elastic_e2e():
+        from repro.configs.base import LMConfig, SpikingConfig
+        from repro.launch.train import train_loop
+        from repro.runtime.elastic import shrunk_mesh
+        cfg = LMConfig(name="elastic", family="dense", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                       vocab=64, spiking=SpikingConfig(t_steps=1),
+                       remat="none", loss_chunk=16)
+        with tempfile.TemporaryDirectory() as d:
+            mesh_a = make_mesh((4, 2), ("data", "model"))
+            out1 = train_loop(cfg, steps=6, batch=8, seq=16, ckpt_dir=d,
+                              save_every=3, mesh=mesh_a, log_every=100)
+            # 2 of 4 data groups "fail": plan the shrink, rebuild, resume.
+            plan = shrunk_mesh((4, 2), ("data", "model"),
+                               n_failed_data_groups=2)
+            assert plan.mesh_shape == (2, 2) and plan.microbatch_scale == 2
+            mesh_b = make_mesh(plan.mesh_shape, plan.axis_names,
+                               devices=jax.devices()[:4])
+            out2 = train_loop(cfg, steps=10, batch=8, seq=16, ckpt_dir=d,
+                              save_every=3, resume=True, mesh=mesh_b,
+                              log_every=100)
+            assert len(out2["losses"]) == 4            # resumed at step 6
+            assert np.isfinite(out2["final_loss"])
+
+    def shard_map_moe():
+        from repro.models import moe
+        mesh = make_mesh((2, 4), ("data", "model"))
+        p = moe.moe_init(jax.random.PRNGKey(0), 32, 16, n_experts=8)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32),
+                              jnp.float32)
+        ref = moe.moe_apply(p, x, top_k=2, capacity_factor=8.0)
+        with mesh, use_concrete_mesh(mesh):
+            p_sh = jax.device_put(p, {
+                "router": NamedSharding(mesh, P(None, None)),
+                "w_gate": NamedSharding(mesh, P("model", None, None)),
+                "w_up": NamedSharding(mesh, P("model", None, None)),
+                "w_down": NamedSharding(mesh, P("model", None, None)),
+            })
+            xs = jax.device_put(x, NamedSharding(mesh, P("data", None, None)))
+            out = jax.jit(lambda pp, xx: moe.moe_apply_shard_map(
+                pp, xx, top_k=2, capacity_factor=8.0))(p_sh, xs)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4, rtol=1e-4)
+
+    section("CKPT_ELASTIC", ckpt_elastic)
+    section("ELASTIC_E2E", elastic_e2e)
+    section("SHARD_MAP", shard_map_moe)
+""")
+
+
+class MultideviceRun:
+    def __init__(self, stdout: str, stderr: str):
+        self.stdout = stdout
+        self.stderr = stderr
+
+    def check(self, name: str):
+        assert f"{name}_OK" in self.stdout, (
+            f"{name} section did not pass in the shared multi-device "
+            f"subprocess.\nstdout: {self.stdout[-1000:]}\n"
+            f"stderr: {self.stderr[-3000:]}")
+
+
+_MULTIDEV_PROC = None
+
+
+def _spawn_multidevice() -> subprocess.Popen:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return subprocess.Popen([sys.executable, "-c", MULTIDEVICE_SCRIPT],
+                            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+                            text=True, env=env, cwd=root)
+
+
+def _uses_multidevice(item) -> bool:
+    return "multidevice_run" in getattr(item, "fixturenames", ())
+
+
+def pytest_collection_modifyitems(session, config, items):
+    """Push the multi-device tests to the end of the run so the shared
+    subprocess overlaps with the single-process tests ahead of them."""
+    items.sort(key=_uses_multidevice)   # stable: only moves consumers last
+
+
+def pytest_collection_finish(session):
+    """Start the shared multi-device subprocess as soon as we know a
+    selected test will consume it. Runs after -k/-m deselection, so
+    filtered runs don't pay for an unused 8-device child."""
+    global _MULTIDEV_PROC
+    if _MULTIDEV_PROC is None and any(
+            _uses_multidevice(i) for i in session.items):
+        _MULTIDEV_PROC = _spawn_multidevice()
+
+
+@pytest.fixture(scope="session")
+def multidevice_run():
+    global _MULTIDEV_PROC
+    if _MULTIDEV_PROC is None:       # e.g. fixture requested interactively
+        _MULTIDEV_PROC = _spawn_multidevice()
+    out, err = _MULTIDEV_PROC.communicate(timeout=600)
+    return MultideviceRun(out, err)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    """Don't orphan the shared subprocess when a run aborts (-x) before
+    any multi-device test consumed the fixture."""
+    if _MULTIDEV_PROC is not None and _MULTIDEV_PROC.poll() is None:
+        _MULTIDEV_PROC.kill()

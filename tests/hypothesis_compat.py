@@ -1,0 +1,42 @@
+"""Optional-hypothesis shim: property tests skip (not error) offline.
+
+Usage in test modules:
+
+    from hypothesis_compat import HAVE_HYPOTHESIS, given, st
+
+When `hypothesis` is installed this re-exports the real `given` /
+`strategies`. When it's absent (the offline CI image), `given` replaces
+the test with a zero-arg function that calls `pytest.skip`, so collection
+succeeds and the deterministic tests in the same module still run.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for `hypothesis.strategies`: every strategy factory
+        returns a placeholder; values are never drawn because the test
+        body is replaced with a skip."""
+
+        def __getattr__(self, name):
+            def factory(*args, **kwargs):
+                return f"<unavailable strategy {name}>"
+            return factory
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            return skipper
+        return deco

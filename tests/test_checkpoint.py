@@ -1,9 +1,5 @@
 """Checkpointing: roundtrip, corruption, retention, resume, elastic reshard."""
 import json
-import os
-import subprocess
-import sys
-import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -84,42 +80,12 @@ def test_async_save_then_wait(tmp_path):
     assert mgr.latest_step() == 7
 
 
-ELASTIC_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.checkpoint import checkpointer
-    import sys
-
-    d = sys.argv[1]
-    # save on a (4, 2) mesh
-    mesh_a = jax.make_mesh((4, 2), ("data", "model"))
-    x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
-    xa = jax.device_put(x, NamedSharding(mesh_a, P("data", "model")))
-    checkpointer.save(d, 1, {"x": xa})
-    # restore onto a (2, 2) mesh — elastic shrink (data axis halved)
-    mesh_b = jax.make_mesh((2, 2), ("data", "model"),
-                           devices=jax.devices()[:4])
-    sh = {"x": NamedSharding(mesh_b, P("data", "model"))}
-    out = checkpointer.restore(d + "/step_000000001", {"x": x}, sh)
-    assert out["x"].sharding.mesh.shape["data"] == 2
-    np.testing.assert_array_equal(np.asarray(out["x"]), np.asarray(x))
-    print("ELASTIC_OK")
-""")
-
-
-def test_elastic_restore_different_mesh(tmp_path):
-    """Checkpoint written on a 4x2 mesh restores onto 2x2 (subprocess with
-    8 host devices — the main test process keeps its single device)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
-    r = subprocess.run([sys.executable, "-c", ELASTIC_SCRIPT,
-                        str(tmp_path)], capture_output=True, text=True,
-                       env=env, cwd=os.path.dirname(os.path.dirname(
-                           os.path.abspath(__file__))))
-    assert "ELASTIC_OK" in r.stdout, r.stderr[-2000:]
+@pytest.mark.slow
+def test_elastic_restore_different_mesh(multidevice_run):
+    """Checkpoint written on a 4x2 mesh restores onto 2x2 (shared
+    8-host-device subprocess — the main test process keeps its single
+    device; see conftest.multidevice_run)."""
+    multidevice_run.check("CKPT_ELASTIC")
 
 
 def test_shrunk_mesh_plan():

@@ -1,51 +1,9 @@
 """End-to-end elastic restart: train on a 4x2 mesh, lose half the data
-groups, resume on 2x2 with the same logical state (subprocess, 8 devices).
-"""
-import os
-import subprocess
-import sys
-import textwrap
-
-SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import sys
-    import jax, numpy as np
-    from repro.configs.base import LMConfig, SpikingConfig
-    from repro.launch.train import train_loop
-    from repro.runtime.elastic import shrunk_mesh
-
-    cfg = LMConfig(name="elastic", family="dense", n_layers=2, d_model=64,
-                   n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
-                   spiking=SpikingConfig(t_steps=1), remat="none",
-                   loss_chunk=16)
-    d = sys.argv[1]
-    ax = (jax.sharding.AxisType.Auto,) * 2
-
-    mesh_a = jax.make_mesh((4, 2), ("data", "model"), axis_types=ax)
-    out1 = train_loop(cfg, steps=6, batch=8, seq=32, ckpt_dir=d,
-                      save_every=3, mesh=mesh_a, log_every=100)
-
-    # 2 of 4 data groups "fail": plan the shrink, rebuild, resume.
-    plan = shrunk_mesh((4, 2), ("data", "model"), n_failed_data_groups=2)
-    assert plan.mesh_shape == (2, 2) and plan.microbatch_scale == 2
-    mesh_b = jax.make_mesh(plan.mesh_shape, plan.axis_names,
-                           devices=jax.devices()[:4], axis_types=ax)
-    out2 = train_loop(cfg, steps=10, batch=8, seq=32, ckpt_dir=d,
-                      save_every=3, resume=True, mesh=mesh_b, log_every=100)
-    assert len(out2["losses"]) == 4            # resumed at step 6
-    assert np.isfinite(out2["final_loss"])
-    print("ELASTIC_E2E_OK", out1["final_loss"], out2["final_loss"])
-""")
+groups, resume on 2x2 with the same logical state (runs inside the shared
+8-host-device subprocess; see conftest.multidevice_run)."""
+import pytest
 
 
-def test_elastic_train_restart_smaller_mesh(tmp_path):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
-    r = subprocess.run([sys.executable, "-c", SCRIPT, str(tmp_path)],
-                       capture_output=True, text=True, env=env,
-                       cwd=os.path.dirname(os.path.dirname(
-                           os.path.abspath(__file__))),
-                       timeout=500)
-    assert "ELASTIC_E2E_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])
+@pytest.mark.slow
+def test_elastic_train_restart_smaller_mesh(multidevice_run):
+    multidevice_run.check("ELASTIC_E2E")

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import registry
-from repro.configs.base import CNNConfig
+from repro.configs.base import CNNConfig, SpikingConfig
 from repro.launch import steps as steps_mod
 from repro.models import cnn, lm, spikingformer
 from repro.optim import adamw
@@ -61,12 +61,12 @@ def test_arch_decode_step(arch, spiking):
     cfg = registry.get_reduced(arch)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     state = lm.init_decode_state(cfg, b=2, s=32, spiking=spiking)
-    step = steps_mod.make_serve_step(cfg, spiking)
+    step = jax.jit(steps_mod.make_serve_step(cfg, spiking))
     tok = jnp.array([1, 2], jnp.int32)
-    logits, state = jax.jit(step)(params, state, tok, jnp.int32(0))
+    logits, state = step(params, state, tok, jnp.int32(0))
     assert logits.shape == (2, cfg.vocab)
     assert bool(jnp.all(jnp.isfinite(logits)))
-    logits2, _ = jax.jit(step)(params, state, tok, jnp.int32(1))
+    logits2, _ = step(params, state, tok, jnp.int32(1))
     assert bool(jnp.all(jnp.isfinite(logits2)))
 
 
@@ -84,7 +84,8 @@ def test_arch_prefill(arch):
 
 # --------------------------------------------------- paper's own workloads
 def test_vgg11_smoke():
-    cfg = CNNConfig(name="vgg11", layers=cnn.VGG11_LAYERS)
+    cfg = CNNConfig(name="vgg11", layers=cnn.VGG11_LAYERS,
+                    spiking=SpikingConfig(t_steps=2))
     p = cnn.vgg11_init(cfg, jax.random.PRNGKey(0))
     x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
     logits, stats = cnn.vgg11_apply(cfg, p, x, collect_stats=True)
@@ -96,7 +97,8 @@ def test_vgg11_smoke():
 
 
 def test_resnet18_smoke():
-    cfg = CNNConfig(name="resnet18", layers=())
+    cfg = CNNConfig(name="resnet18", layers=(),
+                    spiking=SpikingConfig(t_steps=2))
     p = cnn.resnet18_init(cfg, jax.random.PRNGKey(0))
     x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
     logits = cnn.resnet18_apply(cfg, p, x)
@@ -106,7 +108,7 @@ def test_resnet18_smoke():
 
 def test_segnet_smoke():
     cfg = CNNConfig(name="segnet", layers=cnn.SEGNET_LAYERS, img=32,
-                    n_classes=2)
+                    n_classes=2, spiking=SpikingConfig(t_steps=2))
     p = cnn.segnet_init(cfg, jax.random.PRNGKey(0))
     x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
     out = cnn.segnet_apply(cfg, p, x)
@@ -119,6 +121,7 @@ def test_spikingformer_smoke(depth, dim):
     p = spikingformer.spikingformer_init(jax.random.PRNGKey(0), depth, dim,
                                          n_classes=10)
     x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3))
-    logits = spikingformer.spikingformer_apply(p, x)
+    logits = spikingformer.spikingformer_apply(
+        p, x, spiking_cfg=SpikingConfig(t_steps=2))
     assert logits.shape == (2, 10)
     assert bool(jnp.all(jnp.isfinite(logits)))

@@ -1,23 +1,18 @@
 """Beyond-paper optimization paths (§Perf): spec validity + equivalence."""
-import dataclasses
-import os
-import subprocess
-import sys
-import textwrap
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import registry
+from repro.launch.mesh import abstract_mesh
 from repro.models import lm, moe
 from repro.runtime import sharding
 
 
 def _mesh():
-    return AbstractMesh((16, 16), ("data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_tp2d_param_specs_valid():
@@ -70,47 +65,11 @@ def test_decode_dus_and_masked_update_agree():
                                   np.asarray(c2.k, np.float32))
 
 
-SHARD_MAP_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.models import moe
-
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    p = moe.moe_init(jax.random.PRNGKey(0), 32, 16, n_experts=8)
-    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32), jnp.float32)
-    ref = moe.moe_apply(p, x, top_k=2, capacity_factor=8.0)
-
-    with mesh, jax.sharding.set_mesh(mesh):
-        p_sh = jax.device_put(p, {
-            "router": NamedSharding(mesh, P(None, None)),
-            "w_gate": NamedSharding(mesh, P("model", None, None)),
-            "w_up": NamedSharding(mesh, P("model", None, None)),
-            "w_down": NamedSharding(mesh, P("model", None, None)),
-        })
-        xs = jax.device_put(x.reshape(64, 32).reshape(4, 16, 32),
-                            NamedSharding(mesh, P("data", None, None)))
-        out = jax.jit(lambda pp, xx: moe.moe_apply_shard_map(
-            pp, xx, top_k=2, capacity_factor=8.0))(p_sh, xs)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               atol=1e-4, rtol=1e-4)
-    print("SHARD_MAP_OK")
-""")
-
-
-def test_moe_shard_map_equivalence_multidevice():
+@pytest.mark.slow
+def test_moe_shard_map_equivalence_multidevice(multidevice_run):
     """Manual-EP shard_map MoE == GSPMD moe_apply on a real 2x4 mesh
-    (subprocess with 8 host devices)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
-    r = subprocess.run([sys.executable, "-c", SHARD_MAP_SCRIPT],
-                       capture_output=True, text=True, env=env,
-                       cwd=os.path.dirname(os.path.dirname(
-                           os.path.abspath(__file__))))
-    assert "SHARD_MAP_OK" in r.stdout, (r.stdout[-500:], r.stderr[-2000:])
+    (shared 8-host-device subprocess; see conftest.multidevice_run)."""
+    multidevice_run.check("SHARD_MAP")
 
 
 def test_moe_shard_map_falls_back_without_mesh():

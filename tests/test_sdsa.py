@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from hypothesis_compat import given, st
 
 from repro.core import sdsa
 

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from hypothesis_compat import given, st
 
 from repro.data import pipeline, synthetic
 from repro.optim import adamw, grad_compress, schedule
