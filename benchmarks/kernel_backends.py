@@ -26,10 +26,18 @@ _BENCH_SHAPES = {
     "sdsa": lambda key: (
         tuple((jax.random.uniform(k, (8, 128, 64)) < 0.3).astype("float32")
               for k in jax.random.split(key, 3)), {"mode": "or"}),
+    "causal_sdsa": lambda key: (
+        tuple((jax.random.uniform(k, (4, 2, 4, 128, 64)) < 0.3)
+              .astype("float32") for k in jax.random.split(key, 3)),
+        {"mode": "or"}),
     "econv": lambda key: (
         ((jax.random.uniform(key, (4, 32, 32, 16)) < 0.15).astype("float32"),
          jax.random.normal(jax.random.PRNGKey(1), (3, 3, 16, 32), "float32")),
         {}),
+    "tconv": lambda key: (
+        ((jax.random.uniform(key, (4, 16, 16, 32)) < 0.15).astype("float32"),
+         jax.random.normal(jax.random.PRNGKey(1), (3, 3, 32, 16), "float32")),
+        {"stride": 2}),
 }
 
 

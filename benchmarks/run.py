@@ -14,6 +14,15 @@ Backend sweeps (speedups are measured, not asserted):
 Each ``--backend`` value uses the EXSPIKE_BACKEND grammar (a backend name
 for all ops, or comma-separated ``op=backend`` entries) and reruns the
 selected suites with that routing; rows are prefixed ``<override>/``.
+Every sweep leads with a ``resolved_backends`` row recording the backend
+each op RESOLVES to under that override (post-fallback: an unknown or
+unsupported request degrades to ``ref``), so sweep results are
+attributable — the requested override alone is not trustworthy. The row
+reflects resolution on each op's canonical example shapes; a suite whose
+own shapes trip a per-call capability fallback additionally reports it
+via RuntimeWarning and the backends suite's per-row ``default=`` field.
+``--json PATH`` writes the same data structured: per sweep the requested
+override, the resolved per-op map, and the CSV rows.
 Only suites that route through the dispatch registry respond to the
 override — ``backends`` (every registered pair) and the model-driven
 suites whose spike collection runs registry ops; the paper-figure suites
@@ -53,6 +62,10 @@ def main() -> None:
     ap.add_argument("--backend", action="append", default=None,
                     help="EXSPIKE_BACKEND override to sweep; repeatable. "
                          "Each value reruns the suites under that routing.")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON: per sweep the "
+                         "requested override, the RESOLVED per-op backends "
+                         "(post-fallback), and the rows.")
     args = ap.parse_args()
 
     suites = _suites()
@@ -84,17 +97,32 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    report = []
     for override, prefix in sweeps:
         with _env_override(override):
+            # The attributable identity of this sweep: what each op
+            # actually resolves to under the override, post-fallback.
+            resolved = dispatch.resolved_backends()
+            print(prefix + "resolved_backends,0.0,"
+                  + ";".join(f"{op}={be}" for op, be in resolved.items()),
+                  flush=True)
+            rows = []
             for name, fn in suites:
                 try:
                     for row in fn():
+                        rows.append(row)
                         print(prefix + row, flush=True)
                 except Exception as e:
                     failures += 1
                     print(f"{prefix}{name}/ERROR,0.0,"
                           f"{type(e).__name__}:{e}", flush=True)
                     traceback.print_exc(file=sys.stderr)
+            report.append({"requested": override, "resolved": resolved,
+                           "rows": rows})
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({"sweeps": report}, f, indent=2)
     if failures:
         raise SystemExit(1)
 

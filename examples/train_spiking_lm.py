@@ -36,6 +36,9 @@ def main():
     n = lm.param_count(cfg)
     print(f"=== training {cfg.name}: {n/1e6:.0f}M params, spiking "
           f"(LIF tau=0.5, SDSA attention, T={cfg.spiking.t_steps}) ===")
+    # No EXSPIKE_BACKEND pin: every registry backend is differentiable
+    # (surrogate-gradient VJPs), so training resolves kernels per platform
+    # exactly like serving does.
     shutil.rmtree(args.ckpt_dir, ignore_errors=True)
 
     # Phase 1: train to 60% of budget, checkpointing every 25 steps.

@@ -108,6 +108,63 @@ def econv(s: jax.Array, w: jax.Array, stride: int = 1,
     return dispatch("econv", s, w, stride=stride, padding=padding)
 
 
+# ------------------------------------------------- transposed convolution
+def conv_transpose_ref(s: jax.Array, w: jax.Array, stride: int = 2,
+                       padding: str = "SAME") -> jax.Array:
+    """Transposed-conv oracle (the segmentation decoder's upsampling op;
+    `ref` backend of the `tconv` registry op). s: (N,H,W,Ci); w:
+    (kh,kw,Ci,Co) -> (N, H*stride, W*stride, Co) for SAME."""
+    return jax.lax.conv_transpose(
+        s, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_transpose_pads(k: int, stride: int, padding: str):
+    """lax.conv_transpose's padding arithmetic, reproduced for the explicit
+    zero-insertion forms (equality is covered by the parity harness)."""
+    import math
+    if padding == "SAME":
+        pad_len = k + stride - 2
+        pad_a = k - 1 if stride > k - 1 else int(math.ceil(pad_len / 2))
+    elif padding == "VALID":
+        pad_len = k + stride - 2 + max(k - stride, 0)
+        pad_a = k - 1
+    else:
+        raise ValueError(f"unsupported padding {padding!r}")
+    return pad_a, pad_len - pad_a
+
+
+def upsample_events(s: jax.Array, stride: int, kh: int, kw: int,
+                    padding: str) -> jax.Array:
+    """Zero-insert + pad so a stride-1 VALID conv equals the transposed
+    conv: events keep their binarity, only their spatial addresses dilate
+    (the event-driven view of fractional striding)."""
+    n, h, w_, ci = s.shape
+    up = jnp.zeros((n, (h - 1) * stride + 1, (w_ - 1) * stride + 1, ci),
+                   s.dtype)
+    up = up.at[:, ::stride, ::stride].set(s)
+    (pa, pb), (pc, pd) = (_conv_transpose_pads(k, stride, padding)
+                          for k in (kh, kw))
+    return jnp.pad(up, ((0, 0), (pa, pb), (pc, pd), (0, 0)))
+
+
+def conv_transpose_upsampled(s: jax.Array, w: jax.Array, stride: int = 2,
+                             padding: str = "SAME") -> jax.Array:
+    """`jnp` backend of `tconv`: explicit zero-insertion, then a plain
+    stride-1 VALID conv — numerically identical to the oracle, and the
+    intermediate stays binary for binary inputs."""
+    up = upsample_events(s, stride, w.shape[0], w.shape[1], padding)
+    return jax.lax.conv_general_dilated(
+        up, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv_transpose(s: jax.Array, w: jax.Array, stride: int = 2,
+                   padding: str = "SAME") -> jax.Array:
+    """Transposed conv routed through the backend registry (`tconv` op)."""
+    from repro.kernels.dispatch import dispatch   # lazy: no import cycle
+    return dispatch("tconv", s, w, stride=stride, padding=padding)
+
+
 def econv_gather(s: jax.Array, w: jax.Array) -> jax.Array:
     """Dense event-form: same per-position accumulation order as Algorithm 1
     (loop over positions, accumulate active channels' weight patches) but

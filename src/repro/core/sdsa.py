@@ -67,6 +67,67 @@ def sdsa(q: jax.Array, k: jax.Array, v: jax.Array, mode: str = "or") -> jax.Arra
     return dispatch("sdsa", q, k, v, mode=mode)
 
 
+def causal_sdsa_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    mode: str = "or") -> jax.Array:
+    """Causal (LM) SDSA — the `ref` oracle of the `causal_sdsa` registry op.
+
+    q, k, v: (T, ..., N, d) binary spikes with T the micro-timestep axis
+    and N the token axis. The kv mask first pools over micro-steps, then
+    status[i] accumulates causally over tokens j <= i (paper Fig. 6,
+    causal form for LMs):
+
+      mode="or":  status = cumOR  (cummax on {0,1});  out = Q AND status
+      mode="sum": status = cumsum of event counts;    out = Q * status
+
+    The token-by-token streaming form (`sdsa_decode_update` /
+    `attention_sdsa_decode`) is property-equal: prefix-OR/sum is exactly
+    the fold of per-token updates.
+    """
+    kv = k * v                                     # AND   (T, ..., N, d)
+    if mode == "or":
+        phase = jnp.max(kv, axis=0)                # OR over micro-steps
+        status = jax.lax.cummax(phase, axis=phase.ndim - 2)  # prefix-OR
+
+    elif mode == "sum":
+        phase = jnp.sum(kv, axis=0)
+        status = jnp.cumsum(phase, axis=-2)
+    else:
+        raise ValueError(f"unknown SDSA mode: {mode}")
+    return q * status[None]
+
+
+def causal_sdsa_packed_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           mode: str = "or") -> jax.Array:
+    """Bit-packed pure-jnp causal SDSA (uint32 word semantics, no Pallas):
+    pack -> AND -> OR-fold T -> associative prefix-OR -> AND -> unpack."""
+    del mode                                       # "or" only (supports-gated)
+    from .spikes import PACK, pack_spikes, unpack_spikes
+    t = q.shape[0]
+    lead, (n, d) = q.shape[1:-2], q.shape[-2:]
+    pad = (-d) % PACK
+
+    def prep(x):
+        x = x.reshape(t, -1, n, d)
+        return pack_spikes(jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad))),
+                           axis=-1)
+
+    qp, kp, vp = prep(q), prep(k), prep(v)
+    kv = jax.lax.reduce(kp & vp, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+    status = jax.lax.associative_scan(jnp.bitwise_or, kv, axis=-2)
+    out = unpack_spikes(qp & status[None], axis=-1, dtype=q.dtype)[..., :d]
+    return out.reshape((t,) + lead + (n, d))
+
+
+def causal_sdsa(q: jax.Array, k: jax.Array, v: jax.Array,
+                mode: str = "or") -> jax.Array:
+    """Causal SDSA routed through the backend registry (`kernels.dispatch`).
+
+    q, k, v: (T, ..., N, d) binary spikes -> (T, ..., N, d).
+    """
+    from repro.kernels.dispatch import dispatch   # lazy: no import cycle
+    return dispatch("causal_sdsa", q, k, v, mode=mode)
+
+
 def sdsa_decode_init(head_shape: tuple, mode: str = "or", dtype=jnp.float32) -> jax.Array:
     """Initial streaming state: zeros(..., d)."""
     del mode

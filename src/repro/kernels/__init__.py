@@ -3,28 +3,40 @@
 Kernels (each with a pure-jnp oracle in ref.py and a jit'd shape-agnostic
 wrapper in ops.py; interpret=True on CPU, compiled on TPU):
 
-  lif_scan      — fused temporal LIF (membrane resident in VMEM)
+  lif_scan      — fused temporal LIF (membrane resident in VMEM), with a
+                  reversed-scan surrogate-gradient backward kernel
   sdsa_kernel   — bit-packed Attention Core stages (AND / column-OR / AND)
+                  + the causal prefix-OR status kernel (LM form)
   spike_matmul  — occupancy-skipping event matmul (AER-FIFO tile analog)
   apec_kernel   — packed overlap/residual extraction (Fig. 5)
 
 Backend registry (`dispatch.py`) — every hot-path op routes through one
-switchboard so kernels are drop-in registrations, parity-tested the moment
-they register (tests/test_dispatch_parity.py):
+switchboard so kernels are drop-in registrations, parity-tested (forward
+AND gradient) the moment they register (tests/test_dispatch_parity.py):
 
   op            backends (default first)           constraints
   ------------  ---------------------------------  --------------------------
-  lif_scan      cpu: ref · tpu: pallas             pallas = hard Heaviside
-                (+ pallas-interpret, manual)         (no surrogate grad —
-                                                      train with ref)
+  lif_scan      cpu: ref · tpu: pallas             pallas bwd = reversed-scan
+                (+ pallas-interpret, manual)         ATan surrogate kernel
   spike_matmul  cpu: ref · tpu: pallas             —
                 (+ jnp tile-masked, manual)
   apec_matmul   jnp (overlap-reuse) · tpu: pallas  P % g == 0, else -> ref
                 (+ ref = dense s @ w)
   sdsa          cpu: ref · tpu: pallas             packed paths: mode="or"
                 (+ jnp bit-packed, manual)           only, else -> ref
+  causal_sdsa   cpu: ref (cummax) · tpu: pallas    packed paths: mode="or"
+                (+ jnp packed prefix-OR, manual)     only, else -> ref
   econv         cpu: ref (TConv) · tpu: pallas     jnp scatter: odd kernel,
                 (+ jnp event scatter, manual)        stride 1, SAME
+  tconv         cpu: ref (conv_transpose)          transposed conv (decoder
+                · tpu: pallas (dilate+im2col)        upsampling); SAME/VALID
+                (+ jnp zero-insertion, manual)
+
+Every registered backend is differentiable with ref-matching surrogate
+gradients (see dispatch.register's ``differentiable``/``vjp`` contract and
+src/repro/kernels/README.md), so the train loop resolves backends exactly
+like inference — the old ``EXSPIKE_BACKEND=lif_scan=ref`` training pin is
+gone.
 
 Override with the ``EXSPIKE_BACKEND`` env var — a single backend name
 applies to all ops (``EXSPIKE_BACKEND=ref``), and ``op=backend`` entries
@@ -36,11 +48,13 @@ RuntimeWarning instead of erroring. ``benchmarks/run.py --backend``
 sweeps backends so speedups are measured, not asserted.
 """
 from . import dispatch, ops, ref
-from .lif_scan import lif_scan_pallas
-from .sdsa_kernel import sdsa_apply_pallas, sdsa_packed, sdsa_status_pallas
+from .lif_scan import lif_scan_pallas, lif_scan_pallas_sg
+from .sdsa_kernel import (sdsa_apply_pallas, sdsa_causal_status_pallas,
+                          sdsa_packed, sdsa_status_pallas)
 from .spike_matmul import spike_matmul_pallas
 
 __all__ = [
-    "dispatch", "ops", "ref", "lif_scan_pallas", "sdsa_apply_pallas",
-    "sdsa_packed", "sdsa_status_pallas", "spike_matmul_pallas",
+    "dispatch", "ops", "ref", "lif_scan_pallas", "lif_scan_pallas_sg",
+    "sdsa_apply_pallas", "sdsa_causal_status_pallas", "sdsa_packed",
+    "sdsa_status_pallas", "spike_matmul_pallas",
 ]

@@ -8,11 +8,31 @@ TPU, interpret mode on CPU). This module is the single switchboard:
 
   op          backends                         notes
   ----------  -------------------------------  ---------------------------
-  lif_scan    ref | pallas-interpret | pallas  ref keeps surrogate grads
+  lif_scan    ref | pallas-interpret | pallas  pallas: fused fwd + reversed-
+                                               scan surrogate bwd kernels
   spike_matmul ref | jnp | pallas-interpret | pallas
   apec_matmul ref | jnp | pallas-interpret | pallas   jnp is the default
   sdsa        ref | jnp | pallas-interpret | pallas   packed paths: mode=or
+  causal_sdsa ref | jnp | pallas-interpret | pallas   packed paths: mode=or
   econv       ref | jnp | pallas-interpret | pallas   jnp = event scatter
+  tconv       ref | jnp | pallas-interpret | pallas   transposed conv
+                                               (decoder upsampling)
+
+Every backend above is *differentiable*: `jax.grad` through `dispatch(...)`
+produces the same surrogate-gradient cotangents as the `ref` oracle on any
+resolved backend, so training never needs a backend pin. The registration
+contract (see `register`) is one of:
+
+  * ``differentiable=True`` — the fn is natively differentiable with
+    ref-matching gradients (jnp oracles, custom_vjp'd kernels like the
+    fused LIF);
+  * ``vjp="ref"`` — the fn is wrapped in a `jax.custom_vjp` whose backward
+    replays the ref oracle's VJP on the saved inputs (grad parity by
+    construction; used for bit-packed / scatter paths whose natural
+    gradients would be zero or tie-broken differently);
+  * ``vjp=<callable>`` — an explicit backward rule
+    ``(saved_args, kwargs, cotangent) -> grads`` (used for the matmul-form
+    ops, where the transpose rule is cheaper than a ref replay).
 
 Selection order per call:
   1. explicit override — `use_backend(...)` context or the
@@ -65,6 +85,7 @@ class Backend:
     priority: int = 0
     auto: bool = True
     supports: Optional[Callable[..., Optional[str]]] = None
+    differentiable: bool = False
 
     def unsupported_reason(self, *args, **kwargs) -> Optional[str]:
         platform = jax.default_backend()
@@ -92,15 +113,69 @@ def register_op(name: str, make_example) -> None:
         _REGISTRY[name] = OpSpec(name=name, make_example=make_example)
 
 
+def _wrap_vjp(op: str, fn, rule):
+    """Make `fn` differentiable under a custom backward rule.
+
+    rule="ref": backward replays the ref oracle's VJP on the saved primal
+    inputs — gradient parity with ref by construction, at the cost of one
+    ref forward inside backward (cheap for the logic-form ops this is used
+    on). rule=callable: explicit ``(saved_args, kwargs, g) -> grads``.
+    kwargs are closed over (non-differentiable statics: mode, g, stride).
+    """
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        @jax.custom_vjp
+        def inner(*a):
+            return fn(*a, **kwargs)
+
+        def inner_fwd(*a):
+            return fn(*a, **kwargs), a
+
+        if rule == "ref":
+            def inner_bwd(res, g):
+                ref_fn = _REGISTRY[op].backends[REF].fn
+                _, pull = jax.vjp(lambda *a: ref_fn(*a, **kwargs), *res)
+                return pull(g)
+        else:
+            def inner_bwd(res, g):
+                return tuple(rule(res, kwargs, g))
+
+        inner.defvjp(inner_fwd, inner_bwd)
+        return inner(*args)
+    return wrapper
+
+
+def _matmul_bwd(res, kwargs, g):
+    """Transpose rule for ops whose math is `out = s @ w` with optional
+    leading batch axes on s (spike_matmul, apec_matmul): ds = g @ w.T,
+    dw = sum over rows of s^T g — the ref oracle's exact cotangents."""
+    del kwargs
+    s, w = res
+    gf = g.astype(jnp.float32)
+    ds = jnp.matmul(gf, w.astype(jnp.float32).T).astype(s.dtype)
+    dw = jnp.einsum("...mk,...mn->kn", s.astype(jnp.float32), gf).astype(w.dtype)
+    return ds, dw
+
+
 def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
-             auto=True, supports=None):
-    """Decorator: register `fn` as backend `name` for `op`."""
+             auto=True, supports=None, differentiable=False, vjp=None):
+    """Decorator: register `fn` as backend `name` for `op`.
+
+    Gradient contract: pass ``differentiable=True`` when `jax.grad`
+    through `fn` natively matches the ref oracle's (surrogate) gradients,
+    or ``vjp="ref"`` / ``vjp=<callable>`` to wrap `fn` in a custom_vjp
+    (see `_wrap_vjp`) — wrapped backends are differentiable by definition.
+    Declared pairs are grad-parity-tested against ref by
+    tests/test_dispatch_parity.py automatically.
+    """
     def deco(fn):
         if op not in _REGISTRY:
             raise KeyError(f"unknown op {op!r}; register_op it first")
+        wrapped = _wrap_vjp(op, fn, vjp) if vjp is not None else fn
         _REGISTRY[op].backends[name] = Backend(
-            name=name, fn=fn, platforms=tuple(platforms), priority=priority,
-            auto=auto, supports=supports)
+            name=name, fn=wrapped, platforms=tuple(platforms),
+            priority=priority, auto=auto, supports=supports,
+            differentiable=differentiable or vjp is not None)
         return fn
     return deco
 
@@ -125,6 +200,12 @@ def get_backend(op: str, name: str) -> Backend:
 def example_inputs(op: str, key: jax.Array) -> Tuple[tuple, dict]:
     """Small CPU-friendly (args, kwargs) for the parity harness."""
     return _REGISTRY[op].make_example(key)
+
+
+def differentiable_backend_names(op: str) -> Tuple[str, ...]:
+    """Backends of `op` declaring the gradient contract (grad-parity set)."""
+    return tuple(n for n, b in _REGISTRY[op].backends.items()
+                 if b.differentiable)
 
 
 # -------------------------------------------------------------- overrides
@@ -250,11 +331,13 @@ def resolved_backends() -> Dict[str, str]:
 
 
 def table() -> str:
-    """Human-readable registry dump (debugging / REPL aid)."""
+    """Human-readable registry dump with the grad-capability column
+    (debugging / REPL aid; printed by the CI `dispatch table` check)."""
     lines = []
     for op, spec in _REGISTRY.items():
         bes = ", ".join(
-            f"{b.name}(p{b.priority}{'' if b.auto else ',manual'})"
+            f"{b.name}(p{b.priority}{'' if b.auto else ',manual'}"
+            f"{',grad' if b.differentiable else ''})"
             for b in sorted(spec.backends.values(), key=lambda b: -b.priority))
         lines.append(f"{op:14s} -> {bes}")
     return "\n".join(lines)
@@ -272,7 +355,7 @@ def _lif_example(key):
 register_op("lif_scan", _lif_example)
 
 
-@register("lif_scan", REF, priority=0)
+@register("lif_scan", REF, priority=0, differentiable=True)
 def _lif_ref(x, *, decay=0.5, v_th=1.0, soft_reset=True,
              surrogate_alpha=2.0):
     from repro.core.lif import LIFConfig, lif_scan
@@ -283,15 +366,18 @@ def _lif_ref(x, *, decay=0.5, v_th=1.0, soft_reset=True,
 
 def _lif_pallas(x, *, decay=0.5, v_th=1.0, soft_reset=True,
                 surrogate_alpha=2.0):
-    # Hard-Heaviside kernel: forward-exact vs ref; no surrogate gradient.
-    del surrogate_alpha
+    # Fused kernel pair: forward-exact vs ref, and `jax.grad` runs the
+    # reversed-scan Pallas kernel with the ATan surrogate (kernels/lif_scan
+    # custom_vjp) — TPU training no longer pins lif_scan=ref.
     from repro.kernels import ops
-    return ops.lif(x, decay=decay, v_th=v_th, soft_reset=soft_reset)
+    return ops.lif(x, decay=decay, v_th=v_th, soft_reset=soft_reset,
+                   surrogate_alpha=surrogate_alpha)
 
 
 register("lif_scan", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False)(_lif_pallas)
-register("lif_scan", "pallas", platforms=("tpu",), priority=20)(_lif_pallas)
+         auto=False, differentiable=True)(_lif_pallas)
+register("lif_scan", "pallas", platforms=("tpu",), priority=20,
+         differentiable=True)(_lif_pallas)
 
 
 # --------------------------------------------------------- spike_matmul
@@ -305,12 +391,12 @@ def _spike_matmul_example(key):
 register_op("spike_matmul", _spike_matmul_example)
 
 
-@register("spike_matmul", REF, priority=0)
+@register("spike_matmul", REF, priority=0, differentiable=True)
 def _spike_matmul_ref(s, w):
     return jnp.dot(s, w, preferred_element_type=jnp.float32).astype(w.dtype)
 
 
-@register("spike_matmul", "jnp", priority=5, auto=False)
+@register("spike_matmul", "jnp", priority=5, auto=False, vjp=_matmul_bwd)
 def _spike_matmul_jnp(s, w, block_m: int = 8, block_k: int = 32):
     """Tile-masked jnp emulation of the occupancy-skipping kernel: per-tile
     partial products are gated by the same occupancy map the Pallas kernel
@@ -338,9 +424,9 @@ def _spike_matmul_pallas(s, w):
 
 
 register("spike_matmul", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False)(_spike_matmul_pallas)
+         auto=False, vjp=_matmul_bwd)(_spike_matmul_pallas)
 register("spike_matmul", "pallas", platforms=("tpu",),
-         priority=20)(_spike_matmul_pallas)
+         priority=20, vjp=_matmul_bwd)(_spike_matmul_pallas)
 
 
 # ---------------------------------------------------------- apec_matmul
@@ -361,14 +447,18 @@ def _apec_divisibility(s, w, *, g=2) -> Optional[str]:
     return None
 
 
-@register("apec_matmul", REF, priority=0)
+@register("apec_matmul", REF, priority=0, differentiable=True)
 def _apec_matmul_ref(s, w, *, g=2):
     del g    # the oracle is the plain dense accumulation s @ w
     return jnp.dot(s.astype(jnp.float32),
                    w.astype(jnp.float32)).astype(w.dtype)
 
 
-@register("apec_matmul", "jnp", priority=10, supports=_apec_divisibility)
+# The overlap/residual decomposition equals s @ w in value but not under
+# autodiff (min() tie-breaking would split cotangents across group
+# members), so the explicit transpose rule supplies the exact gradients.
+@register("apec_matmul", "jnp", priority=10, supports=_apec_divisibility,
+          vjp=_matmul_bwd)
 def _apec_matmul_jnp(s, w, *, g=2):
     from repro.core.apec import apec_matmul_jnp
     return apec_matmul_jnp(s, w, g)
@@ -380,9 +470,10 @@ def _apec_matmul_pallas(s, w, *, g=2):
 
 
 register("apec_matmul", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False, supports=_apec_divisibility)(_apec_matmul_pallas)
+         auto=False, supports=_apec_divisibility,
+         vjp=_matmul_bwd)(_apec_matmul_pallas)
 register("apec_matmul", "pallas", platforms=("tpu",), priority=20,
-         supports=_apec_divisibility)(_apec_matmul_pallas)
+         supports=_apec_divisibility, vjp=_matmul_bwd)(_apec_matmul_pallas)
 
 
 # ------------------------------------------------------------------ sdsa
@@ -403,13 +494,16 @@ def _sdsa_or_only(q, k, v, *, mode="or") -> Optional[str]:
     return None
 
 
-@register("sdsa", REF, priority=0)
+@register("sdsa", REF, priority=0, differentiable=True)
 def _sdsa_ref(q, k, v, *, mode="or"):
     from repro.core.sdsa import sdsa_jnp
     return sdsa_jnp(q, k, v, mode=mode)
 
 
-@register("sdsa", "jnp", priority=5, auto=False, supports=_sdsa_or_only)
+# Bitwise paths have no gradient at all (uint32 words); vjp="ref" replays
+# the oracle's VJP, preserving its max-tie cotangent splitting.
+@register("sdsa", "jnp", priority=5, auto=False, supports=_sdsa_or_only,
+          vjp="ref")
 def _sdsa_packed_jnp(q, k, v, *, mode="or"):
     """Bit-packed pure-jnp path (the kernels' uint32 semantics without
     Pallas): pack -> AND / column-OR / AND -> unpack."""
@@ -435,9 +529,52 @@ def _sdsa_pallas(q, k, v, *, mode="or"):
 
 
 register("sdsa", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False, supports=_sdsa_or_only)(_sdsa_pallas)
+         auto=False, supports=_sdsa_or_only, vjp="ref")(_sdsa_pallas)
 register("sdsa", "pallas", platforms=("tpu",), priority=20,
-         supports=_sdsa_or_only)(_sdsa_pallas)
+         supports=_sdsa_or_only, vjp="ref")(_sdsa_pallas)
+
+
+# ----------------------------------------------------------- causal_sdsa
+def _causal_sdsa_example(key):
+    ks = jax.random.split(key, 3)
+    q, k, v = ((jax.random.uniform(kk, (2, 2, 2, 12, 40)) < 0.4)
+               .astype(jnp.float32) for kk in ks)
+    return (q, k, v), {"mode": "or"}
+
+
+register_op("causal_sdsa", _causal_sdsa_example)
+
+
+def _causal_or_only(q, k, v, *, mode="or") -> Optional[str]:
+    del q, k, v
+    if mode != "or":
+        return f"packed causal path supports mode='or' only, got {mode!r}"
+    return None
+
+
+@register("causal_sdsa", REF, priority=0, differentiable=True)
+def _causal_sdsa_ref(q, k, v, *, mode="or"):
+    from repro.core.sdsa import causal_sdsa_jnp
+    return causal_sdsa_jnp(q, k, v, mode=mode)
+
+
+@register("causal_sdsa", "jnp", priority=5, auto=False,
+          supports=_causal_or_only, vjp="ref")
+def _causal_sdsa_packed(q, k, v, *, mode="or"):
+    from repro.core.sdsa import causal_sdsa_packed_jnp
+    return causal_sdsa_packed_jnp(q, k, v, mode=mode)
+
+
+def _causal_sdsa_pallas(q, k, v, *, mode="or"):
+    del mode
+    from repro.kernels import ops
+    return ops.causal_sdsa_or(q, k, v)
+
+
+register("causal_sdsa", "pallas-interpret", platforms=("cpu",), priority=1,
+         auto=False, supports=_causal_or_only, vjp="ref")(_causal_sdsa_pallas)
+register("causal_sdsa", "pallas", platforms=("tpu",), priority=20,
+         supports=_causal_or_only, vjp="ref")(_causal_sdsa_pallas)
 
 
 # ----------------------------------------------------------------- econv
@@ -461,14 +598,16 @@ def _econv_scatter_supports(s, w, *, stride=1, padding="SAME"):
     return None
 
 
-@register("econv", REF, priority=0)
+@register("econv", REF, priority=0, differentiable=True)
 def _econv_ref(s, w, *, stride=1, padding="SAME"):
     from repro.core.econv import tconv
     return tconv(s, w, stride=stride, padding=padding)
 
 
+# Event extraction (nonzero) + fori scatter has no reverse-mode path;
+# vjp="ref" replays the dense conv's VJP instead.
 @register("econv", "jnp", priority=5, auto=False,
-          supports=_econv_scatter_supports)
+          supports=_econv_scatter_supports, vjp="ref")
 def _econv_scatter(s, w, *, stride=1, padding="SAME"):
     del stride, padding
     from repro.core.econv import econv_scatter
@@ -492,8 +631,73 @@ def _econv_pallas(s, w, *, stride=1, padding="SAME"):
 
 
 register("econv", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False)(_econv_pallas)
-register("econv", "pallas", platforms=("tpu",), priority=20)(_econv_pallas)
+         auto=False, vjp="ref")(_econv_pallas)
+register("econv", "pallas", platforms=("tpu",), priority=20,
+         vjp="ref")(_econv_pallas)
+
+
+# ----------------------------------------------------------------- tconv
+# NOTE on naming: in this repo "TConv" (econv's ref backend) is the
+# traditional *forward* conv baseline of paper Fig. 1; the `tconv` op here
+# is the *transposed* conv — the segmentation decoder's upsampling layers
+# (SegNet 16TC3/2TC3) — promoted from inline lax.conv_transpose calls in
+# models/cnn.py into a registry op.
+def _tconv_example(key):
+    k1, k2 = jax.random.split(key)
+    s = (jax.random.uniform(k1, (2, 6, 6, 5)) < 0.3).astype(jnp.float32)
+    w = jax.random.normal(k2, (3, 3, 5, 4), jnp.float32)
+    return (s, w), {"stride": 2, "padding": "SAME"}
+
+
+register_op("tconv", _tconv_example)
+
+
+def _tconv_pad_supports(s, w, *, stride=2, padding="SAME") -> Optional[str]:
+    del s, w
+    if padding not in ("SAME", "VALID"):
+        return f"upsample form supports SAME/VALID, got {padding!r}"
+    if stride < 1:
+        return f"stride must be >= 1, got {stride}"
+    return None
+
+
+@register("tconv", REF, priority=0, differentiable=True)
+def _tconv_ref(s, w, *, stride=2, padding="SAME"):
+    from repro.core.econv import conv_transpose_ref
+    return conv_transpose_ref(s, w, stride=stride, padding=padding)
+
+
+# Zero-insertion + stride-1 conv: same linear map as the oracle, so its
+# native autodiff cotangents coincide with ref's.
+@register("tconv", "jnp", priority=5, auto=False,
+          supports=_tconv_pad_supports, differentiable=True)
+def _tconv_upsampled(s, w, *, stride=2, padding="SAME"):
+    from repro.core.econv import conv_transpose_upsampled
+    return conv_transpose_upsampled(s, w, stride=stride, padding=padding)
+
+
+def _tconv_pallas(s, w, *, stride=2, padding="SAME"):
+    """Zero-insert (events keep binarity, addresses dilate), then im2col +
+    the occupancy-skipping spike matmul — the MXU form of the decoder's
+    upsampling conv, mirroring `_econv_pallas`."""
+    from repro.core.econv import upsample_events
+    from repro.kernels import ops
+    kh, kw, ci, co = w.shape
+    up = upsample_events(s, stride, kh, kw, padding)
+    patches = jax.lax.conv_general_dilated_patches(
+        up, (kh, kw), (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    n, ho, wo, _ = patches.shape
+    w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(ci * kh * kw, co)
+    out = ops.spike_matmul(patches.reshape(n * ho * wo, -1),
+                           w2.astype(jnp.float32))
+    return out.reshape(n, ho, wo, co)
+
+
+register("tconv", "pallas-interpret", platforms=("cpu",), priority=1,
+         auto=False, supports=_tconv_pad_supports, vjp="ref")(_tconv_pallas)
+register("tconv", "pallas", platforms=("tpu",), priority=20,
+         supports=_tconv_pad_supports, vjp="ref")(_tconv_pallas)
 
 
 # --------------------------------------------------- dispatch entry points
@@ -514,5 +718,13 @@ def sdsa(q, k, v, *, mode="or"):
     return dispatch("sdsa", q, k, v, mode=mode)
 
 
+def causal_sdsa(q, k, v, *, mode="or"):
+    return dispatch("causal_sdsa", q, k, v, mode=mode)
+
+
 def econv(s, w, *, stride=1, padding="SAME"):
     return dispatch("econv", s, w, stride=stride, padding=padding)
+
+
+def tconv(s, w, *, stride=2, padding="SAME"):
+    return dispatch("tconv", s, w, stride=stride, padding=padding)

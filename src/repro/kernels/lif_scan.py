@@ -11,10 +11,21 @@ Grid: (M/bm, N/bn) over the flattened neuron axes; each program owns a
 membrane potential. VPU-aligned blocks: bm multiple of 8, bn multiple of
 128. HBM traffic: read T*bm*bn once, write T*bm*bn once — the membrane
 state never leaves VMEM.
+
+Training: `lif_scan_pallas_sg` is the differentiable form. Its forward
+kernel additionally emits the pre-threshold membrane residuals V (the
+values the surrogate derivative is evaluated at), and its backward is a
+second Pallas kernel running the temporal scan in REVERSE with the ATan
+surrogate of `core/surrogate.py` — the cotangent of the carried membrane
+stays resident in VMEM exactly like the membrane does in forward. The
+gradient matches `jax.grad` through `core.lif.lif_scan` (the ref oracle)
+to float32 round-off, so TPU training no longer needs to pin
+``EXSPIKE_BACKEND=lif_scan=ref``.
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -70,3 +81,134 @@ def lif_scan_pallas(
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x)
+
+
+# ---------------------------------------------------- differentiable form
+def _lif_fwd_kernel(x_ref, s_ref, vres_ref, v_ref, *, t_steps: int,
+                    decay: float, v_th: float, soft_reset: bool):
+    """Forward scan that also emits the pre-reset membrane V[t] (the value
+    the Heaviside — and hence the surrogate derivative — is evaluated at)."""
+    v_ref[...] = jnp.zeros_like(v_ref)
+
+    def body(t, _):
+        v = v_ref[...] * decay + x_ref[t].astype(jnp.float32)
+        s = (v >= v_th).astype(jnp.float32)
+        vres_ref[t] = v
+        if soft_reset:
+            v_ref[...] = v - s * v_th
+        else:
+            v_ref[...] = v * (1.0 - s)
+        s_ref[t] = s.astype(s_ref.dtype)
+        return ()
+
+    jax.lax.fori_loop(0, t_steps, body, ())
+
+
+def _lif_bwd_kernel(vres_ref, g_ref, dx_ref, u_ref, *, t_steps: int,
+                    decay: float, v_th: float, soft_reset: bool,
+                    surrogate_alpha: float):
+    """Reversed temporal scan: u_ref carries the cotangent of the membrane
+    state (the VMEM-resident mirror of forward's v_ref).
+
+    Per step, with sg = ATan'(V[t] - v_th) and gs = cotangent of S[t]:
+      dL/dV[t]  = gs * sg + u * d(reset)/dV
+      d(reset)/dV = 1 - v_th*sg          (soft: v' = V - S*v_th)
+                  = (1 - S) - V*sg       (hard: v' = V * (1 - S))
+      dX[t]     = dL/dV[t];   u <- decay * dL/dV[t]
+    matching jax.grad through core.lif.lif_scan term by term.
+    """
+    u_ref[...] = jnp.zeros_like(u_ref)
+    half_pi_alpha = 0.5 * math.pi * surrogate_alpha
+
+    def body(i, _):
+        t = t_steps - 1 - i
+        v = vres_ref[t]
+        sg = surrogate_alpha / 2.0 / (1.0 + (half_pi_alpha * (v - v_th)) ** 2)
+        gs = g_ref[t].astype(jnp.float32)
+        if soft_reset:
+            dreset = 1.0 - v_th * sg
+        else:
+            s = (v >= v_th).astype(jnp.float32)
+            dreset = (1.0 - s) - v * sg
+        dv = gs * sg + u_ref[...] * dreset
+        dx_ref[t] = dv.astype(dx_ref.dtype)
+        u_ref[...] = decay * dv
+        return ()
+
+    jax.lax.fori_loop(0, t_steps, body, ())
+
+
+def _lif_fwd_pallas(x, *, decay, v_th, soft_reset, block_m, block_n):
+    interpret = jax.default_backend() == "cpu"
+    t_steps, m, n = x.shape
+    if m % block_m or n % block_n:
+        raise ValueError(f"(M,N)=({m},{n}) must tile by ({block_m},{block_n})")
+    kernel = functools.partial(
+        _lif_fwd_kernel, t_steps=t_steps, decay=decay, v_th=v_th,
+        soft_reset=soft_reset)
+    spec = pl.BlockSpec((t_steps, block_m, block_n), lambda i, j: (0, i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[spec],
+        out_specs=(spec, spec),
+        out_shape=(jax.ShapeDtypeStruct(x.shape, x.dtype),
+                   jax.ShapeDtypeStruct(x.shape, jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def _lif_bwd_pallas(vres, g, *, decay, v_th, soft_reset, surrogate_alpha,
+                    block_m, block_n):
+    interpret = jax.default_backend() == "cpu"
+    t_steps, m, n = vres.shape
+    kernel = functools.partial(
+        _lif_bwd_kernel, t_steps=t_steps, decay=decay, v_th=v_th,
+        soft_reset=soft_reset, surrogate_alpha=surrogate_alpha)
+    spec = pl.BlockSpec((t_steps, block_m, block_n), lambda i, j: (0, i, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(vres, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def lif_scan_pallas_sg(x, decay: float = 0.5, v_th: float = 1.0,
+                       soft_reset: bool = True, surrogate_alpha: float = 2.0,
+                       block_m: int = 8, block_n: int = 128):
+    """Differentiable fused LIF: Pallas forward, Pallas surrogate backward.
+
+    x: (T, M, N) membrane drive -> binary spikes (T, M, N). Forward output
+    is bit-identical to `lif_scan_pallas`; `jax.grad` runs the reversed-
+    scan kernel with the ATan surrogate (SpikingJelly convention), matching
+    the ref oracle `core.lif.lif_scan`. The primal runs the plain forward
+    kernel — the f32 membrane-residual write only happens under autodiff
+    (custom_vjp fwd), so inference pays nothing for differentiability.
+    """
+    return lif_scan_pallas(x, decay=decay, v_th=v_th, soft_reset=soft_reset,
+                           block_m=block_m, block_n=block_n)
+
+
+def _sg_fwd(x, decay, v_th, soft_reset, surrogate_alpha, block_m, block_n):
+    s, vres = _lif_fwd_pallas(x, decay=decay, v_th=v_th,
+                              soft_reset=soft_reset, block_m=block_m,
+                              block_n=block_n)
+    return s, vres
+
+
+def _sg_bwd(decay, v_th, soft_reset, surrogate_alpha, block_m, block_n,
+            vres, g):
+    dx = _lif_bwd_pallas(vres, g, decay=decay, v_th=v_th,
+                         soft_reset=soft_reset,
+                         surrogate_alpha=surrogate_alpha,
+                         block_m=block_m, block_n=block_n)
+    return (dx,)
+
+
+lif_scan_pallas_sg.defvjp(_sg_fwd, _sg_bwd)

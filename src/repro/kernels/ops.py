@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.spikes import PACK, pack_spikes, unpack_spikes
-from .lif_scan import lif_scan_pallas
-from .sdsa_kernel import sdsa_packed, sdsa_status_pallas
+from .lif_scan import lif_scan_pallas_sg
+from .sdsa_kernel import (sdsa_causal_status_pallas, sdsa_packed,
+                          sdsa_status_pallas)
 from .spike_matmul import spike_matmul_pallas
 
 
@@ -28,20 +29,25 @@ def _pad_to(x: jax.Array, axis: int, mult: int):
     return jnp.pad(x, widths), size
 
 
-@functools.partial(jax.jit, static_argnames=("decay", "v_th", "soft_reset"))
+@functools.partial(jax.jit, static_argnames=("decay", "v_th", "soft_reset",
+                                              "surrogate_alpha"))
 def lif(x: jax.Array, decay: float = 0.5, v_th: float = 1.0,
-        soft_reset: bool = True) -> jax.Array:
-    """Fused LIF over leading time axis, any trailing shape."""
+        soft_reset: bool = True, surrogate_alpha: float = 2.0) -> jax.Array:
+    """Fused LIF over leading time axis, any trailing shape.
+
+    Differentiable: routes through `lif_scan_pallas_sg`, whose backward is
+    the reversed-scan Pallas kernel with the ATan surrogate. Padding /
+    reshape around the kernel are native jax ops, so `jax.grad` composes.
+    """
     t = x.shape[0]
     rest = x.shape[1:]
     flat = x.reshape(t, -1)
-    total = flat.shape[1]
     # Fold into (T, M, N) with N a lane multiple.
     n = 128
     flat, orig = _pad_to(flat, 1, n * 8)
     m = flat.shape[1] // n
-    out = lif_scan_pallas(flat.reshape(t, m, n), decay=decay, v_th=v_th,
-                          soft_reset=soft_reset)
+    out = lif_scan_pallas_sg(flat.reshape(t, m, n), decay, v_th, soft_reset,
+                             surrogate_alpha)
     return out.reshape(t, -1)[:, :orig].reshape((t,) + rest)
 
 
@@ -60,14 +66,49 @@ def sdsa_or(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
         return pack_spikes(x, axis=-1)
 
     qp, kp, vp = prep(q), prep(k), prep(v)
-    # Pad N to sublane multiple for the kernel grid.
-    qp, n_orig = _pad_to(qp, 1, 8)
-    kp, _ = _pad_to(kp, 1, 8)
-    vp, _ = _pad_to(vp, 1, 8)
-    block_n = min(256, qp.shape[1])
+    # Pad N to a block_n multiple (the kernel grid divides N exactly);
+    # zero K/V rows are OR no-ops, zero Q rows are sliced off below.
+    block_n = min(256, n + (-n) % 8)
+    qp, n_orig = _pad_to(qp, 1, block_n)
+    kp, _ = _pad_to(kp, 1, block_n)
+    vp, _ = _pad_to(vp, 1, block_n)
     out_p = sdsa_packed(qp, kp, vp, block_n=block_n)
     out = unpack_spikes(out_p, axis=-1, dtype=dt)[:, :n_orig, :d]
     return out.reshape(lead + (n, d))
+
+
+@jax.jit
+def causal_sdsa_or(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal (LM) OR-form SDSA on dense binary tensors.
+
+    q, k, v: (T, ..., N, d) with T the micro-timestep axis and N the token
+    axis. status[i] = OR over micro-steps and tokens j <= i of K AND V;
+    out[t, i] = Q[t, i] AND status[i]. Internally bit-packed: the kv mask
+    is OR-folded over T elementwise, the prefix-OR over tokens runs in the
+    Pallas causal-status kernel, and the Q AND is a packed vector op.
+    """
+    t = q.shape[0]
+    lead = q.shape[1:-2]
+    n, d = q.shape[-2:]
+    dt = q.dtype
+
+    def prep(x):
+        x = x.reshape(t, -1, n, d)
+        x, _ = _pad_to(x, 3, PACK)
+        return pack_spikes(x, axis=-1)
+
+    qp, kp, vp = prep(q), prep(k), prep(v)
+    # kv mask per micro-step, then OR over T (elementwise on packed words).
+    kv = jax.lax.reduce(kp & vp, jnp.uint32(0), jax.lax.bitwise_or, (0,))
+    # Token-axis padding must reach a block_n multiple (the kernel grid
+    # divides N exactly); trailing zero rows are prefix-OR no-ops and the
+    # padded outputs are sliced off.
+    block_n = min(256, n + (-n) % 8)
+    kv, n_orig = _pad_to(kv, 1, block_n)
+    status = sdsa_causal_status_pallas(kv, block_n=block_n)
+    out_p = qp & status[None, :, :n_orig, :]
+    out = unpack_spikes(out_p, axis=-1, dtype=dt)[..., :d]
+    return out.reshape((t,) + lead + (n, d))
 
 
 @jax.jit
@@ -76,14 +117,16 @@ def sdsa_status(k: jax.Array, v: jax.Array) -> jax.Array:
     lead = k.shape[:-2]
     n, d = k.shape[-2:]
 
+    block_n = min(256, n + (-n) % 8)
+
     def prep(x):
         x = x.reshape(-1, n, d)
         x, _ = _pad_to(x, 2, PACK)
-        x, _ = _pad_to(x, 1, 8)
+        x, _ = _pad_to(x, 1, block_n)
         return pack_spikes(x, axis=-1)
 
     kp, vp = prep(k), prep(v)
-    st = sdsa_status_pallas(kp, vp, block_n=min(256, kp.shape[1]))
+    st = sdsa_status_pallas(kp, vp, block_n=block_n)
     return unpack_spikes(st, axis=-1, dtype=k.dtype)[:, :d].reshape(lead + (d,))
 
 

@@ -18,9 +18,12 @@ dw = d/32 packed words; bn a multiple of 8 (sublane).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _status_kernel(k_ref, v_ref, status_ref):
@@ -95,3 +98,53 @@ def sdsa_packed(
                                 interpret=interpret)
     return sdsa_apply_pallas(q_packed, status, block_n=block_n,
                              interpret=interpret)
+
+
+# ----------------------------------------------------------- causal (LM) form
+def _causal_status_kernel(kv_ref, out_ref, carry_ref, *, block_n: int):
+    """Prefix-OR over the token axis: out[i] = OR_{j<=i} kv[j].
+
+    Within a (bn, dw) block, a Hillis-Steele doubling scan (log2(bn) vector
+    OR + static shifts — no dynamic sublane indexing); across blocks, a
+    (1, dw) VMEM carry holds the running status, the streaming form of the
+    paper's on-the-fly OR during V write-back (Sec. III-C).
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    x = kv_ref[0]                                  # (bn, dw)
+    shift = 1
+    while shift < block_n:
+        pad = jnp.zeros((shift,) + x.shape[1:], x.dtype)
+        x = x | jnp.concatenate([pad, x[:-shift]], axis=0)
+        shift *= 2
+    x = x | carry_ref[...]                         # fold previous blocks
+    out_ref[0] = x
+    carry_ref[...] = x[block_n - 1:block_n]
+
+
+def sdsa_causal_status_pallas(
+    kv_packed: jax.Array, *, block_n: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(BH, N, dw) uint32 kv mask -> (BH, N, dw) causal (prefix-OR) status.
+
+    The N-axis is the innermost (sequential) grid dim so the carry scratch
+    accumulates across blocks of the same (b, h) row.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    bh, n, dw = kv_packed.shape
+    block_n = min(block_n, n)
+    if n % block_n:
+        raise ValueError(f"N={n} must tile by block_n={block_n}")
+    return pl.pallas_call(
+        functools.partial(_causal_status_kernel, block_n=block_n),
+        grid=(bh, n // block_n),
+        in_specs=[pl.BlockSpec((1, block_n, dw), lambda b, i: (b, i, 0))],
+        out_specs=pl.BlockSpec((1, block_n, dw), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dw), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((1, dw), jnp.uint32)],
+        interpret=interpret,
+    )(kv_packed)

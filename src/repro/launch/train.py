@@ -41,6 +41,16 @@ def train_loop(cfg: LMConfig, *, steps: int = 50, batch: int = 8,
     mesh = mesh or make_host_mesh()
     spk = cfg.spiking.enabled if spiking is None else spiking
 
+    # Training routes through the backend registry exactly like inference:
+    # every registered backend carries ref-matching surrogate gradients
+    # (the fused LIF kernel has a reversed-scan Pallas backward), so there
+    # is no lif_scan=ref pin — log what actually resolved (post-fallback).
+    if spk:
+        from repro.kernels import dispatch
+        resolved = " ".join(f"{op}={be}"
+                            for op, be in dispatch.resolved_backends().items())
+        print(f"[train] dispatch backends: {resolved}")
+
     params = lm.init_params(cfg, jax.random.PRNGKey(seed))
     opt_cfg = adamw.AdamWConfig(lr=lr, state_dtype=cfg.opt_state_dtype)
     opt_state = adamw.init(params, opt_cfg)

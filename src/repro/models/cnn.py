@@ -2,10 +2,17 @@
 
 Faithful to the evaluated stack (Sec. IV): LIF neurons (tau=0.5), T=4
 timesteps, direct-coded first layer (OPT1), event-driven-equivalent convs
-(OPT2 — executed as dense convs on binary spikes; the event formulations in
-core/econv and the tile-skipping kernel are numerically identical), and an
-EAFC avgpool+FC head (OPT3). Residual connections add membrane drives
-before the fire stage — the Residual Spike SRAM path of Fig. 3.
+(OPT2), and an EAFC avgpool+FC head (OPT3). Residual connections add
+membrane drives before the fire stage — the Residual Spike SRAM path of
+Fig. 3.
+
+Every conv — stem, strided downsamples, and the segmentation decoder's
+transposed convs — routes through the backend registry (`econv` / `tconv`
+ops) with micro-timesteps folded into the batch axis, so the whole stack
+is parity-tested, benchmarked, and differentiable per backend. The first
+layer eats the direct-coded (multi-bit) drive: the ref/pallas backends are
+exact for it; the per-event scatter (``econv=jnp``) assumes binary inputs
+and is only meaningful from the first spiking layer on (OPT1 territory).
 
 `apply(..., collect_stats=True)` returns per-layer spike maps for the
 Fig. 2 / Fig. 7 sparsity + APEC benchmarks.
@@ -19,11 +26,26 @@ import jax.numpy as jnp
 
 from repro.configs.base import CNNConfig, CNNLayer
 from repro.core.direct_coding import quantize
-from repro.core.econv import tconv
+from repro.core.econv import conv_transpose, econv
 from repro.core.eafc import eafc
 from repro.core.lif import LIFConfig, lif_scan
 
 Params = Dict[str, Any]
+
+
+def _conv_seq(s: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """(T,B,H,W,C) drive through the registry `econv` op, T folded into
+    the batch (one conv on T*B images instead of a vmap of T convs)."""
+    t, b = s.shape[:2]
+    out = econv(s.reshape((t * b,) + s.shape[2:]), w, stride=stride)
+    return out.reshape((t, b) + out.shape[1:])
+
+
+def _tconv_seq(s: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+    """(T,B,H,W,C) spikes through the registry `tconv` (transposed conv)."""
+    t, b = s.shape[:2]
+    out = conv_transpose(s.reshape((t * b,) + s.shape[2:]), w, stride=stride)
+    return out.reshape((t, b) + out.shape[1:])
 
 # ------------------------------------------------------- model definitions
 VGG11_LAYERS: Tuple[CNNLayer, ...] = (
@@ -84,7 +106,7 @@ def vgg11_apply(cfg: CNNConfig, p: Params, x: jax.Array,
                 (1, 1, layer.pool, layer.pool, 1),
                 (1, 1, layer.pool, layer.pool, 1), "VALID")
             continue
-        drive = jax.vmap(lambda st: tconv(st, w))(s)
+        drive = _conv_seq(s, w)
         s = lif_scan(drive, lif)          # binary spikes, all timesteps
         if collect_stats:
             stats.append(s)
@@ -125,18 +147,18 @@ def resnet18_apply(cfg: CNNConfig, p: Params, x: jax.Array,
     q, scale = quantize(x, cfg.direct_coding_bits)
     xin = jnp.broadcast_to((q.astype(jnp.float32) * scale)[None],
                            (t,) + x.shape)
-    drive = jax.vmap(lambda st: tconv(st, p["stem"]))(xin)
+    drive = _conv_seq(xin, p["stem"])
     s = lif_scan(drive, lif)
     stats: List[jax.Array] = [s] if collect_stats else []
     for blk in p["blocks"]:
         st0 = blk["stride"]
-        h = jax.vmap(lambda ss: tconv(ss, blk["conv1"], stride=st0))(s)
+        h = _conv_seq(s, blk["conv1"], stride=st0)
         h = lif_scan(h, lif)
-        h2 = jax.vmap(lambda ss: tconv(ss, blk["conv2"]))(h)
+        h2 = _conv_seq(h, blk["conv2"])
         # Residual Spike SRAM path: shortcut drives added pre-fire.
         short = s
         if "proj" in blk:
-            short = jax.vmap(lambda ss: tconv(ss, blk["proj"], stride=st0))(s)
+            short = _conv_seq(s, blk["proj"], stride=st0)
         s = lif_scan(h2 + short, lif)
         if collect_stats:
             stats.append(s)
@@ -169,11 +191,9 @@ def segnet_apply(cfg: CNNConfig, p: Params, x: jax.Array,
     for i, (layer, w) in enumerate(zip(SEGNET_LAYERS, p["convs"])):
         last = i == len(SEGNET_LAYERS) - 1
         if layer.kind == "conv":
-            drive = jax.vmap(lambda ss: tconv(ss, w, stride=layer.stride))(s)
-        else:  # transposed conv
-            drive = jax.vmap(lambda ss: jax.lax.conv_transpose(
-                ss, w, (layer.stride, layer.stride), "SAME",
-                dimension_numbers=("NHWC", "HWIO", "NHWC")))(s)
+            drive = _conv_seq(s, w, stride=layer.stride)
+        else:  # transposed conv (decoder upsampling): registry `tconv` op
+            drive = _tconv_seq(s, w, stride=layer.stride)
         if last:
             return (jnp.mean(drive, axis=0), stats) if collect_stats \
                 else jnp.mean(drive, axis=0)

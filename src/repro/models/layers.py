@@ -81,9 +81,11 @@ def lif_fire(x: jax.Array, lif_cfg: LIFConfig) -> jax.Array:
 
     x: (T, ...) membrane drive -> (T, ...) binary spikes. This is the FPE
     fire stage; in spiking mode every heavy op consumes its output.
-    Routed through the backend registry: `ref` (surrogate-gradient scan)
-    by default on CPU — training needs its custom vjp — and the fused
-    Pallas kernel on TPU / under ``EXSPIKE_BACKEND`` override.
+    Routed through the backend registry: `ref` (lax.scan) by default on
+    CPU, the fused Pallas kernel on TPU / under ``EXSPIKE_BACKEND``
+    override. Every backend carries the ATan surrogate gradient (the
+    Pallas kernel via its reversed-scan backward kernel), so training
+    resolves backends exactly like inference — no ref pin.
     """
     from repro.kernels.dispatch import dispatch
     return dispatch("lif_scan", x, decay=lif_cfg.decay, v_th=lif_cfg.v_th,

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lif import LIFConfig
+from repro.kernels import dispatch
 from .layers import apply_rope, dense_init, lif_fire, rmsnorm, rope_angles
 
 Params = Dict[str, Any]
@@ -216,24 +217,32 @@ def attention_sdsa(
     then: status[i] = cumOR_{j<=i} over tokens and micro-steps of K AND V;
     out = Q AND status (paper Fig. 6, causal form for LMs). Cost O(N),
     decode state O(d). GQA grouping applies to K/V spikes as in dense.
+
+    Both forms route through the backend registry: the causal prefix-
+    OR/sum is the `causal_sdsa` op (ref cummax form on CPU, bit-packed
+    prefix-OR kernels elsewhere); the non-causal pool folds micro-steps
+    into the token axis of the stateless `sdsa` op (status is one global
+    OR/sum either way). `attention_sdsa_decode` is the streaming form of
+    the same ops, property-tested equal.
     """
     q, k, v = _project_qkv(p, s, n_heads, n_kv, d_head)
     q, k, v = (lif_fire(t, lif_cfg) for t in (q, k, v))
     k = _repeat_kv(k, n_heads // n_kv)
     v = _repeat_kv(v, n_heads // n_kv)
-    kv = k * v                                   # AND     (T,B,N,H,dh)
-    if mode == "or":
-        phase = jnp.max(kv, axis=0)              # OR over micro-steps
-        status = jax.lax.cummax(phase, axis=1) if causal \
-            else jnp.max(phase, axis=1, keepdims=True)
+    t, b, n = s.shape[0], s.shape[1], s.shape[2]
+    # (T,B,N,H,dh) -> (T,B,H,N,dh): registry ops take the token axis at -2.
+    qh, kh, vh = (x.swapaxes(2, 3) for x in (q, k, v))
+    if causal:
+        out = dispatch.causal_sdsa(qh, kh, vh, mode=mode)
     else:
-        phase = jnp.sum(kv, axis=0)
-        status = jnp.cumsum(phase, axis=1) if causal \
-            else jnp.sum(phase, axis=1, keepdims=True)
-    out = q * status[None]                       # AND / weighted
+        def fold(x):                             # (T,B,H,N,dh)->(B,H,T*N,dh)
+            return x.transpose(1, 2, 0, 3, 4).reshape(
+                b, n_heads, t * n, d_head)
+        pooled = dispatch.sdsa(fold(qh), fold(kh), fold(vh), mode=mode)
+        out = pooled.reshape(b, n_heads, t, n, d_head).transpose(2, 0, 1, 3, 4)
+    out = out.swapaxes(2, 3)                     # back to (T,B,N,H,dh)
     if mode == "sum":
         out = lif_fire(out, lif_cfg)             # FPE re-binarization
-    t, b, n = s.shape[0], s.shape[1], s.shape[2]
     out = out.reshape(t, b, n, n_heads * d_head)
     return out @ p["w_o"].astype(out.dtype)
 

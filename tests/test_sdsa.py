@@ -57,6 +57,41 @@ def test_streaming_decode_equals_prefill(seed, mode):
         atol=1e-5)
 
 
+@given(seed=st.integers(0, 2**16), mode=st.sampled_from(["or", "sum"]))
+def test_causal_sdsa_equals_streaming_decode(seed, mode):
+    """The `causal_sdsa` registry op (prefix-OR/sum over tokens of the
+    T-pooled kv mask) == folding `sdsa_decode_update` token by token —
+    the property that lets serving carry O(d) state."""
+    t_steps, b, n, d = 2, 2, 10, 24
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = ((jax.random.uniform(kk, (t_steps, b, n, d)) < 0.4)
+               .astype(jnp.float32) for kk in ks)
+    full = sdsa.causal_sdsa(q, k, v, mode=mode)
+    status = jnp.zeros((b, d))
+    for i in range(n):
+        if mode == "or":
+            phase = jnp.max(k[:, :, i] * v[:, :, i], axis=0)
+        else:
+            phase = jnp.sum(k[:, :, i] * v[:, :, i], axis=0)
+        status = sdsa.sdsa_decode_update(status, phase, jnp.ones_like(phase),
+                                         mode)
+        np.testing.assert_allclose(
+            full[:, :, i], q[:, :, i] * status[None], atol=1e-5)
+
+
+def test_causal_sdsa_is_causal():
+    """Token i's output must not change when later tokens change."""
+    t_steps, b, n, d = 2, 1, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q, k, v = ((jax.random.uniform(kk, (t_steps, b, n, d)) < 0.4)
+               .astype(jnp.float32) for kk in ks)
+    out = sdsa.causal_sdsa(q, k, v)
+    k2 = k.at[:, :, n // 2:].set(1.0)
+    v2 = v.at[:, :, n // 2:].set(1.0)
+    out2 = sdsa.causal_sdsa(q, k2, v2)
+    np.testing.assert_array_equal(out[:, :, :n // 2], out2[:, :, :n // 2])
+
+
 def test_sdsa_linear_op_count():
     # 3*N*d logic ops vs 2*N^2*d MACs: the Fig. 6 economics.
     assert sdsa.sdsa_ops(1024, 64) == 3 * 1024 * 64
