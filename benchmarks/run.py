@@ -41,8 +41,8 @@ import traceback
 
 def _suites():
     from . import (fig2_econv_vs_tconv, fig7_apec, fig8_breakdown, fig9_cpu,
-                   kernel_backends, roofline, table1_resources,
-                   table2_throughput)
+                   kernel_backends, roofline, sparsity_sweep,
+                   table1_resources, table2_throughput)
     return [
         ("fig2", fig2_econv_vs_tconv.run),
         ("fig7", fig7_apec.run),
@@ -52,6 +52,7 @@ def _suites():
         ("fig9", fig9_cpu.run),
         ("roofline", roofline.run),
         ("backends", kernel_backends.run),
+        ("sparsity", sparsity_sweep.run),
     ]
 
 

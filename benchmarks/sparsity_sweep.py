@@ -1,0 +1,116 @@
+"""Predicated vs event-compacted spike matmuls across the paper's sparsities.
+
+Rows: ``sparsity/<op>/<pallas|pallas-csr>/s<pct>,us_per_call,...`` timing
+the same op under the predicated dense-grid kernel (``pallas`` family) and
+the scalar-prefetch CSR kernel (``pallas-csr`` family) at the paper's
+measured sparsity levels (50/60/80/90/97%), plus one
+``sparsity/<op>/crossover`` row reporting the first sparsity where the
+compacted grid wins — the measured "when CSR beats predication" point the
+kernel README cites.
+
+Event layout: tile-skipping saves nothing on i.i.d. sparsity (a 128x128
+tile at 97% uniform sparsity still holds ~490 events), and real spike maps
+are not i.i.d. — events cluster in active regions (PAPER.md's irregular
+sparsity; see `core.spikes.occupancy_fraction`). The generator therefore
+draws *clustered* events: each (block_m x block_k) tile is live with
+probability (1 - sparsity)/IN_TILE_DENSITY and live tiles fire at
+IN_TILE_DENSITY, so overall sparsity matches the sweep level while tile
+occupancy spans 1.0 -> ~0.06 across it. Each row's ``derived`` records the
+realized occupancy fraction plus the cost model's FLOPs-saved and
+DMA-saved fractions (`core.costmodel.tile_matmul_savings`) — the two
+ledgers the backends differ on.
+
+The suite times fixed formulations against each other, so (like fig2) its
+numbers do not respond to ``--backend`` overrides, by design.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel
+from repro.core.spikes import occupancy_fraction
+from repro.kernels import ops
+from .common import csv_row, time_fn
+
+SPARSITIES = (0.50, 0.60, 0.80, 0.90, 0.97)
+IN_TILE_DENSITY = 0.5
+BLOCK = 128
+# (M, K, N) for the matmul-form ops; positions grouped g=2 for APEC.
+M, K, N = 512, 512, 256
+APEC_G = 2
+
+
+def clustered_spikes(key, m: int, k: int, sparsity: float,
+                     block_m: int = BLOCK, block_k: int = BLOCK) -> jax.Array:
+    """Binary (m, k) spikes at `sparsity` with tile-clustered events.
+
+    Exactly max(1, round(live_frac * n_tiles)) tiles are live: an iid
+    Bernoulli draw can zero out the whole map at the sparse end of the
+    sweep, which would silently time the degenerate all-empty edge case
+    instead of a representative sparse workload.
+    """
+    k_live, k_fire = jax.random.split(key)
+    live_frac = min(1.0, (1.0 - sparsity) / IN_TILE_DENSITY)
+    density = (1.0 - sparsity) / live_frac
+    mt, kt = m // block_m, k // block_k
+    n_live = max(1, round(live_frac * mt * kt))
+    live = (jax.random.permutation(k_live, mt * kt) < n_live
+            ).reshape(mt, 1, kt, 1)
+    fire = jax.random.uniform(k_fire, (mt, block_m, kt, block_k)) < density
+    return (live & fire).astype(jnp.float32).reshape(m, k)
+
+
+def _savings_fields(s2: jax.Array, n: int) -> str:
+    occ_map = ops.padded_occupancy(s2, BLOCK, BLOCK)
+    occ_frac = float(occupancy_fraction(s2, BLOCK, BLOCK))
+    pred = costmodel.tile_matmul_savings(occ_map, n, backend="pallas")
+    csr = costmodel.tile_matmul_savings(occ_map, n, backend="pallas-csr")
+    return (f"occupancy={occ_frac:.3f};"
+            f"flops_saved={pred.flops_fraction_saved:.3f};"
+            f"dma_saved_pallas={pred.dma_fraction_saved:.3f};"
+            f"dma_saved_csr={csr.dma_fraction_saved:.3f}")
+
+
+def run() -> list[str]:
+    rows = []
+    platform = jax.default_backend()
+    crossover: dict[str, float | None] = {}
+    variants = {
+        "spike_matmul": {
+            "pallas": jax.jit(ops.spike_matmul),
+            # eager pre-pass (trimmed CSR grid) + jitted kernel core
+            "pallas-csr": ops.spike_matmul_csr,
+        },
+        "apec_matmul": {
+            "pallas": jax.jit(functools.partial(ops.apec_matmul, g=APEC_G)),
+            "pallas-csr": functools.partial(ops.apec_matmul_csr, g=APEC_G),
+        },
+    }
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    for op, impls in variants.items():
+        crossover[op] = None
+        for sparsity in SPARSITIES:
+            key = jax.random.PRNGKey(int(sparsity * 1000))
+            s = clustered_spikes(key, M, K, sparsity)
+            stats = _savings_fields(s, N)
+            t_by = {}
+            for be, fn in impls.items():
+                t_by[be] = time_fn(fn, s, w) * 1e6
+                rows.append(csv_row(
+                    f"sparsity/{op}/{be}/s{int(sparsity * 100)}", t_by[be],
+                    f"platform={platform};{stats}"))
+            if crossover[op] is None and t_by["pallas-csr"] < t_by["pallas"]:
+                crossover[op] = sparsity
+        rows.append(csv_row(
+            f"sparsity/{op}/crossover", 0.0,
+            f"csr_wins_from_sparsity="
+            f"{'none' if crossover[op] is None else crossover[op]};"
+            f"platform={platform}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -111,6 +111,89 @@ def sdsa_cycles(
     return LayerCycles(name, 0.0, stage1, stage2, n_tokens * d, dense_ops)
 
 
+@dataclasses.dataclass(frozen=True)
+class TileSkipSavings:
+    """What a tile-skipping spike-matmul backend actually saves, with the
+    FLOP ledger and the DMA ledger kept separate — the paper's no-events-
+    no-work claim has two currencies on TPU and the backends differ in
+    which they pay out:
+
+      * the predicated `pallas` kernel (`pl.when` inside a dense grid)
+        saves the MXU FLOPs of empty tiles but still runs every grid step
+        and still streams every spike/weight tile HBM->VMEM;
+      * the event-compacted `pallas-csr` kernel saves the same FLOPs AND
+        the tile DMA, because empty tiles never enter the grid (dummy
+        steps for all-empty rows are the only residue).
+    """
+    backend: str
+    grid_steps_total: int     # dense grid: MT*KT steps per output N-tile
+    grid_steps_run: int
+    flops_total: float        # dense-equivalent MXU flops
+    flops_saved: float
+    dma_bytes_total: float    # spike + weight tile HBM->VMEM traffic
+    dma_bytes_saved: float
+
+    @property
+    def flops_fraction_saved(self) -> float:
+        return self.flops_saved / self.flops_total if self.flops_total else 0.0
+
+    @property
+    def dma_fraction_saved(self) -> float:
+        return self.dma_bytes_saved / self.dma_bytes_total \
+            if self.dma_bytes_total else 0.0
+
+
+def tile_matmul_savings(
+    occupancy: "np.ndarray",
+    n: int,
+    *,
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    spike_bytes: int = 4,
+    weight_bytes: int = 4,
+    backend: str = "pallas",
+) -> TileSkipSavings:
+    """FLOPs-saved vs DMA-saved of one (M, K) x (K, N) spike matmul.
+
+    `occupancy`: the (MT, KT) per-tile event-count map the kernels consume
+    (`core.spikes.tile_occupancy`). `backend`: "pallas" (predicated dense
+    grid) or "pallas-csr" (event-compacted grid). The CSR accounting
+    charges one dummy step per all-empty m-tile row — those rows must
+    still be visited to zero their output blocks, and the dummy's spike/
+    weight tile fetch is real traffic.
+    """
+    occ = np.asarray(occupancy)
+    mt, kt = occ.shape
+    nt = int(np.ceil(n / block_n))
+    occupied = int(np.count_nonzero(occ > 0))
+    empty = mt * kt - occupied
+    empty_rows = int(np.sum(~(occ > 0).any(axis=1)))
+    per_tile_flops = 2.0 * block_m * block_k * block_n
+    per_step_dma = float(block_m * block_k * spike_bytes
+                         + block_k * block_n * weight_bytes)
+    steps_total = mt * kt * nt
+    flops_total = steps_total * per_tile_flops
+    flops_saved = empty * nt * per_tile_flops     # both backends skip MXU
+    if backend == "pallas":                       # predicated: full grid,
+        steps_run = steps_total                   # full tile traffic
+        dma_saved = 0.0
+    elif backend == "pallas-csr":
+        steps_run = (occupied + empty_rows) * nt
+        dma_saved = (steps_total - steps_run) * per_step_dma
+    else:
+        raise ValueError(f"unknown tile-skipping backend {backend!r}")
+    return TileSkipSavings(
+        backend=backend,
+        grid_steps_total=steps_total,
+        grid_steps_run=steps_run,
+        flops_total=flops_total,
+        flops_saved=flops_saved,
+        dma_bytes_total=steps_total * per_step_dma,
+        dma_bytes_saved=dma_saved,
+    )
+
+
 def summarize(layers: list[LayerCycles], hw: ExSpikeHW = ExSpikeHW(),
               apec: bool = False) -> dict:
     """Network-level Table II style metrics."""

@@ -15,8 +15,11 @@ equivalents are:
 """
 from __future__ import annotations
 
+from typing import NamedTuple, Optional
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 PACK = 32  # bits per packed word
 
@@ -81,6 +84,138 @@ def occupancy_fraction(s: jax.Array, tile_m: int, tile_k: int) -> jax.Array:
     """Fraction of non-empty tiles — predicts the tile-skip speedup."""
     occ = tile_occupancy(s, tile_m, tile_k)
     return jnp.mean((occ > 0).astype(jnp.float32))
+
+
+class TileCSR(NamedTuple):
+    """CSR-of-tiles event stream for the compacted spike-matmul grid.
+
+    The occupancy map is the tile-granular AER FIFO; this is that FIFO
+    *drained into a work list*: one entry per occupied (m-tile, k-tile),
+    row-major, so the Pallas `pallas-csr` kernel's grid walks occupied
+    tiles only instead of predicating inside a dense (i, j, k) grid.
+
+    Fields (cap = number of grid steps, static):
+      row_ptr     (MT+1,) int32 — canonical CSR row pointers over m-tiles
+                  (row i's occupied k-tiles are entries row_ptr[i]:row_ptr[i+1])
+      tile_m_idx  (cap,)  int32 — m-tile index per grid step
+      tile_k_idx  (cap,)  int32 — k-tile index per grid step
+      occ         (cap,)  int32 — per-step event count, already masked to 0
+                  on dummy steps (see below) and on padding steps
+      valid       (cap,)  int32 — 1 on real steps (occupied tiles AND the
+                  dummy row visits), 0 on clamp padding
+      tiling      optional (tile_m, tile_k) this CSR was built for
+      map_shape   (MT, KT) of the occupancy map it was compacted from —
+                  together with `tiling` lets consumers reject a work
+                  list built for different tiles or a different tile grid
+                  (wrong k-tile indices would be silently wrong)
+
+    Two kinds of non-compute step keep the kernel correct:
+      * every m-tile row with no occupied tiles gets one *dummy* step at
+        k-tile 0 (occ=0) so its output block is still visited and zeroed
+        — Pallas does not zero unvisited output blocks;
+      * when `cap` exceeds the real step count (the traced/jit path, where
+        the count is data-dependent), trailing *padding* steps repeat the
+        last real step's tile indices, so their block index maps resolve to
+        the already-resident tiles: no new DMA, and occ=0 skips the MXU.
+
+    Built by `occupancy_to_csr`: with concrete occupancy (outside jit —
+    the benchmark / serve pre-pass) cap is trimmed to the exact count, so
+    empty tiles cost zero grid steps; under tracing cap falls back to
+    MT*KT and empty tiles cost a (DMA-free, FLOP-free) clamped step.
+    """
+    row_ptr: jax.Array
+    tile_m_idx: jax.Array
+    tile_k_idx: jax.Array
+    occ: jax.Array
+    valid: jax.Array
+    tiling: Optional[tuple] = None
+    map_shape: Optional[tuple] = None
+
+    @property
+    def n_steps(self) -> int:
+        return self.tile_k_idx.shape[0]
+
+    @property
+    def n_rows(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+    def check_compatible(self, tile_m: int, tile_k: int,
+                         mt: int, kt: int) -> None:
+        """Raise when this CSR was built for a different tiling or a
+        different (MT, KT) tile grid — its step indices would gate the
+        wrong tiles silently. Skipped per-tag for untagged CSRs and when
+        a tag's ints crossed a jit boundary (became tracers)."""
+        for got, want, what in ((self.tiling, (tile_m, tile_k), "tiling"),
+                                (self.map_shape, (mt, kt), "tile grid")):
+            if got is None or not isinstance(got[0], int):
+                continue
+            if tuple(got) != want:
+                raise ValueError(
+                    f"TileCSR built for {what} {tuple(got)} used with "
+                    f"{what} {want}")
+
+
+def occupancy_to_csr(occ: jax.Array, cap: Optional[int] = None,
+                     tiling: Optional[tuple] = None) -> TileCSR:
+    """Compact a (MT, KT) per-tile occupancy map into a `TileCSR` work list.
+
+    `cap` bounds the step count (static). Default: the exact count
+    (occupied tiles + one dummy per empty row) when `occ` is concrete,
+    MT*KT under tracing. A caller-supplied `cap` must cover the real count
+    — concrete inputs are checked, traced inputs silently truncate (pass
+    the worst case, MT*KT, when unsure).
+    """
+    mt, kt = occ.shape
+    if not isinstance(occ, jax.core.Tracer):
+        # Concrete pre-pass (numpy): trim cap to the exact step count so
+        # the kernel grid is literally `occupied tiles only`.
+        occ_np = np.asarray(occ)
+        mask = occ_np > 0
+        mask2 = mask.copy()
+        mask2[:, 0] |= ~mask.any(axis=1)          # dummy step per empty row
+        flat = np.nonzero(mask2.ravel())[0]
+        total = len(flat)
+        if cap is None:
+            cap = total
+        elif cap < total:
+            raise ValueError(f"cap {cap} < required steps {total}")
+        steps = np.concatenate(
+            [flat, np.full(cap - total, flat[-1], np.int64)])
+        valid = (np.arange(cap) < total).astype(np.int32)
+        row_ptr = np.concatenate(
+            [[0], np.cumsum(mask2.sum(axis=1))]).astype(np.int32)
+        occ_steps = occ_np.ravel()[steps].astype(np.int32) \
+            * mask.ravel()[steps] * valid
+        return TileCSR(jnp.asarray(row_ptr),
+                       jnp.asarray((steps // kt).astype(np.int32)),
+                       jnp.asarray((steps % kt).astype(np.int32)),
+                       jnp.asarray(occ_steps), jnp.asarray(valid), tiling,
+                       (mt, kt))
+    if cap is None:
+        cap = mt * kt
+    mask = occ > 0
+    mask2 = mask.at[:, 0].set(mask[:, 0] | ~jnp.any(mask, axis=1))
+    flat, = jnp.nonzero(mask2.ravel(), size=cap, fill_value=0)
+    total = jnp.sum(mask2.astype(jnp.int32))
+    last = flat[jnp.maximum(total - 1, 0)]
+    arange = jnp.arange(cap)
+    steps = jnp.where(arange < total, flat, last)  # clamp padding -> no DMA
+    valid = (arange < total).astype(jnp.int32)
+    row_ptr = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32),
+         jnp.cumsum(jnp.sum(mask2, axis=1)).astype(jnp.int32)])
+    occ_steps = (occ.ravel()[steps] * mask.ravel()[steps] * valid
+                 ).astype(jnp.int32)
+    return TileCSR(row_ptr, (steps // kt).astype(jnp.int32),
+                   (steps % kt).astype(jnp.int32), occ_steps, valid, tiling,
+                   (mt, kt))
+
+
+def tile_csr(s: jax.Array, tile_m: int, tile_k: int,
+             cap: Optional[int] = None) -> TileCSR:
+    """Occupancy pre-pass + CSR compaction of a (M, K) spike matrix."""
+    return occupancy_to_csr(tile_occupancy(s, tile_m, tile_k), cap=cap,
+                            tiling=(tile_m, tile_k))
 
 
 def to_binary(x: jax.Array) -> jax.Array:

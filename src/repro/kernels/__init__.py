@@ -7,7 +7,10 @@ wrapper in ops.py; interpret=True on CPU, compiled on TPU):
                   reversed-scan surrogate-gradient backward kernel
   sdsa_kernel   — bit-packed Attention Core stages (AND / column-OR / AND)
                   + the causal prefix-OR status kernel (LM form)
-  spike_matmul  — occupancy-skipping event matmul (AER-FIFO tile analog)
+  spike_matmul  — occupancy-skipping event matmuls (AER-FIFO tile analog):
+                  the predicated dense-grid kernel AND the event-compacted
+                  scalar-prefetch CSR kernel (grid over occupied tiles
+                  only), incl. the fused-APEC CSR variant
   apec_kernel   — packed overlap/residual extraction (Fig. 5)
 
 Backend registry (`dispatch.py`) — every hot-path op routes through one
@@ -18,19 +21,33 @@ AND gradient) the moment they register (tests/test_dispatch_parity.py):
   ------------  ---------------------------------  --------------------------
   lif_scan      cpu: ref · tpu: pallas             pallas bwd = reversed-scan
                 (+ pallas-interpret, manual)         ATan surrogate kernel
-  spike_matmul  cpu: ref · tpu: pallas             —
-                (+ jnp tile-masked, manual)
-  apec_matmul   jnp (overlap-reuse) · tpu: pallas  P % g == 0, else -> ref
-                (+ ref = dense s @ w)
+  spike_matmul  cpu: ref · tpu: pallas-csr         pallas-csr: TPU (interpret
+                (+ pallas, jnp tile-masked,          variant on CPU, manual);
+                   pallas-csr-interpret, manual)     degrades to pallas
+  apec_matmul   jnp (overlap-reuse) · tpu:         P % g == 0, else -> ref;
+                pallas-csr (fused combine)         csr also needs g | 128
+                (+ ref = dense s @ w, pallas)        (row tile), else pallas
   sdsa          cpu: ref · tpu: pallas             packed paths: mode="or"
                 (+ jnp bit-packed, manual)           only, else -> ref
   causal_sdsa   cpu: ref (cummax) · tpu: pallas    packed paths: mode="or"
                 (+ jnp packed prefix-OR, manual)     only, else -> ref
-  econv         cpu: ref (TConv) · tpu: pallas     jnp scatter: odd kernel,
-                (+ jnp event scatter, manual)        stride 1, SAME
+  econv         cpu: ref (TConv) · tpu:            jnp scatter: odd kernel,
+                pallas-csr (im2col + CSR grid)       stride 1, SAME
+                (+ jnp event scatter, pallas)
   tconv         cpu: ref (conv_transpose)          transposed conv (decoder
                 · tpu: pallas (dilate+im2col)        upsampling); SAME/VALID
                 (+ jnp zero-insertion, manual)
+
+The `pallas-csr` family is the event-compacted grid: a CSR-of-tiles
+pre-pass (`core.spikes.TileCSR`) drains the occupancy map into a work
+list and `pltpu.PrefetchScalarGridSpec` walks occupied tiles only — empty
+tiles cost zero grid steps (concrete pre-pass) and zero tile DMA, where
+the predicated `pallas` kernel only saves the MXU FLOPs
+(`core.costmodel.tile_matmul_savings` keeps the two ledgers apart). Its
+`fallback` declaration makes explicit overrides degrade to the predicated
+kernel, never silently to `ref`. Measured on the clustered-event sweep
+(`benchmarks/sparsity_sweep.py`, committed as BENCH_PR3.json): CSR
+crosses over at 60-80% sparsity and wins ~1.3-1.8x at 90-97%.
 
 Every registered backend is differentiable with ref-matching surrogate
 gradients (see dispatch.register's ``differentiable``/``vjp`` contract and
@@ -51,10 +68,12 @@ from . import dispatch, ops, ref
 from .lif_scan import lif_scan_pallas, lif_scan_pallas_sg
 from .sdsa_kernel import (sdsa_apply_pallas, sdsa_causal_status_pallas,
                           sdsa_packed, sdsa_status_pallas)
-from .spike_matmul import spike_matmul_pallas
+from .spike_matmul import (apec_matmul_csr_pallas, spike_matmul_csr_pallas,
+                           spike_matmul_pallas)
 
 __all__ = [
     "dispatch", "ops", "ref", "lif_scan_pallas", "lif_scan_pallas_sg",
     "sdsa_apply_pallas", "sdsa_causal_status_pallas", "sdsa_packed",
-    "sdsa_status_pallas", "spike_matmul_pallas",
+    "sdsa_status_pallas", "spike_matmul_pallas", "spike_matmul_csr_pallas",
+    "apec_matmul_csr_pallas",
 ]

@@ -10,11 +10,14 @@ TPU, interpret mode on CPU). This module is the single switchboard:
   ----------  -------------------------------  ---------------------------
   lif_scan    ref | pallas-interpret | pallas  pallas: fused fwd + reversed-
                                                scan surrogate bwd kernels
-  spike_matmul ref | jnp | pallas-interpret | pallas
-  apec_matmul ref | jnp | pallas-interpret | pallas   jnp is the default
+  spike_matmul ref | jnp | pallas[-interpret]        pallas-csr: event-
+              | pallas-csr[-interpret]              compacted grid (TPU
+  apec_matmul ref | jnp | pallas[-interpret]         default; degrades to
+              | pallas-csr[-interpret]              pallas, see `fallback`)
   sdsa        ref | jnp | pallas-interpret | pallas   packed paths: mode=or
   causal_sdsa ref | jnp | pallas-interpret | pallas   packed paths: mode=or
-  econv       ref | jnp | pallas-interpret | pallas   jnp = event scatter
+  econv       ref | jnp | pallas[-interpret]        jnp = event scatter;
+              | pallas-csr[-interpret]              csr = im2col + CSR grid
   tconv       ref | jnp | pallas-interpret | pallas   transposed conv
                                                (decoder upsampling)
 
@@ -86,6 +89,11 @@ class Backend:
     auto: bool = True
     supports: Optional[Callable[..., Optional[str]]] = None
     differentiable: bool = False
+    # Name of the backend an explicit override degrades to when THIS
+    # backend can't take the inputs (e.g. pallas-csr -> pallas keeps a
+    # degraded sweep comparable: still the kernel family, not the ref
+    # oracle). None falls straight to ref, the universal fallback.
+    fallback: Optional[str] = None
 
     def unsupported_reason(self, *args, **kwargs) -> Optional[str]:
         platform = jax.default_backend()
@@ -158,7 +166,8 @@ def _matmul_bwd(res, kwargs, g):
 
 
 def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
-             auto=True, supports=None, differentiable=False, vjp=None):
+             auto=True, supports=None, differentiable=False, vjp=None,
+             fallback=None):
     """Decorator: register `fn` as backend `name` for `op`.
 
     Gradient contract: pass ``differentiable=True`` when `jax.grad`
@@ -167,6 +176,11 @@ def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
     (see `_wrap_vjp`) — wrapped backends are differentiable by definition.
     Declared pairs are grad-parity-tested against ref by
     tests/test_dispatch_parity.py automatically.
+
+    ``fallback``: backend name an explicit override degrades to when this
+    backend's capability check fails (chains until a supported backend;
+    `ref` remains the terminal fallback). Auto-selection already falls
+    through by priority and ignores this.
     """
     def deco(fn):
         if op not in _REGISTRY:
@@ -175,7 +189,8 @@ def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
         _REGISTRY[op].backends[name] = Backend(
             name=name, fn=wrapped, platforms=tuple(platforms),
             priority=priority, auto=auto, supports=supports,
-            differentiable=differentiable or vjp is not None)
+            differentiable=differentiable or vjp is not None,
+            fallback=fallback)
         return fn
     return deco
 
@@ -270,8 +285,23 @@ def resolve(op: str, *args, **kwargs) -> Backend:
         if be is None:
             return _fallback(op, override, "not registered")
         reason = be.unsupported_reason(*args, **kwargs)
+        # Walk the declared fallback chain (pallas-csr -> pallas -> ...)
+        # before surrendering to ref, so a constraint failure degrades to
+        # the nearest comparable kernel, not all the way to the oracle.
+        seen = {be.name}
+        while reason is not None and be.fallback is not None \
+                and be.fallback not in seen:
+            nxt = spec.backends.get(be.fallback)
+            if nxt is None:
+                break
+            warnings.warn(
+                f"exspike dispatch: backend {be.name!r} for op {op!r} "
+                f"unavailable ({reason}); degrading to {nxt.name!r}",
+                RuntimeWarning, stacklevel=2)
+            seen.add(nxt.name)
+            be, reason = nxt, nxt.unsupported_reason(*args, **kwargs)
         if reason is not None:
-            return _fallback(op, override, reason)
+            return _fallback(op, be.name, reason)
         return be
     platform = jax.default_backend()
     candidates = sorted(
@@ -429,6 +459,20 @@ register("spike_matmul", "pallas", platforms=("tpu",),
          priority=20, vjp=_matmul_bwd)(_spike_matmul_pallas)
 
 
+def _spike_matmul_csr(s, w):
+    # Event-compacted grid (scalar-prefetch CSR dispatch): occupied tiles
+    # only; see kernels/spike_matmul.py. Wrapper pads arbitrary shapes.
+    from repro.kernels import ops
+    return ops.spike_matmul_csr(s, w)
+
+
+register("spike_matmul", "pallas-csr-interpret", platforms=("cpu",),
+         priority=2, auto=False, fallback="pallas-interpret",
+         vjp=_matmul_bwd)(_spike_matmul_csr)
+register("spike_matmul", "pallas-csr", platforms=("tpu",), priority=25,
+         fallback="pallas", vjp=_matmul_bwd)(_spike_matmul_csr)
+
+
 # ---------------------------------------------------------- apec_matmul
 def _apec_example(key):
     k1, k2 = jax.random.split(key)
@@ -474,6 +518,32 @@ register("apec_matmul", "pallas-interpret", platforms=("cpu",), priority=1,
          vjp=_matmul_bwd)(_apec_matmul_pallas)
 register("apec_matmul", "pallas", platforms=("tpu",), priority=20,
          supports=_apec_divisibility, vjp=_matmul_bwd)(_apec_matmul_pallas)
+
+
+def _apec_csr_supports(s, w, *, g=2) -> Optional[str]:
+    # The fused kernel maps each output row tile onto a (block_m/g)-row
+    # overlap tile, so the group size must divide the 128-row block.
+    reason = _apec_divisibility(s, w, g=g)
+    if reason is not None:
+        return reason
+    if 128 % g:
+        return f"group {g} does not divide the 128-row tile"
+    return None
+
+
+def _apec_matmul_csr(s, w, *, g=2):
+    # Fused event-compacted APEC: union-CSR grid, overlap partial sums
+    # accumulated into the g member rows in-kernel (no repeat pass).
+    from repro.kernels import ops
+    return ops.apec_matmul_csr(s, w, g=g)
+
+
+register("apec_matmul", "pallas-csr-interpret", platforms=("cpu",),
+         priority=2, auto=False, supports=_apec_csr_supports,
+         fallback="pallas-interpret", vjp=_matmul_bwd)(_apec_matmul_csr)
+register("apec_matmul", "pallas-csr", platforms=("tpu",), priority=25,
+         supports=_apec_csr_supports, fallback="pallas",
+         vjp=_matmul_bwd)(_apec_matmul_csr)
 
 
 # ------------------------------------------------------------------ sdsa
@@ -614,10 +684,11 @@ def _econv_scatter(s, w, *, stride=1, padding="SAME"):
     return econv_scatter(s, w)
 
 
-def _econv_pallas(s, w, *, stride=1, padding="SAME"):
-    """im2col + occupancy-skipping spike matmul: binary patches of a binary
-    map stay binary, so the event matmul kernel is the conv's MXU form."""
-    from repro.kernels import ops
+def _econv_im2col(s, w, stride, padding, matmul):
+    """im2col + an occupancy-skipping spike matmul: binary patches of a
+    binary map stay binary, so the event matmul kernel is the conv's MXU
+    form. `matmul` picks the realization (predicated ops.spike_matmul or
+    event-compacted ops.spike_matmul_csr)."""
     kh, kw, ci, co = w.shape
     patches = jax.lax.conv_general_dilated_patches(
         s, (kh, kw), (stride, stride), padding,
@@ -625,15 +696,32 @@ def _econv_pallas(s, w, *, stride=1, padding="SAME"):
     n, ho, wo, _ = patches.shape
     # patch features are ordered (Ci, kh, kw): transpose weights to match
     w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(ci * kh * kw, co)
-    out = ops.spike_matmul(patches.reshape(n * ho * wo, -1),
-                           w2.astype(jnp.float32))
+    out = matmul(patches.reshape(n * ho * wo, -1), w2.astype(jnp.float32))
     return out.reshape(n, ho, wo, co)
+
+
+def _econv_pallas(s, w, *, stride=1, padding="SAME"):
+    from repro.kernels import ops
+    return _econv_im2col(s, w, stride, padding, ops.spike_matmul)
 
 
 register("econv", "pallas-interpret", platforms=("cpu",), priority=1,
          auto=False, vjp="ref")(_econv_pallas)
 register("econv", "pallas", platforms=("tpu",), priority=20,
          vjp="ref")(_econv_pallas)
+
+
+def _econv_csr(s, w, *, stride=1, padding="SAME"):
+    """Same im2col form, but patch-row tiles with no events cost no grid
+    steps/DMA on the event-compacted kernel."""
+    from repro.kernels import ops
+    return _econv_im2col(s, w, stride, padding, ops.spike_matmul_csr)
+
+
+register("econv", "pallas-csr-interpret", platforms=("cpu",), priority=2,
+         auto=False, fallback="pallas-interpret", vjp="ref")(_econv_csr)
+register("econv", "pallas-csr", platforms=("tpu",), priority=25,
+         fallback="pallas", vjp="ref")(_econv_csr)
 
 
 # ----------------------------------------------------------------- tconv

@@ -12,11 +12,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.spikes import PACK, pack_spikes, unpack_spikes
+from repro.core.spikes import (PACK, TileCSR, occupancy_to_csr, pack_spikes,
+                               tile_occupancy, unpack_spikes)
 from .lif_scan import lif_scan_pallas_sg
 from .sdsa_kernel import (sdsa_causal_status_pallas, sdsa_packed,
                           sdsa_status_pallas)
-from .spike_matmul import spike_matmul_pallas
+from .spike_matmul import (apec_matmul_csr_pallas, spike_matmul_csr_pallas,
+                           spike_matmul_pallas)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int):
@@ -146,6 +148,35 @@ def apec_decompose(s: jax.Array, g: int = 2):
     return ov, res
 
 
+def _pad_operands(s2, w, block_m, block_n, block_k):
+    """Pad a flattened (R, K) spike matrix and (K, N) weights to block
+    multiples — padding adds zeros, so it can never mark a tile occupied."""
+    s2, m_orig = _pad_to(s2, 0, block_m)
+    s2, _ = _pad_to(s2, 1, block_k)
+    w2, _ = _pad_to(w, 0, block_k)
+    w2, n_orig = _pad_to(w2, 1, block_n)
+    return s2, w2, m_orig, n_orig
+
+
+def padded_occupancy(s: jax.Array, block_m: int = 128,
+                     block_k: int = 128) -> jax.Array:
+    """The occupancy pre-pass exactly as `spike_matmul` computes it: lead
+    axes flattened into rows, then padded-tiling per-tile event counts.
+    Callers running several matmuls over the *same* spike tensor (e.g. one
+    encoding against several weight matrices, or stat collection alongside
+    the matmul) run this once and pass the result through
+    `spike_matmul(..., occupancy=)` or `occupancy_to_csr` ->
+    `spike_matmul_csr(..., csr=)`. The kernels validate the map's shape
+    against their tiling — a map for another tiling would silently gate
+    the wrong tiles.
+    """
+    k = s.shape[-1]
+    s2 = s.reshape(-1, k)
+    s2, _ = _pad_to(s2, 0, block_m)
+    s2, _ = _pad_to(s2, 1, block_k)
+    return tile_occupancy(s2, block_m, block_k)
+
+
 @functools.partial(jax.jit, static_argnames=("g",))
 def apec_matmul(s: jax.Array, w: jax.Array, g: int = 2) -> jax.Array:
     """APEC matmul on the packed kernels: bitwise overlap/residual
@@ -154,7 +185,10 @@ def apec_matmul(s: jax.Array, w: jax.Array, g: int = 2) -> jax.Array:
 
     s: (..., P, C) binary with P % g == 0; w: (C, F) -> (..., P, F).
     Leading axes are flattened into the position axis — safe because each
-    row contributes whole groups when P divides by g.
+    row contributes whole groups when P divides by g. (Each matmul runs
+    its own occupancy pre-pass — overlap and residual are distinct
+    operands, so there is nothing to share on this path; the fused
+    `apec_matmul_csr` is the one that builds a single union pre-pass.)
     """
     lead = s.shape[:-2]
     p, c = s.shape[-2:]
@@ -171,17 +205,129 @@ def apec_matmul(s: jax.Array, w: jax.Array, g: int = 2) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
 def spike_matmul(s: jax.Array, w: jax.Array, block_m: int = 128,
-                 block_n: int = 128, block_k: int = 128) -> jax.Array:
-    """Occupancy-skipping spike matmul for (..., M, K) x (K, N)."""
+                 block_n: int = 128, block_k: int = 128,
+                 occupancy: jax.Array | None = None) -> jax.Array:
+    """Occupancy-skipping spike matmul for (..., M, K) x (K, N).
+
+    `occupancy`: optional precomputed per-tile event counts from
+    `padded_occupancy(s, block_m, block_k)` — callers that already ran the
+    pre-pass (APEC, stat-collecting layers) skip recomputing it here.
+    """
     lead = s.shape[:-2]
     m, k = s.shape[-2:]
     n = w.shape[-1]
     s2 = s.reshape(-1, k) if lead else s.reshape(m, k)
-    s2, m_orig = _pad_to(s2, 0, block_m)
-    s2, _ = _pad_to(s2, 1, block_k)
-    w2, _ = _pad_to(w, 0, block_k)
-    w2, n_orig = _pad_to(w2, 1, block_n)
-    out = spike_matmul_pallas(s2, w2, block_m=block_m, block_n=block_n,
-                              block_k=block_k)
+    s2, w2, m_orig, n_orig = _pad_operands(s2, w, block_m, block_n, block_k)
+    if occupancy is None:
+        occupancy = tile_occupancy(s2, block_m, block_k)
+    out = spike_matmul_pallas(s2, w2, occupancy, block_m=block_m,
+                              block_n=block_n, block_k=block_k)
     out = out[:m_orig, :n_orig]
     return out.reshape(lead + (m, n)) if lead else out
+
+
+# ------------------------------------------------- event-compacted (CSR)
+def _build_csr(occ, block_m, block_k):
+    """CSR work list with a power-of-two step-count bucket (dense-capped).
+
+    The concrete pre-pass trims the grid to the occupied-tile count, but
+    a *different* count per call would recompile the jitted kernel core
+    every time occupancy shifts. Padding steps are DMA/FLOP-free by
+    design, so rounding the cap up to the next power of two bounds the
+    distinct grid sizes at O(log(dense)) while keeping the grid within 2x
+    of exact. The traced path keeps the dense cap (one compile)."""
+    tiling = (block_m, block_k)
+    if isinstance(occ, jax.core.Tracer):
+        return occupancy_to_csr(occ, tiling=tiling)
+    exact = occupancy_to_csr(occ, tiling=tiling)
+    mt, kt = occ.shape
+    cap = min(mt * kt, 1 << (exact.n_steps - 1).bit_length())
+    if cap == exact.n_steps:
+        return exact
+    return occupancy_to_csr(occ, cap=cap, tiling=tiling)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def _spike_matmul_csr_core(s2, w2, csr, *, block_m, block_n, block_k):
+    return spike_matmul_csr_pallas(s2, w2, csr, block_m=block_m,
+                                   block_n=block_n, block_k=block_k)
+
+
+def spike_matmul_csr(s: jax.Array, w: jax.Array,
+                     csr: TileCSR | None = None, *, block_m: int = 128,
+                     block_n: int = 128, block_k: int = 128) -> jax.Array:
+    """Event-compacted spike matmul for (..., M, K) x (K, N).
+
+    The CSR pre-pass (occupancy -> `TileCSR` work list) runs *outside* the
+    jitted kernel call: with concrete inputs (serve/benchmark paths) the
+    compaction trims the grid to occupied tiles only, so empty tiles cost
+    zero grid steps; under jit tracing the step count is the dense bound
+    but clamped padding steps still cost zero tile DMA and zero FLOPs.
+    `csr`: optional precomputed `TileCSR` for this padded tiling (from
+    `padded_occupancy` + `occupancy_to_csr`) — the layer-level pass-through.
+    """
+    lead = s.shape[:-2]
+    m, k = s.shape[-2:]
+    n = w.shape[-1]
+    s2 = s.reshape(-1, k) if lead else s.reshape(m, k)
+    s2, w2, m_orig, n_orig = _pad_operands(s2, w, block_m, block_n, block_k)
+    if csr is None:
+        csr = _build_csr(tile_occupancy(s2, block_m, block_k),
+                         block_m, block_k)
+    # The jit core can't see the static tags — validate before entering.
+    csr.check_compatible(block_m, block_k,
+                         s2.shape[0] // block_m, s2.shape[1] // block_k)
+    out = _spike_matmul_csr_core(s2, w2, csr, block_m=block_m,
+                                 block_n=block_n, block_k=block_k)
+    out = out[:m_orig, :n_orig]
+    return out.reshape(lead + (m, n)) if lead else out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("g", "block_m", "block_n", "block_k"))
+def _apec_matmul_csr_core(res2, ov2, w2, csr, occ_res, occ_ov, *, g,
+                          block_m, block_n, block_k):
+    return apec_matmul_csr_pallas(res2, ov2, w2, g, csr, occ_res, occ_ov,
+                                  block_m=block_m, block_n=block_n,
+                                  block_k=block_k)
+
+
+def apec_matmul_csr(s: jax.Array, w: jax.Array, g: int = 2, *,
+                    block_m: int = 128, block_n: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    """APEC matmul fused into one event-compacted kernel pass.
+
+    Overlap/residual decomposition (packed bitwise kernel), then a single
+    CSR-grid kernel computes both matmuls — each weight k-tile is DMA'd
+    once and feeds the residual AND overlap dots — and accumulates the
+    overlap partial sum directly into its group's g residual output rows
+    in the epilogue. The union CSR pre-pass runs once and is shared
+    between the two operands (no per-matmul occupancy recompute, no
+    `jnp.repeat` combine pass).
+    """
+    lead = s.shape[:-2]
+    p, c = s.shape[-2:]
+    if p % g:
+        raise ValueError(f"positions {p} not divisible by group {g}")
+    if block_m % g:
+        raise ValueError(f"block_m {block_m} not divisible by group {g}")
+    s2 = s.reshape(-1, c)
+    ov, res = apec_decompose(s2, g)                  # packed bitwise kernel
+    res2, w2, p_orig, n_orig = _pad_operands(
+        res, w.astype(jnp.float32), block_m, block_n, block_k)
+    ov2, _ = _pad_to(ov, 0, block_m // g)            # rows stay group-aligned
+    ov2, _ = _pad_to(ov2, 1, block_k)
+    # One union pre-pass serves both operands: a k-tile enters the work
+    # list when either the residual or the overlap tile holds events, and
+    # per-step counts gate each dot separately in-kernel.
+    occ_res = tile_occupancy(res2, block_m, block_k)
+    occ_ov = tile_occupancy(ov2, block_m // g, block_k)
+    csr = _build_csr(occ_res + occ_ov, block_m, block_k)
+    steps = (csr.tile_m_idx, csr.tile_k_idx)
+    occ_res_steps = (occ_res[steps] * csr.valid).astype(jnp.int32)
+    occ_ov_steps = (occ_ov[steps] * csr.valid).astype(jnp.int32)
+    out = _apec_matmul_csr_core(res2, ov2, w2, csr, occ_res_steps,
+                                occ_ov_steps, g=g, block_m=block_m,
+                                block_n=block_n, block_k=block_k)
+    out = out[:p_orig, :n_orig]
+    return out.reshape(lead + (p, w.shape[-1])).astype(w.dtype)

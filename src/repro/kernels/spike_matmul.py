@@ -1,19 +1,34 @@
-"""Event-driven (occupancy-skipping) spike matmul — Pallas TPU kernel.
+"""Event-driven (occupancy-skipping) spike matmuls — Pallas TPU kernels.
 
 The EPE Core computes only while the AER FIFO is non-empty: no events, no
 work. Per-event scatter is hostile to the MXU, so the TPU-native event
-granularity is the VMEM tile: a precomputed occupancy map marks which
-(bm x bk) spike tiles contain any event, and the kernel skips the MXU dot
-(and the weight-tile VMEM read is wasted but the FLOPs are not) for empty
-tiles. Under the paper's measured sparsities (60-97%) most K-tiles of a
-spike matrix are empty at bk=128 only for highly structured sparsity; the
-practical win tracks `core.spikes.occupancy_fraction`, which the cost
-model and benchmarks report alongside.
+granularity is the VMEM tile. Two realizations live here:
 
-Grid: (M/bm, N/bn, K/bk), K innermost (sequential accumulation).
-out[i,j] = sum_k S[i,k] @ W[k,j], accumulated in an f32 VMEM scratch.
+* **Predicated** (`spike_matmul_pallas`): a dense (M/bm, N/bn, K/bk) grid
+  where a precomputed occupancy map gates the MXU dot with `pl.when`.
+  Empty tiles save FLOPs, but every grid step still runs and every weight
+  tile still streams HBM->VMEM — the wasted read the CSR form removes.
 
-APEC composes with this kernel: `apec_matmul` rewrites grouped positions
+* **Event-compacted** (`spike_matmul_csr_pallas`, `apec_matmul_csr_pallas`):
+  the occupancy map is drained into a CSR-of-tiles work list
+  (`core.spikes.TileCSR`) and the grid — via
+  `pltpu.PrefetchScalarGridSpec` — runs over occupied tiles only. The
+  scalar-prefetched tile indices feed the block index maps, so empty
+  tiles cost zero grid steps (concrete pre-pass) and zero tile DMA (the
+  traced pre-pass clamps padding steps onto already-resident tiles).
+  This is the TPU analogue of the AER FIFO draining to empty. The APEC
+  variant additionally fuses the overlap/residual combine: one pass over
+  the weight tiles accumulates both matmuls, and the epilogue broadcasts
+  each group's overlap partial sum into its g residual output rows
+  in-kernel — no `jnp.repeat` full-tensor pass afterwards.
+
+Under the paper's measured sparsities (60-97%) K-tiles of a spike matrix
+empty out only for spatially clustered events (which real feature maps
+have); the practical win tracks `core.spikes.occupancy_fraction`, which
+the cost model (`core.costmodel.tile_matmul_savings`) and benchmarks
+report alongside.
+
+APEC composes with both kernels: `apec_matmul` rewrites grouped positions
 as [overlap, residual...] rows, so residual tiles are strictly sparser and
 skip more often (DESIGN.md §2).
 """
@@ -25,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.spikes import TileCSR, occupancy_to_csr, tile_occupancy
 
 
 def _spike_matmul_kernel(occ_ref, s_ref, w_ref, out_ref, acc_ref, *,
@@ -67,8 +84,13 @@ def spike_matmul_pallas(
         raise ValueError(
             f"(M,K,N)=({m},{k},{n}) must tile by ({block_m},{block_k},{block_n})")
     if occupancy is None:
-        from repro.core.spikes import tile_occupancy
         occupancy = tile_occupancy(s, block_m, block_k)
+    if occupancy.shape != (m // block_m, k // block_k):
+        # A map built for another tiling would silently gate the wrong
+        # tiles (Pallas clamps out-of-range block indices) — refuse it.
+        raise ValueError(
+            f"occupancy shape {occupancy.shape} does not match tiling "
+            f"({m // block_m}, {k // block_k})")
     occupancy = occupancy.astype(jnp.int32)
 
     k_steps = k // block_k
@@ -87,3 +109,178 @@ def spike_matmul_pallas(
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(occupancy, s, w)
+
+
+# ---------------------------------------------------------------- CSR grid
+def _spike_matmul_csr_kernel(row_ref, kidx_ref, occ_ref,
+                             s_ref, w_ref, out_ref, acc_ref):
+    """One grid step per occupied (m-tile, k-tile); j (N-tile) is the outer
+    grid axis so steps of one output row are consecutive. The accumulator
+    resets on row change and flushes on the last step of each row; dummy /
+    padding steps (occ=0) contribute nothing but keep empty rows written
+    and clamped indices DMA-free (see core.spikes.TileCSR)."""
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    row = row_ref[t]
+
+    @pl.when((t == 0) | (row != row_ref[jnp.maximum(t - 1, 0)]))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[t] > 0)
+    def _accumulate():
+        acc_ref[...] += jnp.dot(
+            s_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when((t == n_t - 1) | (row_ref[jnp.minimum(t + 1, n_t - 1)] != row))
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def spike_matmul_csr_pallas(
+    s: jax.Array,
+    w: jax.Array,
+    csr: TileCSR | None = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Event-compacted matmul: grid over occupied tiles only.
+
+    s: (M, K) binary; w: (K, N) -> (M, N). `csr`: a precomputed
+    `core.spikes.TileCSR` for this (block_m, block_k) tiling (built here
+    if not supplied — suppliers get the pre-pass cost once per layer).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, k = s.shape
+    k2, n = w.shape
+    assert k == k2, (s.shape, w.shape)
+    if m % block_m or k % block_k or n % block_n:
+        raise ValueError(
+            f"(M,K,N)=({m},{k},{n}) must tile by ({block_m},{block_k},{block_n})")
+    if csr is None:
+        csr = occupancy_to_csr(tile_occupancy(s, block_m, block_k),
+                               tiling=(block_m, block_k))
+    csr.check_compatible(block_m, block_k, m // block_m, k // block_k)
+    if csr.n_rows != m // block_m:
+        raise ValueError(
+            f"csr has {csr.n_rows} m-tile rows, input needs {m // block_m}")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n // block_n, csr.n_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda j, t, row, kidx, occ: (row[t], kidx[t])),
+            pl.BlockSpec((block_k, block_n),
+                         lambda j, t, row, kidx, occ: (kidx[t], j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda j, t, row, kidx, occ: (row[t], j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _spike_matmul_csr_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=interpret,
+    )(csr.tile_m_idx, csr.tile_k_idx, csr.occ, s, w)
+
+
+def _apec_matmul_csr_kernel(row_ref, kidx_ref, occ_res_ref, occ_ov_ref,
+                            res_ref, ov_ref, w_ref, out_ref,
+                            acc_ref, acc_ov_ref, *, g: int):
+    """Fused APEC epilogue: the residual and overlap matmuls share one
+    pass over the weight tiles (one DMA serves both dots), and the flush
+    broadcasts each group's overlap partial sum into its g member rows
+    in-kernel — the `psum_res + jnp.repeat(psum_ov, g)` full-tensor pass
+    is gone from the `pallas-csr` path."""
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    row = row_ref[t]
+
+    @pl.when((t == 0) | (row != row_ref[jnp.maximum(t - 1, 0)]))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ov_ref[...] = jnp.zeros_like(acc_ov_ref)
+
+    @pl.when(occ_res_ref[t] > 0)
+    def _acc_res():
+        acc_ref[...] += jnp.dot(
+            res_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(occ_ov_ref[t] > 0)
+    def _acc_ov():
+        acc_ov_ref[...] += jnp.dot(
+            ov_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when((t == n_t - 1) | (row_ref[jnp.minimum(t + 1, n_t - 1)] != row))
+    def _flush():
+        bmg, bn = acc_ov_ref.shape
+        ov_rep = jnp.broadcast_to(acc_ov_ref[...][:, None, :],
+                                  (bmg, g, bn)).reshape(bmg * g, bn)
+        out_ref[...] = (acc_ref[...] + ov_rep).astype(out_ref.dtype)
+
+
+def apec_matmul_csr_pallas(
+    res: jax.Array,
+    ov: jax.Array,
+    w: jax.Array,
+    g: int,
+    csr: TileCSR,
+    occ_res: jax.Array,
+    occ_ov: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused APEC matmul over the event-compacted grid.
+
+    res: (M, K) residual spikes (M = padded positions, group members
+    adjacent); ov: (M/g, K) overlap spikes; w: (K, N). Output (M, N) =
+    res @ w + repeat(ov @ w, g) — computed in one kernel. `csr` must be
+    built from the *union* occupancy (a k-tile is visited when either
+    operand's tile holds events) and `occ_res`/`occ_ov` are the per-step
+    counts of each operand (0 on the other operand's exclusive steps and
+    on dummy/padding steps) — see `ops.apec_matmul_csr` for the pre-pass.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, k = res.shape
+    mg, kg = ov.shape
+    k2, n = w.shape
+    assert k == k2 == kg and mg * g == m, (res.shape, ov.shape, w.shape, g)
+    if block_m % g:
+        raise ValueError(f"block_m {block_m} not divisible by group {g}")
+    if m % block_m or k % block_k or n % block_n:
+        raise ValueError(
+            f"(M,K,N)=({m},{k},{n}) must tile by ({block_m},{block_k},{block_n})")
+
+    kernel = functools.partial(_apec_matmul_csr_kernel, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(n // block_n, csr.n_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda j, t, row, kidx, o1, o2: (row[t], kidx[t])),
+            pl.BlockSpec((block_m // g, block_k),
+                         lambda j, t, row, kidx, o1, o2: (row[t], kidx[t])),
+            pl.BlockSpec((block_k, block_n),
+                         lambda j, t, row, kidx, o1, o2: (kidx[t], j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda j, t, row, kidx, o1, o2: (row[t], j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
+                        pltpu.VMEM((block_m // g, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=interpret,
+    )(csr.tile_m_idx, csr.tile_k_idx, occ_res, occ_ov, res, ov, w)

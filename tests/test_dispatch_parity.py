@@ -231,6 +231,36 @@ def test_auto_resolution_warns_on_capability_fallback():
     np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w), atol=ATOL)
 
 
+def test_csr_constraint_degrades_to_pallas_not_ref():
+    """pallas-csr's declared fallback chain: a CSR-only constraint failure
+    (g=3 does not divide the 128-row tile) must degrade to the predicated
+    pallas kernel — same family, comparable sweep — never straight to ref.
+    """
+    s = (jax.random.uniform(jax.random.PRNGKey(20), (12, 32)) < 0.5
+         ).astype(jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(21), (32, 8))
+    with dispatch.use_backend("pallas-csr-interpret", op="apec_matmul"):
+        with pytest.warns(RuntimeWarning, match="degrading to "
+                          "'pallas-interpret'"):
+            assert dispatch.resolve_name("apec_matmul", s, w, g=3) \
+                == "pallas-interpret"
+        with pytest.warns(RuntimeWarning):
+            out = dispatch.apec_matmul(s, w, g=3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w), atol=ATOL)
+
+
+def test_csr_fallback_chain_ends_at_ref_when_whole_family_refuses():
+    """When the chained backend can't take the inputs either (P % g fails
+    for every packed path), the walk must still terminate at ref."""
+    s = (jax.random.uniform(jax.random.PRNGKey(22), (10, 32)) < 0.5
+         ).astype(jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(23), (32, 8))
+    with dispatch.use_backend("pallas-csr-interpret", op="apec_matmul"):
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            out = dispatch.apec_matmul(s, w, g=3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w), atol=ATOL)
+
+
 def test_unknown_backend_falls_back_to_ref_with_warning():
     args, kwargs = dispatch.example_inputs("sdsa", jax.random.PRNGKey(6))
     with dispatch.use_backend("no-such-backend", op="sdsa"):

@@ -1,0 +1,234 @@
+"""Event-compacted (CSR-of-tiles) grid: pre-pass + kernel edge cases.
+
+The registry parity harness already enumerates `pallas-csr[-interpret]`
+forward and backward against ref on canonical shapes; these tests pin the
+pre-pass invariants and the shapes the harness can't see: all-empty /
+all-full inputs, padded rows straddling a tile boundary, the traced
+(jit) compaction path, and the occupancy/CSR pass-through.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costmodel
+from repro.core.spikes import occupancy_to_csr, tile_csr, tile_occupancy
+from repro.kernels import ops
+from repro.kernels.spike_matmul import spike_matmul_csr_pallas
+
+
+def _spikes(key, shape, density):
+    return (jax.random.uniform(key, shape) < density).astype(jnp.float32)
+
+
+# ----------------------------------------------------------- CSR pre-pass
+def test_csr_matches_numpy_reference():
+    occ = jnp.asarray([[0, 3, 0, 1],
+                       [0, 0, 0, 0],
+                       [2, 0, 0, 0]])
+    csr = occupancy_to_csr(occ)
+    # occupied tiles row-major + one dummy for the all-empty row 1
+    np.testing.assert_array_equal(csr.row_ptr, [0, 2, 3, 4])
+    np.testing.assert_array_equal(csr.tile_m_idx, [0, 0, 1, 2])
+    np.testing.assert_array_equal(csr.tile_k_idx, [1, 3, 0, 0])
+    np.testing.assert_array_equal(csr.occ, [3, 1, 0, 2])  # dummy occ == 0
+    np.testing.assert_array_equal(csr.valid, [1, 1, 1, 1])
+    assert csr.n_steps == 4 and csr.n_rows == 3
+
+
+def test_csr_concrete_cap_is_trimmed_and_padding_clamps():
+    occ = jnp.asarray([[1, 0], [0, 5]])
+    trimmed = occupancy_to_csr(occ)
+    assert trimmed.n_steps == 2          # occupied tiles only, zero padding
+    padded = occupancy_to_csr(occ, cap=5)
+    # padding steps repeat the last real step (same tile -> no new DMA)
+    np.testing.assert_array_equal(padded.tile_m_idx, [0, 1, 1, 1, 1])
+    np.testing.assert_array_equal(padded.tile_k_idx, [0, 1, 1, 1, 1])
+    np.testing.assert_array_equal(padded.occ, [1, 5, 0, 0, 0])
+    np.testing.assert_array_equal(padded.valid, [1, 1, 0, 0, 0])
+    with pytest.raises(ValueError, match="cap"):
+        occupancy_to_csr(occ, cap=1)
+
+
+def test_csr_traced_matches_concrete():
+    occ = tile_occupancy(_spikes(jax.random.PRNGKey(0), (256, 256), 0.02),
+                         128, 128)
+    eager = occupancy_to_csr(occ, cap=4)
+    traced = jax.jit(occupancy_to_csr, static_argnames=("cap",))(occ, cap=4)
+    for a, b in zip(eager, traced):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_csr_all_empty_input_keeps_one_step_per_row():
+    csr = tile_csr(jnp.zeros((256, 384)), 128, 128)
+    assert csr.n_steps == 2              # one dummy per m-tile row, grid >= 1
+    np.testing.assert_array_equal(csr.occ, [0, 0])
+    np.testing.assert_array_equal(csr.row_ptr, [0, 1, 2])
+
+
+# ------------------------------------------------------------ kernel edges
+def test_csr_kernel_all_empty_writes_zeros():
+    s = jnp.zeros((256, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 128))
+    out = spike_matmul_csr_pallas(s, w, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+    out = ops.apec_matmul_csr(s, w, g=2)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_csr_kernel_all_full_matches_dense_and_pallas():
+    s = jnp.ones((256, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 128))
+    dense = np.asarray(s @ w)
+    np.testing.assert_allclose(
+        np.asarray(spike_matmul_csr_pallas(s, w, interpret=True)), dense,
+        atol=1e-3, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ops.spike_matmul_csr(s, w)),
+                               np.asarray(ops.spike_matmul(s, w)),
+                               atol=1e-3, rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", [(130, 200, 60), (100, 300, 200)])
+def test_csr_wrapper_padding_straddles_tile_boundary(m, k, n):
+    """Rows/cols pad up to the next 128 tile; the padded region must never
+    mark a tile occupied or corrupt the sliced-back result."""
+    s = _spikes(jax.random.PRNGKey(3), (m, k), 0.1)
+    w = jax.random.normal(jax.random.PRNGKey(4), (k, n))
+    out = ops.spike_matmul_csr(s, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_padding_never_marks_a_tile_occupied():
+    """An (130, 40) input whose rows 128..129 are zero: after padding to
+    (256, 128), tile row 1 holds only zeros + padding and must compact to
+    a dummy step (occ == 0), with output rows 128.. exactly zero."""
+    s = _spikes(jax.random.PRNGKey(5), (130, 40), 0.5).at[128:].set(0.0)
+    occ = ops.padded_occupancy(s, 128, 128)
+    assert occ.shape == (2, 1)
+    assert int(occ[1, 0]) == 0
+    csr = occupancy_to_csr(occ)
+    np.testing.assert_array_equal(csr.occ, [int(occ[0, 0]), 0])
+    w = jax.random.normal(jax.random.PRNGKey(6), (40, 16))
+    out = ops.spike_matmul_csr(s, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(out)[128:], 0.0)
+
+
+def test_csr_wrapper_traced_matches_eager():
+    """Under jit the compaction cap falls back to the dense bound; the
+    result must match the trimmed eager path bit-for-bit."""
+    s = _spikes(jax.random.PRNGKey(7), (2, 100, 96), 0.05)
+    w = jax.random.normal(jax.random.PRNGKey(8), (96, 56))
+    eager = ops.spike_matmul_csr(s, w)
+    jitted = jax.jit(ops.spike_matmul_csr)(s, w)
+    np.testing.assert_allclose(np.asarray(jitted), np.asarray(eager),
+                               atol=1e-5)
+    g = 2
+    eager = ops.apec_matmul_csr(s, w, g=g)
+    jitted = jax.jit(ops.apec_matmul_csr, static_argnames=("g",))(s, w, g=g)
+    np.testing.assert_allclose(np.asarray(jitted), np.asarray(eager),
+                               atol=1e-5)
+
+
+def test_apec_csr_fused_matches_dense_with_real_overlap():
+    """Groups with guaranteed overlap events: the fused in-kernel combine
+    (overlap psum broadcast into g member rows) must equal dense s @ w."""
+    base = _spikes(jax.random.PRNGKey(9), (64, 1, 96), 0.3)
+    member = _spikes(jax.random.PRNGKey(10), (64, 4, 96), 0.2)
+    s = jnp.maximum(jnp.broadcast_to(base, member.shape), member)
+    s = s.reshape(256, 96)               # g=4 groups share `base` overlap
+    w = jax.random.normal(jax.random.PRNGKey(11), (96, 48))
+    out = ops.apec_matmul_csr(s, w, g=4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w), atol=1e-4)
+
+
+# --------------------------------------------------- pass-through + costs
+def test_spike_matmul_occupancy_passthrough_matches():
+    s = _spikes(jax.random.PRNGKey(12), (100, 200), 0.1)
+    w = jax.random.normal(jax.random.PRNGKey(13), (200, 60))
+    occ = ops.padded_occupancy(s, 128, 128)
+    np.testing.assert_array_equal(
+        np.asarray(ops.spike_matmul(s, w, occupancy=occ)),
+        np.asarray(ops.spike_matmul(s, w)))
+
+
+def test_spike_matmul_rejects_mismatched_occupancy_shape():
+    """An occupancy map for another tiling would gate the wrong tiles
+    (Pallas clamps out-of-range block indices) — must raise, not skip."""
+    s = _spikes(jax.random.PRNGKey(18), (100, 200), 0.1)
+    w = jax.random.normal(jax.random.PRNGKey(19), (200, 60))
+    occ = ops.padded_occupancy(s, 128, 128)
+    with pytest.raises(ValueError, match="occupancy shape"):
+        ops.spike_matmul(s, w, block_m=64, block_n=64, block_k=64,
+                         occupancy=occ)
+
+
+def test_spike_matmul_csr_passthrough_matches():
+    s = _spikes(jax.random.PRNGKey(14), (100, 200), 0.1)
+    w = jax.random.normal(jax.random.PRNGKey(15), (200, 60))
+    csr = occupancy_to_csr(ops.padded_occupancy(s, 128, 128))
+    np.testing.assert_array_equal(
+        np.asarray(ops.spike_matmul_csr(s, w, csr)),
+        np.asarray(ops.spike_matmul_csr(s, w)))
+
+
+def test_spike_matmul_csr_rejects_mismatched_tiling():
+    """A work list built for one tiling holds k-tile indices that are
+    meaningless under another — the tagged CSR must be refused loudly
+    instead of producing a silently wrong product."""
+    s = _spikes(jax.random.PRNGKey(16), (256, 256), 0.1)
+    w = jax.random.normal(jax.random.PRNGKey(17), (256, 64))
+    csr = tile_csr(s, 128, 128)
+    assert csr.tiling == (128, 128)
+    with pytest.raises(ValueError, match="tiling"):
+        ops.spike_matmul_csr(s, w, csr, block_k=64)
+
+
+def test_spike_matmul_csr_rejects_mismatched_tile_grid():
+    """Same tiling, different operand: a CSR compacted from a (2, 2) tile
+    grid must be refused for a (2, 4)-grid spike tensor — its k-tile
+    indices would gate the wrong tiles silently."""
+    s_small = _spikes(jax.random.PRNGKey(24), (256, 256), 0.1)
+    s_big = _spikes(jax.random.PRNGKey(25), (256, 512), 0.1)
+    w = jax.random.normal(jax.random.PRNGKey(26), (512, 64))
+    csr = tile_csr(s_small, 128, 128)
+    assert csr.map_shape == (2, 2)
+    with pytest.raises(ValueError, match="tile grid"):
+        ops.spike_matmul_csr(s_big, w, csr)
+
+
+def test_csr_wrapper_buckets_grid_sizes_against_recompiles():
+    """Concrete inputs with shifting occupancy must reuse a bounded set of
+    compiled kernel cores: the wrapper rounds the trimmed step count up to
+    a power of two (padding steps are DMA/FLOP-free), so a sweep over
+    occupied-tile counts maps to O(log) distinct grid sizes."""
+    w = jax.random.normal(jax.random.PRNGKey(27), (512, 64))
+    caps = set()
+    for n_live in range(1, 9):
+        s = jnp.zeros((512, 512), jnp.float32)
+        for t in range(n_live):      # occupy k-tiles of row-tile t % 4
+            s = s.at[128 * (t % 4), 128 * (t // 4)].set(1.0)
+        out = ops.spike_matmul_csr(s, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w),
+                                   atol=1e-4)
+        caps.add(ops._build_csr(ops.padded_occupancy(s), 128, 128).n_steps)
+    assert all((c & (c - 1)) == 0 for c in caps)   # powers of two
+    assert len(caps) < 8 // 2 + 2                  # bounded bucket count
+
+
+def test_costmodel_separates_flops_from_dma():
+    occ = np.array([[4, 0, 0, 0],        # 1 occupied + 3 empty
+                    [0, 0, 0, 0]])       # all-empty row -> dummy step
+    pred = costmodel.tile_matmul_savings(occ, 128, backend="pallas")
+    csr = costmodel.tile_matmul_savings(occ, 128, backend="pallas-csr")
+    # both skip the MXU work of the 7 empty tiles...
+    assert pred.flops_saved == csr.flops_saved > 0
+    # ...but only the compacted grid skips their DMA (dummy step charged)
+    assert pred.dma_bytes_saved == 0.0
+    assert csr.grid_steps_run == 2       # 1 occupied + 1 dummy
+    assert csr.dma_bytes_saved == 6 * (128 * 128 * 4 + 128 * 128 * 4)
+    full = costmodel.tile_matmul_savings(np.ones((2, 4)), 128,
+                                         backend="pallas-csr")
+    assert full.flops_saved == full.dma_bytes_saved == 0.0
+    assert full.grid_steps_run == full.grid_steps_total
