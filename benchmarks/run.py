@@ -53,6 +53,9 @@ def _suites():
         ("roofline", roofline.run),
         ("backends", kernel_backends.run),
         ("sparsity", sparsity_sweep.run),
+        # sharded-vs-single CSR columns (8-way host mesh; re-launches
+        # itself with forced host devices when this process has fewer)
+        ("sparsity_mesh", sparsity_sweep.run_mesh_rows),
     ]
 
 

@@ -22,6 +22,16 @@ ledgers the backends differ on.
 
 The suite times fixed formulations against each other, so (like fig2) its
 numbers do not respond to ``--backend`` overrides, by design.
+
+``--mesh`` (or the ``sparsity_mesh`` suite in benchmarks.run) adds the
+sharded columns: the same CSR op at the same sparsity points, single
+device vs row-sharded over an 8-way ('data') host mesh through
+`runtime.sharding.event_op_sharded` — mesh-aware registry resolution,
+per-shard `TileCSR` work lists (`core.spikes.shard_occupancy_to_csr`, no
+global-occupancy gather), and per-shard occupancy columns
+(`runtime.straggler.occupancy_imbalance`: ``occ_per_shard``/``occ_max``/
+``occ_mean``/``occ_imbalance``) since event-load skew is what makes
+sharded event execution straggle. Committed as BENCH_PR4.json.
 """
 from __future__ import annotations
 
@@ -112,5 +122,159 @@ def run() -> list[str]:
     return rows
 
 
+# ------------------------------------------------------------- mesh sweep
+MESH_SHARDS = 8
+# 128 rows per shard at 8 shards: every shard's tile grid divides cleanly,
+# so the csr family passes its per-shard gate (the point of the sweep).
+M_MESH = 1024
+
+
+def run_mesh(n_shards: int = MESH_SHARDS) -> list[str]:
+    """Sharded vs single-device CSR at the same sparsity points.
+
+    Both variants pin the CSR family; the sharded rows go through
+    `event_op_sharded` (mesh-aware resolution + per-shard work lists) and
+    carry the resolved attribution plus the per-shard occupancy columns.
+    On one physical CPU the 8 host devices are threads, so sharded wall
+    time mixes real thread parallelism with partitioning overhead — the
+    columns that transfer to real meshes are the per-shard occupancy /
+    imbalance ones.
+
+    Grid formulation per row (the ``grid=`` field): spike_matmul shards
+    consume eager per-shard trimmed work lists (`csr_stack`); apec has no
+    CSR pass-through (its union pre-pass is built in-kernel), so its
+    sharded variant traces the pre-pass and runs the dense-capped clamped
+    grid while its single row runs the eager trimmed grid — an asymmetry
+    the field makes explicit rather than hides.
+    """
+    from repro.core.spikes import shard_occupancy_to_csr, stack_shard_csrs
+    from repro.kernels import dispatch
+    from repro.launch.mesh import make_mesh
+    from repro.runtime import sharding
+
+    platform = jax.default_backend()
+    if len(jax.devices()) < n_shards:
+        raise RuntimeError(
+            f"mesh sweep needs {n_shards} devices, have {len(jax.devices())}"
+            " (run via --mesh, which re-launches with host devices forced)")
+    mesh = make_mesh((n_shards, 1), ("data", "model"))
+    csr = "pallas-csr" if platform == "tpu" else "pallas-csr-interpret"
+    rows = []
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    for op, single_fn, kwargs in (
+            ("spike_matmul", ops.spike_matmul_csr, {}),
+            ("apec_matmul",
+             functools.partial(ops.apec_matmul_csr, g=APEC_G),
+             {"g": APEC_G})):
+        for sparsity in SPARSITIES:
+            key = jax.random.PRNGKey(int(sparsity * 1000))
+            s = clustered_spikes(key, M_MESH, K, sparsity)
+            stats = _savings_fields(s, N)
+            with dispatch.use_backend(csr, op=op):
+                t_single = time_fn(single_fn, s, w) * 1e6
+                if op == "spike_matmul":
+                    # per-shard eager pre-pass: each shard's trimmed work
+                    # list, one shared pow2 cap, no global-map gather
+                    stack = stack_shard_csrs(shard_occupancy_to_csr(
+                        ops.padded_occupancy(s, BLOCK, BLOCK), n_shards,
+                        tiling=(BLOCK, BLOCK)))
+                    sharded = jax.jit(functools.partial(
+                        sharding.event_op_sharded, mesh, op,
+                        csr_stack=stack))
+                    grid = "trimmed"
+                else:
+                    sharded = jax.jit(functools.partial(
+                        sharding.event_op_sharded, mesh, op, **kwargs))
+                    grid = "dense-capped"    # traced in-shard pre-pass
+                _, rep = sharding.event_op_sharded(
+                    mesh, op, s, w, with_report=True, **kwargs)
+                t_shard = time_fn(sharded, s, w) * 1e6
+            pct = int(sparsity * 100)
+            rows.append(csv_row(
+                f"sparsity/mesh/{op}/single/s{pct}", t_single,
+                f"platform={platform};shards=1;backend={csr};"
+                f"grid=trimmed;{stats}"))
+            rows.append(csv_row(
+                f"sparsity/mesh/{op}/sharded/s{pct}", t_shard,
+                f"platform={platform};shards={n_shards};"
+                f"backend={rep['backend']};resolved={rep['attribution']};"
+                f"grid={grid};{rep['occupancy'].as_fields()};{stats}"))
+    return rows
+
+
+def _mesh_subprocess_rows(n_shards: int = MESH_SHARDS) -> list[str]:
+    """Re-launch this module with `n_shards` forced host devices (the XLA
+    device-count flag is process-global and must precede the jax import)
+    and collect its CSV rows."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_shards} "
+                        "--xla_backend_optimization_level=0")
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.sparsity_sweep", "--mesh",
+         "--shards", str(n_shards)],
+        capture_output=True, text=True, env=env)
+    if proc.returncode != 0:
+        raise RuntimeError(f"mesh sweep subprocess failed:\n{proc.stderr}")
+    return [ln for ln in proc.stdout.splitlines() if ln.strip()]
+
+
+def run_mesh_rows() -> list[str]:
+    """Suite entry for benchmarks.run: in-process when the host already
+    exposes enough devices, else via the forced-device subprocess."""
+    if len(jax.devices()) >= MESH_SHARDS:
+        return run_mesh()
+    return _mesh_subprocess_rows()
+
+
+def main() -> None:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", action="store_true",
+                    help="sharded-vs-single CSR columns on an "
+                         f"{MESH_SHARDS}-way host mesh")
+    ap.add_argument("--shards", type=int, default=MESH_SHARDS)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="(with --mesh) also write BENCH_PR4-schema JSON: "
+                         "mesh shape, mesh-aware resolved backends "
+                         "(attribution), and the rows")
+    args = ap.parse_args()
+    if not args.mesh:
+        print("\n".join(run()))
+        return
+    if len(jax.devices()) < args.shards:
+        rows = _mesh_subprocess_rows(args.shards)
+    else:
+        rows = run_mesh(args.shards)
+    print("\n".join(rows))
+    if args.json:
+        from repro.kernels import dispatch
+        csr = ("pallas-csr" if jax.default_backend() == "tpu"
+               else "pallas-csr-interpret")
+        # Two resolution snapshots: the canonical example shapes are too
+        # small to fill per-shard 128-row tiles, so their attribution
+        # shows the degrade chain ("pallas<-pallas-csr"); the bench
+        # shapes (M_MESH rows) divide cleanly, so the csr family holds —
+        # per-row `resolved=` fields record it. Committing both pins the
+        # two sides of the mesh gate.
+        with dispatch.use_backend(csr, op="spike_matmul"), \
+                dispatch.use_backend(csr, op="apec_matmul"), \
+                dispatch.use_backend(csr, op="econv"):
+            resolved_small = dispatch.resolved_backends(mesh=args.shards)
+        with open(args.json, "w") as f:
+            json.dump({"mesh": {"shards": args.shards,
+                                "axes": ["data", "model"],
+                                "platform": jax.default_backend()},
+                       "requested_csr_family": csr,
+                       "bench_rows_per_shard": M_MESH // args.shards,
+                       "resolved_mesh_aware_example_shapes": resolved_small,
+                       "rows": rows}, f, indent=2)
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

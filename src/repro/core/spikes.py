@@ -218,6 +218,82 @@ def tile_csr(s: jax.Array, tile_m: int, tile_k: int,
                             tiling=(tile_m, tile_k))
 
 
+def pow2_step_cap(n_steps: int, dense: int) -> int:
+    """Round a CSR step count up to the next power of two, capped at the
+    dense bound.
+
+    The concrete pre-pass trims the grid to the occupied-tile count, but a
+    *different* count per call (or per shard) would compile a fresh kernel
+    core every time occupancy shifts. Padding steps are DMA/FLOP-free by
+    design, so bucketing the cap at powers of two bounds the distinct grid
+    sizes at O(log(dense)) while keeping the grid within 2x of exact.
+    """
+    n_steps = max(1, int(n_steps))
+    return min(int(dense), 1 << (n_steps - 1).bit_length())
+
+
+def shard_occupancy_to_csr(occ: jax.Array, n_shards: int,
+                           tiling: Optional[tuple] = None) -> list:
+    """Per-shard CSR pre-pass for mesh execution: one work list per data
+    shard, built from that shard's rows of the occupancy map only.
+
+    The (MT, KT) map is split row-contiguously into `n_shards` local
+    (MT/n_shards, KT) maps — exactly the rows each shard of a row-sharded
+    spike matrix owns — and each is compacted independently: no shard's
+    work list depends on another shard's occupancy, which is what lets the
+    sharded pre-pass run without gathering the global map (each device
+    computes its own from its resident spikes).
+
+    All shards share ONE `pow2_step_cap` bucket (sized by the most
+    occupied shard), so every per-shard grid is congruent: the compiled
+    kernel core is identical across shards, the per-shard CSRs stack into
+    batched arrays, and one shard's occupancy shift re-buckets — and hence
+    recompiles — only when it crosses a power-of-two boundary, never
+    because a *different* shard changed.
+
+    Concrete maps only (the eager serve/benchmark pre-pass). Under
+    tracing the split is the mesh's job: inside shard_map each shard
+    compacts its local occupancy via `occupancy_to_csr`'s traced path.
+    """
+    if isinstance(occ, jax.core.Tracer):
+        raise ValueError(
+            "shard_occupancy_to_csr is the eager (concrete) pre-pass; "
+            "under tracing each shard compacts its local occupancy inside "
+            "shard_map via occupancy_to_csr")
+    mt, kt = occ.shape
+    if mt % n_shards:
+        raise ValueError(
+            f"occupancy rows {mt} not divisible by {n_shards} shards")
+    rows = mt // n_shards
+    occ_np = np.asarray(occ)
+    locals_ = [jnp.asarray(occ_np[i * rows:(i + 1) * rows])
+               for i in range(n_shards)]
+    exact = [occupancy_to_csr(o, tiling=tiling) for o in locals_]
+    cap = pow2_step_cap(max(c.n_steps for c in exact), rows * kt)
+    if all(c.n_steps == cap for c in exact):
+        return exact
+    return [occupancy_to_csr(o, cap=cap, tiling=tiling) for o in locals_]
+
+
+def stack_shard_csrs(csrs: list) -> TileCSR:
+    """Stack per-shard `TileCSR`s (equal caps — `shard_occupancy_to_csr`
+    guarantees it) into one TileCSR with a leading shard axis per field,
+    ready to feed shard_map with `P('data')` specs: each shard receives
+    its own work list and the global map never materializes on any device.
+    The static tags stay the (identical) per-shard ones, so in-shard
+    compatibility checks validate against local tile grids."""
+    caps = {c.n_steps for c in csrs}
+    if len(caps) != 1:
+        raise ValueError(f"per-shard caps differ: {sorted(caps)}")
+    tags = {(c.tiling, c.map_shape) for c in csrs}
+    if len(tags) != 1:
+        raise ValueError(f"per-shard CSR tags differ: {tags}")
+    return TileCSR(*[jnp.stack([getattr(c, f) for c in csrs])
+                     for f in ("row_ptr", "tile_m_idx", "tile_k_idx",
+                               "occ", "valid")],
+                   csrs[0].tiling, csrs[0].map_shape)
+
+
 def to_binary(x: jax.Array) -> jax.Array:
     """Clamp any tensor to exact {0,1} in its own dtype (defensive)."""
     return (x > 0).astype(x.dtype)

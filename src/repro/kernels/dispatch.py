@@ -51,6 +51,17 @@ Selection order per call:
 Resolution happens at trace time (shapes/dtypes are static under jit), so
 dispatch adds zero runtime cost to compiled code.
 
+Distributed execution resolves through the SAME registry: under
+`resolve(..., mesh=)` or an ambient `use_mesh(...)` context (what
+`launch.steps` pushes around sharded step tracing and
+`runtime.sharding.event_op_sharded` uses inside shard_map), candidates
+are filtered to backends declaring the `mesh_aware` capability and every
+capability check runs on the PER-SHARD shapes, so "distributed" can never
+silently mean "dense jnp math": the `pallas-csr` family stays selected
+while each shard's tile grid divides cleanly and degrades down its
+declared fallback chain (with `resolved_backends()` attribution) when it
+doesn't.
+
 Registering a new kernel is one `register(...)` call; the parity harness
 (`tests/test_dispatch_parity.py`) enumerates every registered
 (op x backend) pair against `ref` automatically, and
@@ -63,10 +74,11 @@ import dataclasses
 import functools
 import os
 import warnings
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 ENV_VAR = "EXSPIKE_BACKEND"
 REF = "ref"
@@ -94,6 +106,20 @@ class Backend:
     # degraded sweep comparable: still the kernel family, not the ref
     # oracle). None falls straight to ref, the universal fallback.
     fallback: Optional[str] = None
+    # Mesh capability: may this backend be picked when resolution runs
+    # under a device mesh (`resolve(..., mesh=)` / `use_mesh(...)`, i.e.
+    # the op will execute per data shard inside shard_map / sharded jit)?
+    #   False     — never (the safe default for new registrations: a
+    #               backend must declare shard-locality explicitly);
+    #   True      — per-shard execution is safe whenever plain `supports`
+    #               passes on the per-shard shapes;
+    #   callable  — an extra per-shard gate with the `supports` signature,
+    #               run on the per-shard (local) shapes; returns a reason
+    #               string when the sharded execution should degrade (the
+    #               CSR family uses this to require that each shard's row
+    #               count fills whole 128-row tiles, keeping every shard's
+    #               compacted tile grid congruent).
+    mesh_aware: Union[bool, Callable[..., Optional[str]]] = False
 
     def unsupported_reason(self, *args, **kwargs) -> Optional[str]:
         platform = jax.default_backend()
@@ -101,6 +127,18 @@ class Backend:
             return f"platform {platform} not in {self.platforms}"
         if self.supports is not None:
             return self.supports(*args, **kwargs)
+        return None
+
+    def mesh_unsupported_reason(self, *args, **kwargs) -> Optional[str]:
+        """Like `unsupported_reason`, evaluated on PER-SHARD shapes, with
+        the mesh-awareness capability folded in."""
+        if self.mesh_aware is False:
+            return "backend not declared mesh-aware"
+        reason = self.unsupported_reason(*args, **kwargs)
+        if reason is not None:
+            return reason
+        if callable(self.mesh_aware):
+            return self.mesh_aware(*args, **kwargs)
         return None
 
 
@@ -167,7 +205,7 @@ def _matmul_bwd(res, kwargs, g):
 
 def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
              auto=True, supports=None, differentiable=False, vjp=None,
-             fallback=None):
+             fallback=None, mesh_aware=False):
     """Decorator: register `fn` as backend `name` for `op`.
 
     Gradient contract: pass ``differentiable=True`` when `jax.grad`
@@ -181,6 +219,11 @@ def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
     backend's capability check fails (chains until a supported backend;
     `ref` remains the terminal fallback). Auto-selection already falls
     through by priority and ignores this.
+
+    ``mesh_aware``: mesh capability (see `Backend.mesh_aware`) — False
+    (default) keeps the backend off every sharded path; True admits it
+    whenever `supports` passes per shard; a callable is an extra
+    per-shard gate run on local shapes.
     """
     def deco(fn):
         if op not in _REGISTRY:
@@ -190,7 +233,7 @@ def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
             name=name, fn=wrapped, platforms=tuple(platforms),
             priority=priority, auto=auto, supports=supports,
             differentiable=differentiable or vjp is not None,
-            fallback=fallback)
+            fallback=fallback, mesh_aware=mesh_aware)
         return fn
     return deco
 
@@ -268,23 +311,126 @@ def use_backend(name: str, op: Optional[str] = None):
         _OVERRIDES.pop()
 
 
+# ------------------------------------------------------------ mesh context
+_MESH: list = []   # stack of ambient meshes for trace-time resolution
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Ambient mesh for resolution: while active, `resolve`/`dispatch`
+    treat every call as executing per data shard (capability checks run on
+    per-shard shapes, non-mesh-aware backends are skipped). Push it around
+    jit tracing of sharded step functions — resolution is trace-time, so
+    the context must be live when the jit cache misses, not per step.
+    `mesh` may be a jax Mesh/AbstractMesh or a plain int shard count."""
+    _MESH.append(mesh)
+    try:
+        yield
+    finally:
+        _MESH.pop()
+
+
+def ambient_mesh():
+    return _MESH[-1] if _MESH else None
+
+
+def data_shard_count(mesh) -> int:
+    """Number of data shards the row axis splits over: the product of the
+    batch-parallel ('pod', 'data') mesh axes — the 'model' axis shards
+    features/heads, not event rows. Ints pass through; no mesh -> 1."""
+    if mesh is None:
+        return 1
+    if isinstance(mesh, int):
+        return max(1, mesh)
+    shape = getattr(mesh, "shape", None)
+    if hasattr(shape, "get"):        # Mesh / AbstractMesh shape mapping
+        n = 1
+        for ax in ("pod", "data"):
+            n *= int(shape.get(ax, 1))
+        return max(1, n)
+    return max(1, int(getattr(mesh, "size", 1)))
+
+
+def _shard_view(args, n_shards: int):
+    """Per-shard stand-ins for capability checks: the first positional
+    (the event/activation operand — every registered op takes it first)
+    has its leading axis divided by the shard count; weights and the rest
+    are replicated. Uses ShapeDtypeStructs, which is all `supports` /
+    `mesh_aware` gates may inspect (shapes/dtypes/static kwargs only).
+    A non-dividing leading axis models GSPMD's padded shards (ceil)."""
+    if not args:
+        return args
+    x = args[0]
+    shape = getattr(x, "shape", None)
+    dtype = getattr(x, "dtype", None)
+    if not shape or dtype is None:
+        return args
+    lead = -(-int(shape[0]) // n_shards)
+    local = jax.ShapeDtypeStruct((lead,) + tuple(shape[1:]), dtype)
+    return (local,) + tuple(args[1:])
+
+
 # -------------------------------------------------------------- resolution
+# Degrade/fallback warnings fire once per (op, from-backend, to-backend)
+# per process: resolution runs at trace time, and a retrace storm
+# repeating the same RuntimeWarning hundreds of times buries the one
+# occurrence that matters. `reset_fallback_warnings()` re-arms (tests).
+_WARNED: set = set()
+
+
+def reset_fallback_warnings() -> None:
+    _WARNED.clear()
+
+
+def _warn_once(op: str, src: str, dst: str, msg: str,
+               stacklevel: int = 3) -> None:
+    key = (op, src, dst)
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(msg, RuntimeWarning, stacklevel=stacklevel + 1)
+
+
 def _fallback(op: str, wanted: str, reason: str) -> Backend:
-    warnings.warn(
+    _warn_once(
+        op, wanted, REF,
         f"exspike dispatch: backend {wanted!r} for op {op!r} unavailable "
-        f"({reason}); falling back to {REF!r}", RuntimeWarning, stacklevel=3)
+        f"({reason}); falling back to {REF!r}", stacklevel=3)
     return _REGISTRY[op].backends[REF]
 
 
-def resolve(op: str, *args, **kwargs) -> Backend:
-    """Pick the backend that `dispatch` would run for these inputs."""
+def resolve_with_attribution(op: str, *args, mesh=None,
+                             **kwargs) -> Tuple[Backend, str]:
+    """Pick the backend `dispatch` would run, plus an attribution string:
+    the backend name, suffixed ``<-requested`` when resolution degraded
+    from a higher-preference backend (override fallback chain or a
+    mesh/capability gate) — `resolved_backends()` surfaces this so sweeps
+    and serve logs show what *actually* ran and why it moved. `resolve` /
+    `resolve_attribution` are the single-value projections."""
     spec = _REGISTRY[op]
+    mesh = mesh if mesh is not None else ambient_mesh()
+    n_shards = data_shard_count(mesh)
+    if n_shards > 1:
+        check_args = _shard_view(args, n_shards)
+
+        def reason_of(be: Backend) -> Optional[str]:
+            return be.mesh_unsupported_reason(*check_args, **kwargs)
+    else:
+        def reason_of(be: Backend) -> Optional[str]:
+            return be.unsupported_reason(*args, **kwargs)
+
+    def attributed(be: Backend, requested: Optional[str]) -> Tuple[Backend, str]:
+        if requested is None or requested == be.name:
+            return be, be.name
+        return be, f"{be.name}<-{requested}"
+
     override = _override_for(op)
     if override is not None:
         be = spec.backends.get(override)
         if be is None:
-            return _fallback(op, override, "not registered")
-        reason = be.unsupported_reason(*args, **kwargs)
+            return attributed(_fallback(op, override, "not registered"),
+                              override)
+        reason = reason_of(be)
         # Walk the declared fallback chain (pallas-csr -> pallas -> ...)
         # before surrendering to ref, so a constraint failure degrades to
         # the nearest comparable kernel, not all the way to the oracle.
@@ -294,15 +440,16 @@ def resolve(op: str, *args, **kwargs) -> Backend:
             nxt = spec.backends.get(be.fallback)
             if nxt is None:
                 break
-            warnings.warn(
+            _warn_once(
+                op, be.name, nxt.name,
                 f"exspike dispatch: backend {be.name!r} for op {op!r} "
                 f"unavailable ({reason}); degrading to {nxt.name!r}",
-                RuntimeWarning, stacklevel=2)
+                stacklevel=4)
             seen.add(nxt.name)
-            be, reason = nxt, nxt.unsupported_reason(*args, **kwargs)
+            be, reason = nxt, reason_of(nxt)
         if reason is not None:
-            return _fallback(op, be.name, reason)
-        return be
+            return attributed(_fallback(op, be.name, reason), override)
+        return attributed(be, override)
     platform = jax.default_backend()
     candidates = sorted(
         (b for b in spec.backends.values()
@@ -312,26 +459,43 @@ def resolve(op: str, *args, **kwargs) -> Backend:
     for be in candidates:
         if be.name == REF:
             break
-        reason = be.supports(*args, **kwargs) if be.supports else None
+        reason = reason_of(be)
         if reason is None:
-            return be
+            return attributed(be, cap_failure[0] if cap_failure else None)
         if cap_failure is None:
             cap_failure = (be.name, reason)
     if cap_failure is not None:
-        # A capability failure (shape/dtype/mode) silently degrading to
-        # the oracle would hide lost compression/kernel coverage — warn.
-        # (Platform filtering above is expected and stays silent.)
-        return _fallback(op, *cap_failure)
-    return spec.backends[REF]
+        # A capability failure (shape/dtype/mode/mesh gate) silently
+        # degrading to the oracle would hide lost compression/kernel
+        # coverage — warn. (Platform filtering stays silent.)
+        return attributed(_fallback(op, *cap_failure), cap_failure[0])
+    return spec.backends[REF], REF
 
 
-def resolve_name(op: str, *args, **kwargs) -> str:
-    return resolve(op, *args, **kwargs).name
+def resolve(op: str, *args, mesh=None, **kwargs) -> Backend:
+    """Pick the backend that `dispatch` would run for these inputs.
+
+    `mesh`: resolve as if executing per data shard of that mesh (or the
+    ambient `use_mesh` one) — mesh-aware filtering + per-shard capability
+    checks. None with no ambient mesh is the plain single-device path.
+    """
+    return resolve_with_attribution(op, *args, mesh=mesh, **kwargs)[0]
 
 
-def dispatch(op: str, *args, **kwargs):
-    """Run `op` on the resolved backend."""
-    return resolve(op, *args, **kwargs).fn(*args, **kwargs)
+def resolve_name(op: str, *args, mesh=None, **kwargs) -> str:
+    return resolve(op, *args, mesh=mesh, **kwargs).name
+
+
+def resolve_attribution(op: str, *args, mesh=None, **kwargs) -> str:
+    """Attribution string for this resolution: ``name`` normally,
+    ``name<-requested`` when a fallback chain / mesh gate degraded it."""
+    return resolve_with_attribution(op, *args, mesh=mesh, **kwargs)[1]
+
+
+def dispatch(op: str, *args, mesh=None, **kwargs):
+    """Run `op` on the resolved backend (`mesh` steers resolution only —
+    it is never forwarded to the backend fn)."""
+    return resolve(op, *args, mesh=mesh, **kwargs).fn(*args, **kwargs)
 
 
 def call_backend(op: str, name: str, *args, **kwargs):
@@ -348,15 +512,29 @@ def call_backend(op: str, name: str, *args, **kwargs):
     return be.fn(*args, **kwargs)
 
 
-def resolved_backends() -> Dict[str, str]:
+def resolved_backends(mesh=None) -> Dict[str, str]:
     """op -> backend that would run on this platform/override for each
-    op's canonical example shapes (serve startup log)."""
+    op's canonical example shapes (serve startup log). With `mesh` (or an
+    ambient `use_mesh`), resolution is mesh-aware and values carry degrade
+    attribution: ``name`` when the preferred backend held,
+    ``name<-requested`` when a fallback chain or per-shard gate moved it.
+    """
     out = {}
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", RuntimeWarning)
-        for op in op_names():
-            ex_args, ex_kwargs = example_inputs(op, jax.random.PRNGKey(0))
-            out[op] = resolve_name(op, *ex_args, **ex_kwargs)
+    # This is a read-only snapshot: suppress the degrade warnings AND
+    # restore the warn-once ledger afterwards, so a startup log call
+    # doesn't consume an (op, from, to) edge and mute the one warning a
+    # later real-model degrade on that same edge would have fired.
+    saved_warned = set(_WARNED)
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            for op in op_names():
+                ex_args, ex_kwargs = example_inputs(op, jax.random.PRNGKey(0))
+                out[op] = resolve_attribution(op, *ex_args, mesh=mesh,
+                                              **ex_kwargs)
+    finally:
+        _WARNED.clear()
+        _WARNED.update(saved_warned)
     return out
 
 
@@ -367,7 +545,8 @@ def table() -> str:
     for op, spec in _REGISTRY.items():
         bes = ", ".join(
             f"{b.name}(p{b.priority}{'' if b.auto else ',manual'}"
-            f"{',grad' if b.differentiable else ''})"
+            f"{',grad' if b.differentiable else ''}"
+            f"{',mesh' if b.mesh_aware is not False else ''})"
             for b in sorted(spec.backends.values(), key=lambda b: -b.priority))
         lines.append(f"{op:14s} -> {bes}")
     return "\n".join(lines)
@@ -376,6 +555,24 @@ def table() -> str:
 # ======================================================================
 # Op definitions + backend implementations
 # ======================================================================
+def _csr_shard_gate(s, *rest, block_m: int = 128, **kwargs) -> Optional[str]:
+    """Per-shard gate for the `pallas-csr` family (`Backend.mesh_aware`):
+    the compacted grid is worth building per shard only when the shard's
+    flattened row count fills whole `block_m`-row tiles — then every
+    shard's tile grid is congruent (one compiled grid shape serves all
+    shards) and no shard pays a ragged padding tile per step. Called on
+    the per-shard local view; rows = prod(shape[:-1]) matches how the ops
+    wrappers flatten leading axes into the row axis (for strided econv
+    the output-row count shrinks, which only makes the gate conservative).
+    """
+    del kwargs
+    rows = int(np.prod(s.shape[:-1]))
+    if rows % block_m:
+        return (f"per-shard rows {rows} do not fill {block_m}-row tiles "
+                f"(ragged per-shard tile grid)")
+    return None
+
+
 # ------------------------------------------------------------- lif_scan
 def _lif_example(key):
     x = jax.random.normal(key, (4, 3, 40)) * 2.0
@@ -385,7 +582,7 @@ def _lif_example(key):
 register_op("lif_scan", _lif_example)
 
 
-@register("lif_scan", REF, priority=0, differentiable=True)
+@register("lif_scan", REF, priority=0, differentiable=True, mesh_aware=True)
 def _lif_ref(x, *, decay=0.5, v_th=1.0, soft_reset=True,
              surrogate_alpha=2.0):
     from repro.core.lif import LIFConfig, lif_scan
@@ -404,10 +601,13 @@ def _lif_pallas(x, *, decay=0.5, v_th=1.0, soft_reset=True,
                    surrogate_alpha=surrogate_alpha)
 
 
+# NOTE: lif's leading axis is TIME, which no mesh axis shards (batch is
+# axis 1) — the scan is elementwise over trailing dims, so the per-shard
+# view's divided leading axis is still a valid shape for it.
 register("lif_scan", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False, differentiable=True)(_lif_pallas)
+         auto=False, differentiable=True, mesh_aware=True)(_lif_pallas)
 register("lif_scan", "pallas", platforms=("tpu",), priority=20,
-         differentiable=True)(_lif_pallas)
+         differentiable=True, mesh_aware=True)(_lif_pallas)
 
 
 # --------------------------------------------------------- spike_matmul
@@ -421,12 +621,14 @@ def _spike_matmul_example(key):
 register_op("spike_matmul", _spike_matmul_example)
 
 
-@register("spike_matmul", REF, priority=0, differentiable=True)
+@register("spike_matmul", REF, priority=0, differentiable=True,
+          mesh_aware=True)
 def _spike_matmul_ref(s, w):
     return jnp.dot(s, w, preferred_element_type=jnp.float32).astype(w.dtype)
 
 
-@register("spike_matmul", "jnp", priority=5, auto=False, vjp=_matmul_bwd)
+@register("spike_matmul", "jnp", priority=5, auto=False, vjp=_matmul_bwd,
+          mesh_aware=True)
 def _spike_matmul_jnp(s, w, block_m: int = 8, block_k: int = 32):
     """Tile-masked jnp emulation of the occupancy-skipping kernel: per-tile
     partial products are gated by the same occupancy map the Pallas kernel
@@ -454,9 +656,9 @@ def _spike_matmul_pallas(s, w):
 
 
 register("spike_matmul", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False, vjp=_matmul_bwd)(_spike_matmul_pallas)
+         auto=False, vjp=_matmul_bwd, mesh_aware=True)(_spike_matmul_pallas)
 register("spike_matmul", "pallas", platforms=("tpu",),
-         priority=20, vjp=_matmul_bwd)(_spike_matmul_pallas)
+         priority=20, vjp=_matmul_bwd, mesh_aware=True)(_spike_matmul_pallas)
 
 
 def _spike_matmul_csr(s, w):
@@ -468,9 +670,10 @@ def _spike_matmul_csr(s, w):
 
 register("spike_matmul", "pallas-csr-interpret", platforms=("cpu",),
          priority=2, auto=False, fallback="pallas-interpret",
-         vjp=_matmul_bwd)(_spike_matmul_csr)
+         vjp=_matmul_bwd, mesh_aware=_csr_shard_gate)(_spike_matmul_csr)
 register("spike_matmul", "pallas-csr", platforms=("tpu",), priority=25,
-         fallback="pallas", vjp=_matmul_bwd)(_spike_matmul_csr)
+         fallback="pallas", vjp=_matmul_bwd,
+         mesh_aware=_csr_shard_gate)(_spike_matmul_csr)
 
 
 # ---------------------------------------------------------- apec_matmul
@@ -491,7 +694,8 @@ def _apec_divisibility(s, w, *, g=2) -> Optional[str]:
     return None
 
 
-@register("apec_matmul", REF, priority=0, differentiable=True)
+@register("apec_matmul", REF, priority=0, differentiable=True,
+          mesh_aware=True)
 def _apec_matmul_ref(s, w, *, g=2):
     del g    # the oracle is the plain dense accumulation s @ w
     return jnp.dot(s.astype(jnp.float32),
@@ -502,7 +706,7 @@ def _apec_matmul_ref(s, w, *, g=2):
 # autodiff (min() tie-breaking would split cotangents across group
 # members), so the explicit transpose rule supplies the exact gradients.
 @register("apec_matmul", "jnp", priority=10, supports=_apec_divisibility,
-          vjp=_matmul_bwd)
+          vjp=_matmul_bwd, mesh_aware=True)
 def _apec_matmul_jnp(s, w, *, g=2):
     from repro.core.apec import apec_matmul_jnp
     return apec_matmul_jnp(s, w, g)
@@ -515,9 +719,10 @@ def _apec_matmul_pallas(s, w, *, g=2):
 
 register("apec_matmul", "pallas-interpret", platforms=("cpu",), priority=1,
          auto=False, supports=_apec_divisibility,
-         vjp=_matmul_bwd)(_apec_matmul_pallas)
+         vjp=_matmul_bwd, mesh_aware=True)(_apec_matmul_pallas)
 register("apec_matmul", "pallas", platforms=("tpu",), priority=20,
-         supports=_apec_divisibility, vjp=_matmul_bwd)(_apec_matmul_pallas)
+         supports=_apec_divisibility, vjp=_matmul_bwd,
+         mesh_aware=True)(_apec_matmul_pallas)
 
 
 def _apec_csr_supports(s, w, *, g=2) -> Optional[str]:
@@ -540,10 +745,11 @@ def _apec_matmul_csr(s, w, *, g=2):
 
 register("apec_matmul", "pallas-csr-interpret", platforms=("cpu",),
          priority=2, auto=False, supports=_apec_csr_supports,
-         fallback="pallas-interpret", vjp=_matmul_bwd)(_apec_matmul_csr)
+         fallback="pallas-interpret", vjp=_matmul_bwd,
+         mesh_aware=_csr_shard_gate)(_apec_matmul_csr)
 register("apec_matmul", "pallas-csr", platforms=("tpu",), priority=25,
          supports=_apec_csr_supports, fallback="pallas",
-         vjp=_matmul_bwd)(_apec_matmul_csr)
+         vjp=_matmul_bwd, mesh_aware=_csr_shard_gate)(_apec_matmul_csr)
 
 
 # ------------------------------------------------------------------ sdsa
@@ -564,7 +770,7 @@ def _sdsa_or_only(q, k, v, *, mode="or") -> Optional[str]:
     return None
 
 
-@register("sdsa", REF, priority=0, differentiable=True)
+@register("sdsa", REF, priority=0, differentiable=True, mesh_aware=True)
 def _sdsa_ref(q, k, v, *, mode="or"):
     from repro.core.sdsa import sdsa_jnp
     return sdsa_jnp(q, k, v, mode=mode)
@@ -573,7 +779,7 @@ def _sdsa_ref(q, k, v, *, mode="or"):
 # Bitwise paths have no gradient at all (uint32 words); vjp="ref" replays
 # the oracle's VJP, preserving its max-tie cotangent splitting.
 @register("sdsa", "jnp", priority=5, auto=False, supports=_sdsa_or_only,
-          vjp="ref")
+          vjp="ref", mesh_aware=True)
 def _sdsa_packed_jnp(q, k, v, *, mode="or"):
     """Bit-packed pure-jnp path (the kernels' uint32 semantics without
     Pallas): pack -> AND / column-OR / AND -> unpack."""
@@ -598,10 +804,13 @@ def _sdsa_pallas(q, k, v, *, mode="or"):
     return ops.sdsa_or(q, k, v)
 
 
+# Attention is token-local over the batch/head axes the mesh shards (the
+# token axis N stays shard-resident), so the packed paths are mesh-aware.
 register("sdsa", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False, supports=_sdsa_or_only, vjp="ref")(_sdsa_pallas)
+         auto=False, supports=_sdsa_or_only, vjp="ref",
+         mesh_aware=True)(_sdsa_pallas)
 register("sdsa", "pallas", platforms=("tpu",), priority=20,
-         supports=_sdsa_or_only, vjp="ref")(_sdsa_pallas)
+         supports=_sdsa_or_only, vjp="ref", mesh_aware=True)(_sdsa_pallas)
 
 
 # ----------------------------------------------------------- causal_sdsa
@@ -622,14 +831,15 @@ def _causal_or_only(q, k, v, *, mode="or") -> Optional[str]:
     return None
 
 
-@register("causal_sdsa", REF, priority=0, differentiable=True)
+@register("causal_sdsa", REF, priority=0, differentiable=True,
+          mesh_aware=True)
 def _causal_sdsa_ref(q, k, v, *, mode="or"):
     from repro.core.sdsa import causal_sdsa_jnp
     return causal_sdsa_jnp(q, k, v, mode=mode)
 
 
 @register("causal_sdsa", "jnp", priority=5, auto=False,
-          supports=_causal_or_only, vjp="ref")
+          supports=_causal_or_only, vjp="ref", mesh_aware=True)
 def _causal_sdsa_packed(q, k, v, *, mode="or"):
     from repro.core.sdsa import causal_sdsa_packed_jnp
     return causal_sdsa_packed_jnp(q, k, v, mode=mode)
@@ -642,9 +852,11 @@ def _causal_sdsa_pallas(q, k, v, *, mode="or"):
 
 
 register("causal_sdsa", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False, supports=_causal_or_only, vjp="ref")(_causal_sdsa_pallas)
+         auto=False, supports=_causal_or_only, vjp="ref",
+         mesh_aware=True)(_causal_sdsa_pallas)
 register("causal_sdsa", "pallas", platforms=("tpu",), priority=20,
-         supports=_causal_or_only, vjp="ref")(_causal_sdsa_pallas)
+         supports=_causal_or_only, vjp="ref",
+         mesh_aware=True)(_causal_sdsa_pallas)
 
 
 # ----------------------------------------------------------------- econv
@@ -668,14 +880,18 @@ def _econv_scatter_supports(s, w, *, stride=1, padding="SAME"):
     return None
 
 
-@register("econv", REF, priority=0, differentiable=True)
+@register("econv", REF, priority=0, differentiable=True, mesh_aware=True)
 def _econv_ref(s, w, *, stride=1, padding="SAME"):
     from repro.core.econv import tconv
     return tconv(s, w, stride=stride, padding=padding)
 
 
 # Event extraction (nonzero) + fori scatter has no reverse-mode path;
-# vjp="ref" replays the dense conv's VJP instead.
+# vjp="ref" replays the dense conv's VJP instead. Deliberately NOT
+# mesh-aware: the serialized event scan's step count is sized from the
+# global event budget, and per-shard it degenerates (each shard walks the
+# full budget over a fraction of the events) — the mesh path degrades it
+# to the tiled kernels instead.
 @register("econv", "jnp", priority=5, auto=False,
           supports=_econv_scatter_supports, vjp="ref")
 def _econv_scatter(s, w, *, stride=1, padding="SAME"):
@@ -706,9 +922,9 @@ def _econv_pallas(s, w, *, stride=1, padding="SAME"):
 
 
 register("econv", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False, vjp="ref")(_econv_pallas)
+         auto=False, vjp="ref", mesh_aware=True)(_econv_pallas)
 register("econv", "pallas", platforms=("tpu",), priority=20,
-         vjp="ref")(_econv_pallas)
+         vjp="ref", mesh_aware=True)(_econv_pallas)
 
 
 def _econv_csr(s, w, *, stride=1, padding="SAME"):
@@ -719,9 +935,10 @@ def _econv_csr(s, w, *, stride=1, padding="SAME"):
 
 
 register("econv", "pallas-csr-interpret", platforms=("cpu",), priority=2,
-         auto=False, fallback="pallas-interpret", vjp="ref")(_econv_csr)
+         auto=False, fallback="pallas-interpret", vjp="ref",
+         mesh_aware=_csr_shard_gate)(_econv_csr)
 register("econv", "pallas-csr", platforms=("tpu",), priority=25,
-         fallback="pallas", vjp="ref")(_econv_csr)
+         fallback="pallas", vjp="ref", mesh_aware=_csr_shard_gate)(_econv_csr)
 
 
 # ----------------------------------------------------------------- tconv
@@ -749,7 +966,7 @@ def _tconv_pad_supports(s, w, *, stride=2, padding="SAME") -> Optional[str]:
     return None
 
 
-@register("tconv", REF, priority=0, differentiable=True)
+@register("tconv", REF, priority=0, differentiable=True, mesh_aware=True)
 def _tconv_ref(s, w, *, stride=2, padding="SAME"):
     from repro.core.econv import conv_transpose_ref
     return conv_transpose_ref(s, w, stride=stride, padding=padding)
@@ -758,7 +975,7 @@ def _tconv_ref(s, w, *, stride=2, padding="SAME"):
 # Zero-insertion + stride-1 conv: same linear map as the oracle, so its
 # native autodiff cotangents coincide with ref's.
 @register("tconv", "jnp", priority=5, auto=False,
-          supports=_tconv_pad_supports, differentiable=True)
+          supports=_tconv_pad_supports, differentiable=True, mesh_aware=True)
 def _tconv_upsampled(s, w, *, stride=2, padding="SAME"):
     from repro.core.econv import conv_transpose_upsampled
     return conv_transpose_upsampled(s, w, stride=stride, padding=padding)
@@ -783,9 +1000,11 @@ def _tconv_pallas(s, w, *, stride=2, padding="SAME"):
 
 
 register("tconv", "pallas-interpret", platforms=("cpu",), priority=1,
-         auto=False, supports=_tconv_pad_supports, vjp="ref")(_tconv_pallas)
+         auto=False, supports=_tconv_pad_supports, vjp="ref",
+         mesh_aware=True)(_tconv_pallas)
 register("tconv", "pallas", platforms=("tpu",), priority=20,
-         supports=_tconv_pad_supports, vjp="ref")(_tconv_pallas)
+         supports=_tconv_pad_supports, vjp="ref",
+         mesh_aware=True)(_tconv_pallas)
 
 
 # --------------------------------------------------- dispatch entry points

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.spikes import (PACK, TileCSR, occupancy_to_csr, pack_spikes,
-                               tile_occupancy, unpack_spikes)
+                               pow2_step_cap, tile_occupancy, unpack_spikes)
 from .lif_scan import lif_scan_pallas_sg
 from .sdsa_kernel import (sdsa_causal_status_pallas, sdsa_packed,
                           sdsa_status_pallas)
@@ -228,20 +228,16 @@ def spike_matmul(s: jax.Array, w: jax.Array, block_m: int = 128,
 
 # ------------------------------------------------- event-compacted (CSR)
 def _build_csr(occ, block_m, block_k):
-    """CSR work list with a power-of-two step-count bucket (dense-capped).
-
-    The concrete pre-pass trims the grid to the occupied-tile count, but
-    a *different* count per call would recompile the jitted kernel core
-    every time occupancy shifts. Padding steps are DMA/FLOP-free by
-    design, so rounding the cap up to the next power of two bounds the
-    distinct grid sizes at O(log(dense)) while keeping the grid within 2x
-    of exact. The traced path keeps the dense cap (one compile)."""
+    """CSR work list with a power-of-two step-count bucket (dense-capped,
+    `core.spikes.pow2_step_cap` — shared with the per-shard pre-pass so
+    single-device and sharded grids bucket identically). The traced path
+    keeps the dense cap (one compile)."""
     tiling = (block_m, block_k)
     if isinstance(occ, jax.core.Tracer):
         return occupancy_to_csr(occ, tiling=tiling)
     exact = occupancy_to_csr(occ, tiling=tiling)
     mt, kt = occ.shape
-    cap = min(mt * kt, 1 << (exact.n_steps - 1).bit_length())
+    cap = pow2_step_cap(exact.n_steps, mt * kt)
     if cap == exact.n_steps:
         return exact
     return occupancy_to_csr(occ, cap=cap, tiling=tiling)

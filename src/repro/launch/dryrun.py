@@ -105,7 +105,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                 step=repl, mu=_named(mesh, pspecs), nu=_named(mesh, pspecs))
             batch_abs = specs.train_batch_spec(cfg, shape)
             b_sh = _named(mesh, sharding.batch_specs(cfg, batch_abs, mesh))
-            fn = steps.make_train_step(cfg, spiking=spiking)
+            fn = steps.make_train_step(cfg, spiking=spiking, mesh=mesh)
             metrics_sh = {"loss": repl, "grad_norm": repl}
             lowered = jax.jit(
                 fn, in_shardings=(p_sh, o_sh, b_sh),
@@ -115,7 +115,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         elif shape.kind == "prefill":
             batch_abs = specs.prefill_spec(cfg, shape)
             b_sh = _named(mesh, sharding.batch_specs(cfg, batch_abs, mesh))
-            fn = steps.make_prefill(cfg, spiking)
+            fn = steps.make_prefill(cfg, spiking, mesh=mesh)
             bs = sharding.batch_axes(mesh, shape.global_batch) or None
             out_sh = NamedSharding(mesh, P(
                 bs, "model" if cfg.vocab % mesh.shape["model"] == 0
@@ -134,7 +134,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             logits_sh = NamedSharding(mesh, P(
                 bs, "model" if cfg.vocab % mesh.shape["model"] == 0
                 else None))
-            fn = steps.make_serve_step(cfg, spiking)
+            fn = steps.make_serve_step(cfg, spiking, mesh=mesh)
             lowered = jax.jit(
                 fn, in_shardings=(p_sh, s_sh, tok_sh, repl),
                 out_shardings=(logits_sh, s_sh), donate_argnums=(1,),

@@ -40,17 +40,25 @@ class Request:
 
 class Server:
     def __init__(self, cfg: LMConfig, n_slots: int = 4, max_seq: int = 256,
-                 spiking: Optional[bool] = None, seed: int = 0):
+                 spiking: Optional[bool] = None, seed: int = 0, mesh=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.spiking = cfg.spiking.enabled if spiking is None else spiking
+        self.mesh = mesh
         self.params = lm.init_params(cfg, jax.random.PRNGKey(seed))
         self.state = lm.init_decode_state(cfg, n_slots, max_seq, self.spiking)
         self.pos = np.zeros(n_slots, np.int32)       # per-slot position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.pending: List[Request] = []
-        self._step = jax.jit(steps_mod.make_serve_step(cfg, self.spiking))
+        # The continuous-batching decode step traces under the mesh, so
+        # spike matmuls inside resolve mesh-aware (per-shard capability
+        # checks on the slot batch — the axis a deployment shards over
+        # 'data') and distributed decode keeps the event kernels. The
+        # mesh steers RESOLUTION only; placing params/state on it is the
+        # deployment's in_shardings.
+        self._step = jax.jit(
+            steps_mod.make_serve_step(cfg, self.spiking, mesh=mesh))
         self.steps_executed = 0
 
     def submit(self, req: Request):
@@ -117,14 +125,26 @@ def main():
     ap.add_argument("--backend", default=None,
                     help="kernel backend override, same grammar as "
                          "EXSPIKE_BACKEND (e.g. 'ref' or 'sdsa=pallas,ref')")
+    ap.add_argument("--mesh", action="store_true",
+                    help="resolve kernel dispatch mesh-aware against the "
+                         "host mesh (per-shard capability checks, degrade "
+                         "attribution printed below); array placement is "
+                         "unchanged — sharding the slot batch is the "
+                         "deployment's jit in_shardings' job")
     args = ap.parse_args()
     cfg = (registry.get_reduced(args.arch) if args.reduced
            else registry.get_config(args.arch))
     if args.backend:
         os.environ[dispatch.ENV_VAR] = args.backend
-    print(f"[serve] kernel backends: {dispatch.resolved_backends()}")
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+    print(f"[serve] kernel backends"
+          f"{' (mesh-aware)' if mesh is not None else ''}: "
+          f"{dispatch.resolved_backends(mesh=mesh)}")
     server = Server(cfg, n_slots=args.slots,
-                    spiking=False if args.dense else None)
+                    spiking=False if args.dense else None, mesh=mesh)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=list(rng.integers(0, cfg.vocab, 8)),

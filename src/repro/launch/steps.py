@@ -17,12 +17,31 @@ from repro.models import lm
 from repro.optim import adamw, grad_compress, schedule as sched
 
 
+def _under_mesh(fn: Callable, mesh) -> Callable:
+    """Wrap a step function so kernel dispatch resolves mesh-aware while
+    it traces: every registry op inside sees the ambient mesh (per-shard
+    capability checks, mesh_aware filtering). Resolution is trace-time,
+    so wrapping the function — not the call site — is what guarantees a
+    later retrace (new shapes, donated-buffer miss) still resolves under
+    the mesh."""
+    if mesh is None:
+        return fn
+    from repro.kernels import dispatch
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with dispatch.use_mesh(mesh):
+            return fn(*args, **kwargs)
+    return wrapped
+
+
 def make_train_step(
     cfg: LMConfig,
     opt_cfg: Optional[adamw.AdamWConfig] = None,
     schedule_fn: Callable = sched.constant,
     spiking: Optional[bool] = None,
     grad_compression: bool = False,
+    mesh=None,
 ) -> Callable:
     """train_step(params, opt_state, [ef_state,] batch) -> (... , metrics).
 
@@ -30,6 +49,11 @@ def make_train_step(
     the per-microbatch backward (and its data-parallel collectives) overlap
     the next microbatch's forward in the XLA pipeline — the standard
     compute/comm overlap trick.
+
+    `mesh`: the mesh the step will execute under — spike matmuls (and
+    every other registry op) in the model then resolve mesh-aware, so the
+    distributed path keeps the event-driven kernels instead of silently
+    running dense math.
     """
     if opt_cfg is None:
         opt_cfg = adamw.AdamWConfig(state_dtype=cfg.opt_state_dtype)
@@ -65,7 +89,7 @@ def make_train_step(
             metrics = {"loss": loss,
                        "grad_norm": adamw.global_norm(grads)}
             return new_params, new_opt, metrics
-        return train_step
+        return _under_mesh(train_step, mesh)
 
     def train_step_ef(params, opt_state, ef_state, batch):
         loss, grads = grads_of(params, batch)
@@ -76,17 +100,17 @@ def make_train_step(
             grads, opt_state, params, opt_cfg, lr_scale)
         metrics = {"loss": loss, "grad_norm": adamw.global_norm(grads)}
         return new_params, new_opt, new_ef, metrics
-    return train_step_ef
+    return _under_mesh(train_step_ef, mesh)
 
 
-def make_prefill(cfg: LMConfig, spiking: bool) -> Callable:
+def make_prefill(cfg: LMConfig, spiking: bool, mesh=None) -> Callable:
     def serve_prefill(params, batch: Dict[str, Any]):
         return lm.prefill(cfg, params, batch["tokens"], spiking,
                           frontend=batch.get("frontend"))
-    return serve_prefill
+    return _under_mesh(serve_prefill, mesh)
 
 
-def make_serve_step(cfg: LMConfig, spiking: bool) -> Callable:
+def make_serve_step(cfg: LMConfig, spiking: bool, mesh=None) -> Callable:
     def serve_step(params, state, token, pos):
         return lm.decode_step(cfg, params, state, token, pos, spiking)
-    return serve_step
+    return _under_mesh(serve_step, mesh)

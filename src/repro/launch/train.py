@@ -41,15 +41,17 @@ def train_loop(cfg: LMConfig, *, steps: int = 50, batch: int = 8,
     mesh = mesh or make_host_mesh()
     spk = cfg.spiking.enabled if spiking is None else spiking
 
-    # Training routes through the backend registry exactly like inference:
-    # every registered backend carries ref-matching surrogate gradients
-    # (the fused LIF kernel has a reversed-scan Pallas backward), so there
-    # is no lif_scan=ref pin — log what actually resolved (post-fallback).
+    # Training routes through the backend registry exactly like inference
+    # — and, since the step traces under the mesh, resolution is
+    # mesh-aware: capability checks run per data shard, the CSR family
+    # degrades down its fallback chain instead of dropping to dense math,
+    # and the attribution ("backend<-requested") records any degrade.
     if spk:
         from repro.kernels import dispatch
-        resolved = " ".join(f"{op}={be}"
-                            for op, be in dispatch.resolved_backends().items())
-        print(f"[train] dispatch backends: {resolved}")
+        resolved = " ".join(
+            f"{op}={be}"
+            for op, be in dispatch.resolved_backends(mesh=mesh).items())
+        print(f"[train] dispatch backends (mesh-aware): {resolved}")
 
     params = lm.init_params(cfg, jax.random.PRNGKey(seed))
     opt_cfg = adamw.AdamWConfig(lr=lr, state_dtype=cfg.opt_state_dtype)
@@ -66,7 +68,7 @@ def train_loop(cfg: LMConfig, *, steps: int = 50, batch: int = 8,
         sched.warmup_cosine, warmup_steps=max(2, steps // 20),
         total_steps=steps)
     step_fn = steps_mod.make_train_step(cfg, opt_cfg, schedule_fn,
-                                        spiking=spk)
+                                        spiking=spk, mesh=mesh)
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
 
     mgr = CheckpointManager(ckpt_dir, save_every=save_every) \

@@ -14,6 +14,7 @@ Policy (DESIGN.md §5):
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, Tuple
 
 import jax
@@ -255,6 +256,143 @@ def decode_state_specs(cfg: LMConfig, state: Any, mesh: Mesh) -> Any:
         return LayerState(**f)
 
     return [one(st) for st in state]
+
+
+# ----------------------------------------------- event ops under the mesh
+def event_rows_axes(mesh: Mesh, rows: int) -> Tuple[str, ...]:
+    """Mesh axes the event-row axis shards over: the batch-parallel
+    ('pod', 'data') prefix that divides the row count. The 'model' axis
+    shards features/heads and never event rows."""
+    return batch_axes(mesh, rows)
+
+
+def per_shard_occupied_tiles(s, n_shards: int, block_m: int = 128,
+                             block_k: int = 128) -> list:
+    """Occupied-tile count each row shard of `s` owns — the event-load
+    signal `runtime.straggler.occupancy_imbalance` summarizes.
+
+    Splits the SPIKE rows (flattened lead axes, contiguous chunks — what
+    shard_map actually hands each shard) and runs every shard's own
+    padded occupancy pre-pass, exactly what that shard would compute
+    locally. Splitting the global occupancy map's tile rows instead would
+    misattribute load whenever per-shard rows are not a block_m multiple
+    (e.g. 512 rows over 8 shards: 4 tile rows split 8 ways reports half
+    the shards empty when all carry equal load)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    s2 = np.asarray(s).reshape(-1, s.shape[-1])
+    return [int((np.asarray(ops.padded_occupancy(
+                jnp.asarray(chunk), block_m, block_k)) > 0).sum())
+            for chunk in np.array_split(s2, n_shards, axis=0)]
+
+
+def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
+                     with_report: bool = False, **kwargs):
+    """Route a matmul-form registry op (`spike_matmul` / `apec_matmul`)
+    through `shard_map` on `mesh`, with mesh-aware backend resolution.
+
+    The event rows (leading axis of `s`) shard over the batch-parallel
+    mesh axes; `w` is replicated. Resolution runs ONCE, outside the body,
+    against the per-shard shapes (`dispatch.resolve(..., mesh=)` — the
+    `pallas-csr` family holds while each shard's tile grid divides
+    cleanly, else it degrades down its declared fallback chain), and the
+    body pins the resolved backend so every shard runs the same kernel.
+    Differentiable end to end: the pinned backend carries its registered
+    VJP, and shard_map transposes the row sharding.
+
+    `csr_stack`: optional stacked per-shard `TileCSR`
+    (`core.spikes.shard_occupancy_to_csr` + `stack_shard_csrs`) for
+    `spike_matmul` on the CSR family — each shard consumes its own
+    pre-built work list (leading shard axis sharded like the rows), so
+    the trimmed eager grid survives sharding without gathering any
+    global occupancy map.
+
+    `with_report=True` additionally returns the routing/straggler report:
+    resolved backend + attribution, and (for concrete `s`) the per-shard
+    occupied-tile `OccupancyImbalance`.
+    """
+    from repro.core.spikes import TileCSR
+    from repro.kernels import dispatch, ops
+    from repro.launch.mesh import shard_map
+
+    axes = event_rows_axes(mesh, s.shape[0])
+    n_shards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+    def _report(backend, attribution):
+        if not with_report:
+            return None
+        from repro.runtime.straggler import occupancy_imbalance
+        rep = {"op": op, "backend": backend, "attribution": attribution,
+               "n_shards": n_shards, "occupancy": None}
+        if n_shards > 1 and not isinstance(s, jax.core.Tracer):
+            rep["occupancy"] = occupancy_imbalance(
+                per_shard_occupied_tiles(s, n_shards))
+        return rep
+
+    if csr_stack is not None and op != "spike_matmul":
+        raise ValueError(
+            f"csr_stack is a spike_matmul pass-through; op {op!r} builds "
+            f"its own (union) pre-pass in-kernel")
+    # Resolve against the shard count we will actually execute with (the
+    # dividing axes), not the mesh's full batch capacity — when the rows
+    # don't divide, execution stays unsharded and resolution must match.
+    be, attribution = dispatch.resolve_with_attribution(
+        op, s, w, mesh=n_shards, **kwargs)
+    if n_shards <= 1:
+        out = be.fn(s, w, **kwargs)
+        return (out, _report(be.name, attribution)) if with_report else out
+
+    lead = tuple(axes) if len(axes) > 1 else axes[0]
+    row_spec = P(lead, *([None] * (s.ndim - 1)))
+    w_spec = P(*([None] * w.ndim))
+
+    if csr_stack is not None and not be.name.startswith("pallas-csr"):
+        # Degraded off the CSR family (mesh gate / capability): the
+        # pre-built work lists can't feed the resolved kernel. Say so —
+        # the caller paid for the eager pre-pass and would otherwise
+        # believe the trimmed grids are running.
+        warnings.warn(
+            f"exspike sharding: csr_stack ignored — {op!r} resolved to "
+            f"{be.name!r} ({attribution}), not the CSR family",
+            RuntimeWarning, stacklevel=2)
+        csr_stack = None
+    if csr_stack is not None:
+        csr_arrays = tuple(csr_stack[:5])   # row_ptr/tile_m/tile_k/occ/valid
+        csr_specs = tuple(P(lead) for _ in csr_arrays)
+
+        def body(sl, wl, *carrs):
+            local = TileCSR(*[a[0] for a in carrs],
+                            csr_stack.tiling, csr_stack.map_shape)
+            return ops.spike_matmul_csr(sl, wl, local)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(row_spec, w_spec) + csr_specs,
+                       out_specs=row_spec)
+
+        # The raw csr wrapper has no autodiff rule (the registry attaches
+        # one per backend); give this pass-through the SAME gradient
+        # contract the csr backends declare — the matmul transpose rule
+        # on the global operands.
+        @jax.custom_vjp
+        def run(s_, w_):
+            return fn(s_, w_, *csr_arrays)
+
+        def run_fwd(s_, w_):
+            return fn(s_, w_, *csr_arrays), (s_, w_)
+
+        def run_bwd(res, g):
+            return tuple(dispatch._matmul_bwd(res, {}, g))
+
+        run.defvjp(run_fwd, run_bwd)
+        out = run(s, w)
+    else:
+        def body(sl, wl):
+            return dispatch.call_backend(op, be.name, sl, wl, **kwargs)
+
+        fn = shard_map(body, mesh=mesh, in_specs=(row_spec, w_spec),
+                       out_specs=row_spec)
+        out = fn(s, w)
+    return (out, _report(be.name, attribution)) if with_report else out
 
 
 # ---------------------------------------------------------------- helpers

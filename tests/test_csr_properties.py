@@ -1,0 +1,200 @@
+"""Property tests for the TileCSR pre-pass (+ deterministic fallbacks).
+
+`occupancy_to_csr` feeds tile indices straight into Pallas block index
+maps, where a wrong entry reads the wrong tile *silently* — so the
+invariants are pinned as properties over random shapes/tilings/occupancy
+rather than a handful of examples:
+
+  * `row_ptr` is monotone non-decreasing, starts at 0, and ends at the
+    real (valid) step count;
+  * every occupied tile appears exactly once among the compute steps,
+    in row-major order, inside its row's `row_ptr` span;
+  * dummy steps (valid, occ==0) appear exactly for all-empty rows, at
+    k-tile 0;
+  * clamp-padding steps (valid==0) repeat the last real step's indices
+    (no new DMA) and never count events;
+  * the per-shard pre-pass (`shard_occupancy_to_csr`) compacts each
+    shard identically to compacting its rows alone, under ONE shared
+    power-of-two cap.
+
+When hypothesis is absent (offline CI image), the `@given` tests skip
+and the parametrized deterministic cases below exercise the same checker
+on hand-picked edge maps.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from hypothesis_compat import HAVE_HYPOTHESIS, given, st  # noqa: E402
+
+from repro.core.spikes import (TileCSR, occupancy_to_csr, pow2_step_cap,
+                               shard_occupancy_to_csr, stack_shard_csrs)
+
+
+def check_csr_invariants(occ_np: np.ndarray, csr: TileCSR,
+                         cap: int | None = None) -> None:
+    """Assert every TileCSR structural invariant against its source map."""
+    mt, kt = occ_np.shape
+    mask = occ_np > 0
+    row_occupied = mask.sum(axis=1)
+    expect_steps = int(np.where(row_occupied > 0, row_occupied, 1).sum())
+
+    row_ptr = np.asarray(csr.row_ptr)
+    tm = np.asarray(csr.tile_m_idx)
+    tk = np.asarray(csr.tile_k_idx)
+    occ_steps = np.asarray(csr.occ)
+    valid = np.asarray(csr.valid)
+
+    # row_ptr: canonical CSR over m-tile rows
+    assert row_ptr.shape == (mt + 1,)
+    assert row_ptr[0] == 0
+    assert np.all(np.diff(row_ptr) >= 0), "row_ptr not monotone"
+    assert row_ptr[-1] == expect_steps == int(valid.sum())
+
+    # cap covers the real steps; default cap is exactly trimmed
+    assert csr.n_steps >= expect_steps
+    if cap is None:
+        assert csr.n_steps == expect_steps
+
+    # every occupied tile appears exactly once, row-major, in its span
+    flat_steps = tm[:expect_steps] * kt + tk[:expect_steps]
+    mask2 = mask.copy()
+    mask2[:, 0] |= row_occupied == 0          # dummy visit per empty row
+    np.testing.assert_array_equal(flat_steps,
+                                  np.nonzero(mask2.ravel())[0])
+    for i in range(mt):
+        span = slice(int(row_ptr[i]), int(row_ptr[i + 1]))
+        assert np.all(tm[span] == i)
+
+    # dummy steps: valid, occ==0, k-tile 0, exactly the all-empty rows
+    dummy = (valid == 1) & (occ_steps == 0) & \
+        (np.arange(csr.n_steps) < expect_steps) & \
+        ~mask[tm, tk]
+    assert np.all(tk[dummy] == 0)
+    np.testing.assert_array_equal(np.sort(tm[dummy]),
+                                  np.nonzero(row_occupied == 0)[0])
+    # compute steps carry the exact event counts
+    real = (valid == 1) & ~dummy
+    np.testing.assert_array_equal(occ_steps[real], occ_np[tm[real], tk[real]])
+
+    # clamp padding: repeats the last real step, contributes nothing
+    if csr.n_steps > expect_steps:
+        assert np.all(valid[expect_steps:] == 0)
+        assert np.all(occ_steps[expect_steps:] == 0)
+        assert np.all(tm[expect_steps:] == tm[expect_steps - 1])
+        assert np.all(tk[expect_steps:] == tk[expect_steps - 1])
+
+
+# ------------------------------------------------------- hypothesis side
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 2 ** 30),
+       st.floats(0.0, 1.0))
+def test_csr_invariants_random_maps(mt, kt, seed, density):
+    occ_np = (np.random.default_rng(seed).random((mt, kt)) < density
+              ).astype(np.int32) * np.random.default_rng(seed + 1).integers(
+                  1, 9, (mt, kt))
+    check_csr_invariants(occ_np, occupancy_to_csr(jnp.asarray(occ_np)))
+
+
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(0, 2 ** 30),
+       st.integers(0, 40))
+def test_csr_invariants_hold_under_any_covering_cap(mt, kt, seed, extra):
+    occ_np = np.random.default_rng(seed).integers(0, 3, (mt, kt))
+    exact = occupancy_to_csr(jnp.asarray(occ_np)).n_steps
+    cap = exact + extra
+    csr = occupancy_to_csr(jnp.asarray(occ_np), cap=cap)
+    assert csr.n_steps == cap
+    check_csr_invariants(occ_np, csr, cap=cap)
+
+
+@given(st.integers(1, 16384), st.integers(1, 16384))
+def test_pow2_cap_is_pow2_covering_and_dense_bounded(n, dense):
+    n = min(n, dense)                      # usage invariant: n <= dense
+    cap = pow2_step_cap(n, dense)
+    assert n <= cap <= dense
+    assert cap == dense or (cap & (cap - 1)) == 0
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 2 ** 30))
+def test_shard_csr_matches_per_shard_compaction(shards, rows, seed):
+    kt = 3
+    occ_np = np.random.default_rng(seed).integers(0, 2, (shards * rows, kt))
+    per = shard_occupancy_to_csr(jnp.asarray(occ_np), shards)
+    assert len(per) == shards
+    caps = {c.n_steps for c in per}
+    assert len(caps) == 1, "shards must share one cap"
+    cap = caps.pop()
+    assert cap == pow2_step_cap(
+        max(occupancy_to_csr(jnp.asarray(occ_np[i * rows:(i + 1) * rows])
+                             ).n_steps for i in range(shards)), rows * kt)
+    for i, csr in enumerate(per):
+        check_csr_invariants(occ_np[i * rows:(i + 1) * rows], csr, cap=cap)
+
+
+# ----------------------------------------------- deterministic fallbacks
+EDGE_MAPS = [
+    np.zeros((1, 1), np.int32),                      # single empty tile
+    np.ones((1, 1), np.int32),                       # single full tile
+    np.zeros((4, 3), np.int32),                      # all rows empty
+    np.full((3, 4), 7, np.int32),                    # fully occupied
+    np.eye(4, 5, dtype=np.int32) * 3,                # diagonal
+    np.array([[0, 2, 0], [0, 0, 0], [1, 0, 4]]),    # mixed + empty row
+    np.array([[0, 0, 0, 5]]),                        # single trailing tile
+]
+
+
+@pytest.mark.parametrize("occ_np", EDGE_MAPS,
+                         ids=[f"map{i}" for i in range(len(EDGE_MAPS))])
+def test_csr_invariants_edge_maps(occ_np):
+    check_csr_invariants(occ_np, occupancy_to_csr(jnp.asarray(occ_np)))
+    capped = occupancy_to_csr(jnp.asarray(occ_np), cap=25)
+    check_csr_invariants(occ_np, capped, cap=25)
+
+
+def test_pow2_cap_deterministic_points():
+    assert pow2_step_cap(1, 64) == 1
+    assert pow2_step_cap(3, 64) == 4
+    assert pow2_step_cap(4, 64) == 4
+    assert pow2_step_cap(33, 64) == 64     # dense-bounded
+    assert pow2_step_cap(5, 6) == 6        # dense smaller than next pow2
+    assert pow2_step_cap(0, 16) == 1       # degenerate guard
+
+
+def test_shard_csr_deterministic_and_stacks():
+    occ_np = np.array([[0, 0], [3, 0], [0, 0], [0, 0],
+                       [1, 1], [0, 2], [4, 4], [0, 0]])
+    per = shard_occupancy_to_csr(jnp.asarray(occ_np), 4)
+    # most occupied shard (rows 4:6 -> 3 tiles) sets the shared pow2 cap
+    assert {c.n_steps for c in per} == {4}
+    for i, csr in enumerate(per):
+        check_csr_invariants(occ_np[2 * i:2 * i + 2], csr, cap=4)
+    stacked = stack_shard_csrs(per)
+    assert stacked.row_ptr.shape == (4, 3)
+    assert stacked.tile_k_idx.shape == (4, 4)
+    for i, csr in enumerate(per):
+        np.testing.assert_array_equal(np.asarray(stacked.occ[i]),
+                                      np.asarray(csr.occ))
+
+
+def test_shard_csr_rejects_uneven_rows_and_tracers():
+    occ = jnp.zeros((3, 2), jnp.int32)
+    with pytest.raises(ValueError, match="divisible"):
+        shard_occupancy_to_csr(occ, 2)
+    with pytest.raises(ValueError, match="eager"):
+        jax.jit(lambda o: shard_occupancy_to_csr(o, 2))(
+            jnp.zeros((4, 2), jnp.int32))
+
+
+def test_stack_shard_csrs_rejects_mixed_caps():
+    a = occupancy_to_csr(jnp.asarray(np.ones((2, 2), np.int32)))
+    b = occupancy_to_csr(jnp.asarray(np.ones((2, 2), np.int32)), cap=6)
+    with pytest.raises(ValueError, match="caps differ"):
+        stack_shard_csrs([a, b])
+
+
+def test_have_hypothesis_flag_is_bool():
+    assert isinstance(HAVE_HYPOTHESIS, bool)

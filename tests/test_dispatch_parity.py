@@ -20,8 +20,11 @@ ATOL = 1e-5
 @pytest.fixture(autouse=True)
 def _no_ambient_backend_override(monkeypatch):
     """These tests pin resolution explicitly; a developer's exported
-    EXSPIKE_BACKEND must not leak in and flip expected defaults."""
+    EXSPIKE_BACKEND must not leak in and flip expected defaults. Fallback
+    warnings dedup per (op, from, to) per process, so each test re-arms
+    them to assert its own warning independently."""
     monkeypatch.delenv(dispatch.ENV_VAR, raising=False)
+    dispatch.reset_fallback_warnings()
 
 # Every pair runnable on this test platform (CPU). TPU-only backends are
 # exercised by the same harness when the suite runs on TPU.
@@ -244,6 +247,9 @@ def test_csr_constraint_degrades_to_pallas_not_ref():
                           "'pallas-interpret'"):
             assert dispatch.resolve_name("apec_matmul", s, w, g=3) \
                 == "pallas-interpret"
+        # the same degrade edge is deduped per process — re-arm so the
+        # dispatch below demonstrably warns again on its own
+        dispatch.reset_fallback_warnings()
         with pytest.warns(RuntimeWarning):
             out = dispatch.apec_matmul(s, w, g=3)
     np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w), atol=ATOL)
