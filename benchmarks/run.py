@@ -40,8 +40,8 @@ import traceback
 
 
 def _suites():
-    from . import (fig2_econv_vs_tconv, fig7_apec, fig8_breakdown, fig9_cpu,
-                   kernel_backends, roofline, sparsity_sweep,
+    from . import (e2e_event, fig2_econv_vs_tconv, fig7_apec, fig8_breakdown,
+                   fig9_cpu, kernel_backends, roofline, sparsity_sweep,
                    table1_resources, table2_throughput)
     return [
         ("fig2", fig2_econv_vs_tconv.run),
@@ -53,6 +53,8 @@ def _suites():
         ("roofline", roofline.run),
         ("backends", kernel_backends.run),
         ("sparsity", sparsity_sweep.run),
+        # whole-network carried-occupancy (EventTensor) vs re-derive
+        ("e2e_event", e2e_event.run),
         # sharded-vs-single CSR columns (8-way host mesh; re-launches
         # itself with forced host devices when this process has fewer)
         ("sparsity_mesh", sparsity_sweep.run_mesh_rows),

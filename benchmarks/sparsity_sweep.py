@@ -84,6 +84,25 @@ def _savings_fields(s2: jax.Array, n: int) -> str:
             f"dma_saved_csr={csr.dma_fraction_saved:.3f}")
 
 
+def _prepass_time(s: jax.Array, be: str) -> float:
+    """Wall seconds of the standalone occupancy pre-pass the backend pays
+    per call when no carried map is supplied: the dense `tile_occupancy`
+    read (both kernel families) plus the eager CSR compaction (`pallas-csr`
+    only). This is the share an EventTensor-carried forward deletes — the
+    per-row `prepass_us`/`prepass_share` columns make visible how much of
+    the 'CSR win' the pre-pass was eating."""
+    from repro.core.spikes import build_csr
+
+    if be.startswith("pallas-csr"):
+        def fn(x):
+            return build_csr(ops.padded_occupancy(x, BLOCK, BLOCK),
+                             BLOCK, BLOCK)
+    else:
+        def fn(x):
+            return ops.padded_occupancy(x, BLOCK, BLOCK)
+    return time_fn(fn, s)
+
+
 def run() -> list[str]:
     rows = []
     platform = jax.default_backend()
@@ -109,9 +128,12 @@ def run() -> list[str]:
             t_by = {}
             for be, fn in impls.items():
                 t_by[be] = time_fn(fn, s, w) * 1e6
+                prepass = _prepass_time(s, be) * 1e6
                 rows.append(csv_row(
                     f"sparsity/{op}/{be}/s{int(sparsity * 100)}", t_by[be],
-                    f"platform={platform};{stats}"))
+                    f"platform={platform};prepass_us={prepass:.1f};"
+                    f"prepass_share={prepass / max(t_by[be], 1e-9):.3f};"
+                    f"{stats}"))
             if crossover[op] is None and t_by["pallas-csr"] < t_by["pallas"]:
                 crossover[op] = sparsity
         rows.append(csv_row(

@@ -86,11 +86,12 @@ def apec_matmul_jnp(s: jax.Array, w: jax.Array, g: int) -> jax.Array:
     return out.reshape(s.shape[:-1] + (w.shape[-1],))
 
 
-def apec_matmul(s: jax.Array, w: jax.Array, g: int) -> jax.Array:
+def apec_matmul(s, w: jax.Array, g: int) -> jax.Array:
     """APEC matmul routed through the backend registry: the overlap-reuse
-    jnp form by default, packed Pallas kernels under TPU / override."""
-    from repro.kernels.dispatch import dispatch   # lazy: no import cycle
-    return dispatch("apec_matmul", s, w, g=g)
+    jnp form by default, packed Pallas kernels under TPU / override.
+    `s` may be an `core.events.EventTensor` (carried occupancy)."""
+    from repro.kernels import dispatch as _dispatch  # lazy: no import cycle
+    return _dispatch.apec_matmul(s, w, g=g)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -96,16 +96,18 @@ def econv_scatter(
     return jax.vmap(one_image)(s.astype(jnp.float32))
 
 
-def econv(s: jax.Array, w: jax.Array, stride: int = 1,
+def econv(s, w: jax.Array, stride: int = 1,
           padding: str = "SAME") -> jax.Array:
     """Event convolution routed through the backend registry.
 
     Default resolution: `ref` (lax TConv) on CPU, im2col + the
     occupancy-skipping spike matmul on TPU; ``EXSPIKE_BACKEND=econv=jnp``
-    selects the faithful per-event scatter form.
+    selects the faithful per-event scatter form. `s` may be an
+    `core.events.EventTensor`: its carried map is propagated through the
+    im2col window so the event kernels skip their patch-tensor pre-pass.
     """
-    from repro.kernels.dispatch import dispatch   # lazy: no import cycle
-    return dispatch("econv", s, w, stride=stride, padding=padding)
+    from repro.kernels import dispatch as _dispatch  # lazy: no import cycle
+    return _dispatch.econv(s, w, stride=stride, padding=padding)
 
 
 # ------------------------------------------------- transposed convolution
@@ -158,11 +160,13 @@ def conv_transpose_upsampled(s: jax.Array, w: jax.Array, stride: int = 2,
         up, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
-def conv_transpose(s: jax.Array, w: jax.Array, stride: int = 2,
+def conv_transpose(s, w: jax.Array, stride: int = 2,
                    padding: str = "SAME") -> jax.Array:
-    """Transposed conv routed through the backend registry (`tconv` op)."""
-    from repro.kernels.dispatch import dispatch   # lazy: no import cycle
-    return dispatch("tconv", s, w, stride=stride, padding=padding)
+    """Transposed conv routed through the backend registry (`tconv` op).
+    EventTensor inputs lose their map here (zero-insertion dilates event
+    addresses — the documented invalidation rule)."""
+    from repro.kernels import dispatch as _dispatch  # lazy: no import cycle
+    return _dispatch.tconv(s, w, stride=stride, padding=padding)
 
 
 def econv_gather(s: jax.Array, w: jax.Array) -> jax.Array:

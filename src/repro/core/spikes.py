@@ -15,6 +15,7 @@ equivalents are:
 """
 from __future__ import annotations
 
+import contextlib
 from typing import NamedTuple, Optional
 
 import jax
@@ -22,6 +23,27 @@ import jax.numpy as jnp
 import numpy as np
 
 PACK = 32  # bits per packed word
+
+# --------------------------------------------------- pre-pass instrumentation
+# `tile_occupancy` is the *standalone* dense occupancy pre-pass — a full
+# read of a spike-sized tensor just to learn which tiles hold events. The
+# full-event pipeline's whole point (EventTensor + the fused LIF emission)
+# is that between spiking layers this pass never runs; the watcher stack
+# lets tests and benchmarks count (at trace/eager call time) how many
+# dense pre-passes a code path actually paid for.
+_PREPASS_WATCHERS: list = []
+
+
+@contextlib.contextmanager
+def watch_occupancy_prepasses():
+    """Context manager yielding a mutable record of `tile_occupancy` calls
+    made while active: {"calls": n, "elements": total input elements}."""
+    rec = {"calls": 0, "elements": 0}
+    _PREPASS_WATCHERS.append(rec)
+    try:
+        yield rec
+    finally:
+        _PREPASS_WATCHERS.remove(rec)
 
 
 def pack_spikes(s: jax.Array, axis: int = -1) -> jax.Array:
@@ -74,6 +96,9 @@ def tile_occupancy(s: jax.Array, tile_m: int, tile_k: int) -> jax.Array:
     m, k = s.shape[-2], s.shape[-1]
     if m % tile_m or k % tile_k:
         raise ValueError(f"shape ({m},{k}) not tileable by ({tile_m},{tile_k})")
+    for rec in _PREPASS_WATCHERS:
+        rec["calls"] += 1
+        rec["elements"] += int(np.prod(s.shape))
     t = s.reshape(s.shape[:-2] + (m // tile_m, tile_m, k // tile_k, tile_k))
     # Count nonzeros, not a sum-cast: fractional drive (direct-coded first
     # layer) must never truncate to an "empty" tile and get skipped.
@@ -216,6 +241,23 @@ def tile_csr(s: jax.Array, tile_m: int, tile_k: int,
     """Occupancy pre-pass + CSR compaction of a (M, K) spike matrix."""
     return occupancy_to_csr(tile_occupancy(s, tile_m, tile_k), cap=cap,
                             tiling=(tile_m, tile_k))
+
+
+def build_csr(occ: jax.Array, block_m: int, block_k: int) -> TileCSR:
+    """Occupancy map -> `TileCSR` work list with the power-of-two step-count
+    bucket (dense-capped, `pow2_step_cap` — shared between the single-device
+    wrappers, the per-shard pre-pass, and `EventTensor.csr`, so every
+    consumer buckets identically). Traced maps keep the dense cap (one
+    compile); concrete maps trim to occupied tiles and bucket."""
+    tiling = (block_m, block_k)
+    if isinstance(occ, jax.core.Tracer):
+        return occupancy_to_csr(occ, tiling=tiling)
+    exact = occupancy_to_csr(occ, tiling=tiling)
+    mt, kt = occ.shape
+    cap = pow2_step_cap(exact.n_steps, mt * kt)
+    if cap == exact.n_steps:
+        return exact
+    return occupancy_to_csr(occ, cap=cap, tiling=tiling)
 
 
 def pow2_step_cap(n_steps: int, dense: int) -> int:

@@ -21,6 +21,9 @@ AND gradient) the moment they register (tests/test_dispatch_parity.py):
   ------------  ---------------------------------  --------------------------
   lif_scan      cpu: ref · tpu: pallas             pallas bwd = reversed-scan
                 (+ pallas-interpret, manual)         ATan surrogate kernel
+  lif_scan_occ  cpu: ref · tpu: pallas             fused occupancy emission:
+                (+ pallas-interpret, manual)         (spikes, tile map, chunk
+                                                     map); R % 8 == 0 -> ref
   spike_matmul  cpu: ref · tpu: pallas-csr         pallas-csr: TPU (interpret
                 (+ pallas, jnp tile-masked,          variant on CPU, manual);
                    pallas-csr-interpret, manual)     degrades to pallas
@@ -65,7 +68,8 @@ RuntimeWarning instead of erroring. ``benchmarks/run.py --backend``
 sweeps backends so speedups are measured, not asserted.
 """
 from . import dispatch, ops, ref
-from .lif_scan import lif_scan_pallas, lif_scan_pallas_sg
+from .lif_scan import (lif_scan_occ_pallas_sg, lif_scan_pallas,
+                       lif_scan_pallas_sg)
 from .sdsa_kernel import (sdsa_apply_pallas, sdsa_causal_status_pallas,
                           sdsa_packed, sdsa_status_pallas)
 from .spike_matmul import (apec_matmul_csr_pallas, spike_matmul_csr_pallas,
@@ -73,6 +77,7 @@ from .spike_matmul import (apec_matmul_csr_pallas, spike_matmul_csr_pallas,
 
 __all__ = [
     "dispatch", "ops", "ref", "lif_scan_pallas", "lif_scan_pallas_sg",
+    "lif_scan_occ_pallas_sg",
     "sdsa_apply_pallas", "sdsa_causal_status_pallas", "sdsa_packed",
     "sdsa_status_pallas", "spike_matmul_pallas", "spike_matmul_csr_pallas",
     "apec_matmul_csr_pallas",

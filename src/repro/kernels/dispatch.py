@@ -159,6 +159,20 @@ def register_op(name: str, make_example) -> None:
         _REGISTRY[name] = OpSpec(name=name, make_example=make_example)
 
 
+def _is_arrayish(v) -> bool:
+    return isinstance(v, (jax.Array, jax.core.Tracer, np.ndarray))
+
+
+def _zero_cotangent(x):
+    """Symbolic-zero stand-in for a non-differentiated aux operand:
+    float0 for integer/bool primals (what custom_vjp requires), zeros
+    otherwise."""
+    aval = jax.core.get_aval(x)
+    if jnp.issubdtype(aval.dtype, jnp.inexact):
+        return jnp.zeros(aval.shape, aval.dtype)
+    return np.zeros(aval.shape, jax.dtypes.float0)
+
+
 def _wrap_vjp(op: str, fn, rule):
     """Make `fn` differentiable under a custom backward rule.
 
@@ -166,28 +180,44 @@ def _wrap_vjp(op: str, fn, rule):
     inputs — gradient parity with ref by construction, at the cost of one
     ref forward inside backward (cheap for the logic-form ops this is used
     on). rule=callable: explicit ``(saved_args, kwargs, g) -> grads``.
-    kwargs are closed over (non-differentiable statics: mode, g, stride).
+    Static kwargs (mode, g, stride) are closed over. Array-valued kwargs
+    (the carried `occupancy` map, a `csr` work list) are NON-DIFFERENTIATED
+    AUX OPERANDS: they thread through the custom_vjp as primal inputs (a
+    tracer must not be closed over) but their cotangent is a symbolic zero
+    — occupancy is metadata, gradients flow only through spikes/weights,
+    exactly the stop_gradient contract the EventTensor pipeline declares.
     """
     @functools.wraps(fn)
     def wrapper(*args, **kwargs):
-        @jax.custom_vjp
-        def inner(*a):
-            return fn(*a, **kwargs)
+        aux_keys = tuple(sorted(
+            k for k, v in kwargs.items()
+            if any(_is_arrayish(l) for l in jax.tree_util.tree_leaves(v))))
+        static = {k: v for k, v in kwargs.items() if k not in aux_keys}
+        aux = {k: kwargs[k] for k in aux_keys}
 
-        def inner_fwd(*a):
-            return fn(*a, **kwargs), a
+        @jax.custom_vjp
+        def inner(aux, *a):
+            return fn(*a, **static, **aux)
+
+        def inner_fwd(aux, *a):
+            return fn(*a, **static, **aux), (aux, a)
 
         if rule == "ref":
             def inner_bwd(res, g):
+                aux_r, a = res
                 ref_fn = _REGISTRY[op].backends[REF].fn
-                _, pull = jax.vjp(lambda *a: ref_fn(*a, **kwargs), *res)
-                return pull(g)
+                _, pull = jax.vjp(
+                    lambda *ar: ref_fn(*ar, **static, **aux_r), *a)
+                return (jax.tree.map(_zero_cotangent, aux_r),) \
+                    + tuple(pull(g))
         else:
             def inner_bwd(res, g):
-                return tuple(rule(res, kwargs, g))
+                aux_r, a = res
+                return (jax.tree.map(_zero_cotangent, aux_r),) \
+                    + tuple(rule(a, static, g))
 
         inner.defvjp(inner_fwd, inner_bwd)
-        return inner(*args)
+        return inner(aux, *args)
     return wrapper
 
 
@@ -610,6 +640,68 @@ register("lif_scan", "pallas", platforms=("tpu",), priority=20,
          differentiable=True, mesh_aware=True)(_lif_pallas)
 
 
+# --------------------------------------------------------- lif_scan_occ
+# The full-event producer: fire AND emit the spike tensor's (128, 128)
+# per-tile occupancy map (plus its 8-row chunk refinement, which window
+# propagation dilates) in the same pass, so downstream event consumers
+# never re-derive it from the dense activation. Returns (spikes, map,
+# chunks); the maps are non-differentiated aux (int32 — zero-tangent by
+# dtype on the jnp paths, cotangent-discarded by the Pallas custom_vjp),
+# which is the gradient contract models rely on when they wrap the
+# triple in an `EventTensor`.
+def _lif_occ_example(key):
+    x = jax.random.normal(key, (3, 8, 40)) * 2.0
+    return (x,), {"decay": 0.5, "v_th": 1.0, "soft_reset": True}
+
+
+register_op("lif_scan_occ", _lif_occ_example)
+
+
+@register("lif_scan_occ", REF, priority=0, differentiable=True,
+          mesh_aware=True)
+def _lif_occ_ref(x, *, decay=0.5, v_th=1.0, soft_reset=True,
+                 surrogate_alpha=2.0):
+    s = _lif_ref(x, decay=decay, v_th=v_th, soft_reset=soft_reset,
+                 surrogate_alpha=surrogate_alpha)
+    # One chunk-granular pre-pass; the tile map is its 16:1 aggregation
+    # (identical to the fused kernel's emission, counts and all).
+    chunks = jax.lax.stop_gradient(_ref_chunk_occupancy(s))
+    occ = jnp.sum(chunks.reshape(-1, 16, chunks.shape[1]), axis=1)
+    return s, occ, chunks
+
+
+def _ref_chunk_occupancy(s):
+    from repro.core.spikes import tile_occupancy
+    k = s.shape[-1]
+    s2 = s.reshape(-1, k)
+    s2 = jnp.pad(s2, ((0, (-s2.shape[0]) % 128), (0, (-k) % 128)))
+    return tile_occupancy(s2, 8, 128)
+
+
+def _lif_occ_supports(x, **kwargs) -> Optional[str]:
+    del kwargs
+    r = int(np.prod(x.shape[1:-1])) if x.ndim > 2 else 1
+    if r % 8:
+        return (f"fused occupancy emission needs the middle axes to fill "
+                f"8-row chunks, got R={r}")
+    return None
+
+
+def _lif_occ_pallas(x, *, decay=0.5, v_th=1.0, soft_reset=True,
+                    surrogate_alpha=2.0):
+    from repro.kernels import ops
+    return ops.lif_occ(x, decay=decay, v_th=v_th, soft_reset=soft_reset,
+                       surrogate_alpha=surrogate_alpha)
+
+
+register("lif_scan_occ", "pallas-interpret", platforms=("cpu",), priority=1,
+         auto=False, supports=_lif_occ_supports, differentiable=True,
+         fallback=REF, mesh_aware=True)(_lif_occ_pallas)
+register("lif_scan_occ", "pallas", platforms=("tpu",), priority=20,
+         supports=_lif_occ_supports, differentiable=True, fallback=REF,
+         mesh_aware=True)(_lif_occ_pallas)
+
+
 # --------------------------------------------------------- spike_matmul
 def _spike_matmul_example(key):
     k1, k2 = jax.random.split(key)
@@ -623,16 +715,21 @@ register_op("spike_matmul", _spike_matmul_example)
 
 @register("spike_matmul", REF, priority=0, differentiable=True,
           mesh_aware=True)
-def _spike_matmul_ref(s, w):
+def _spike_matmul_ref(s, w, occupancy=None):
+    del occupancy    # metadata for the event kernels; the oracle is dense
     return jnp.dot(s, w, preferred_element_type=jnp.float32).astype(w.dtype)
 
 
 @register("spike_matmul", "jnp", priority=5, auto=False, vjp=_matmul_bwd,
           mesh_aware=True)
-def _spike_matmul_jnp(s, w, block_m: int = 8, block_k: int = 32):
+def _spike_matmul_jnp(s, w, block_m: int = 8, block_k: int = 32,
+                      occupancy=None):
     """Tile-masked jnp emulation of the occupancy-skipping kernel: per-tile
     partial products are gated by the same occupancy map the Pallas kernel
-    consumes (numerically identical to dense — empty tiles contribute 0)."""
+    consumes (numerically identical to dense — empty tiles contribute 0).
+    Its (8, 32) emulation tiling never matches the carried (128, 128)
+    maps, so a supplied `occupancy` is ignored (manual backend)."""
+    del occupancy
     lead = s.shape[:-2]
     m, k = s.shape[-2:]
     s2 = s.reshape((-1, k)).astype(jnp.float32)
@@ -650,9 +747,9 @@ def _spike_matmul_jnp(s, w, block_m: int = 8, block_k: int = 32):
     return out.reshape(lead + (m, w.shape[1])).astype(w.dtype)
 
 
-def _spike_matmul_pallas(s, w):
+def _spike_matmul_pallas(s, w, occupancy=None):
     from repro.kernels import ops
-    return ops.spike_matmul(s, w)
+    return ops.spike_matmul(s, w, occupancy=occupancy)
 
 
 register("spike_matmul", "pallas-interpret", platforms=("cpu",), priority=1,
@@ -661,11 +758,13 @@ register("spike_matmul", "pallas", platforms=("tpu",),
          priority=20, vjp=_matmul_bwd, mesh_aware=True)(_spike_matmul_pallas)
 
 
-def _spike_matmul_csr(s, w):
+def _spike_matmul_csr(s, w, occupancy=None):
     # Event-compacted grid (scalar-prefetch CSR dispatch): occupied tiles
-    # only; see kernels/spike_matmul.py. Wrapper pads arbitrary shapes.
+    # only; see kernels/spike_matmul.py. Wrapper pads arbitrary shapes;
+    # a carried `occupancy` replaces the dense pre-pass (the work list
+    # compacts from the tiny map).
     from repro.kernels import ops
-    return ops.spike_matmul_csr(s, w)
+    return ops.spike_matmul_csr(s, w, occupancy=occupancy)
 
 
 register("spike_matmul", "pallas-csr-interpret", platforms=("cpu",),
@@ -687,8 +786,8 @@ def _apec_example(key):
 register_op("apec_matmul", _apec_example)
 
 
-def _apec_divisibility(s, w, *, g=2) -> Optional[str]:
-    del w
+def _apec_divisibility(s, w, *, g=2, **kwargs) -> Optional[str]:
+    del w, kwargs
     if s.shape[-2] % g:
         return f"positions {s.shape[-2]} not divisible by group {g}"
     return None
@@ -696,8 +795,8 @@ def _apec_divisibility(s, w, *, g=2) -> Optional[str]:
 
 @register("apec_matmul", REF, priority=0, differentiable=True,
           mesh_aware=True)
-def _apec_matmul_ref(s, w, *, g=2):
-    del g    # the oracle is the plain dense accumulation s @ w
+def _apec_matmul_ref(s, w, *, g=2, occupancy=None):
+    del g, occupancy    # the oracle is the plain dense accumulation s @ w
     return jnp.dot(s.astype(jnp.float32),
                    w.astype(jnp.float32)).astype(w.dtype)
 
@@ -707,14 +806,15 @@ def _apec_matmul_ref(s, w, *, g=2):
 # members), so the explicit transpose rule supplies the exact gradients.
 @register("apec_matmul", "jnp", priority=10, supports=_apec_divisibility,
           vjp=_matmul_bwd, mesh_aware=True)
-def _apec_matmul_jnp(s, w, *, g=2):
+def _apec_matmul_jnp(s, w, *, g=2, occupancy=None):
+    del occupancy       # its own packed form re-derives what it gates on
     from repro.core.apec import apec_matmul_jnp
     return apec_matmul_jnp(s, w, g)
 
 
-def _apec_matmul_pallas(s, w, *, g=2):
+def _apec_matmul_pallas(s, w, *, g=2, occupancy=None):
     from repro.kernels import ops
-    return ops.apec_matmul(s, w, g=g)
+    return ops.apec_matmul(s, w, g=g, occupancy=occupancy)
 
 
 register("apec_matmul", "pallas-interpret", platforms=("cpu",), priority=1,
@@ -725,9 +825,10 @@ register("apec_matmul", "pallas", platforms=("tpu",), priority=20,
          mesh_aware=True)(_apec_matmul_pallas)
 
 
-def _apec_csr_supports(s, w, *, g=2) -> Optional[str]:
+def _apec_csr_supports(s, w, *, g=2, **kwargs) -> Optional[str]:
     # The fused kernel maps each output row tile onto a (block_m/g)-row
     # overlap tile, so the group size must divide the 128-row block.
+    del kwargs
     reason = _apec_divisibility(s, w, g=g)
     if reason is not None:
         return reason
@@ -736,11 +837,12 @@ def _apec_csr_supports(s, w, *, g=2) -> Optional[str]:
     return None
 
 
-def _apec_matmul_csr(s, w, *, g=2):
+def _apec_matmul_csr(s, w, *, g=2, occupancy=None):
     # Fused event-compacted APEC: union-CSR grid, overlap partial sums
-    # accumulated into the g member rows in-kernel (no repeat pass).
+    # accumulated into the g member rows in-kernel (no repeat pass). A
+    # carried map IS the union gate (s-tile occupied iff res or ov is).
     from repro.kernels import ops
-    return ops.apec_matmul_csr(s, w, g=g)
+    return ops.apec_matmul_csr(s, w, g=g, occupancy=occupancy)
 
 
 register("apec_matmul", "pallas-csr-interpret", platforms=("cpu",),
@@ -870,8 +972,8 @@ def _econv_example(key):
 register_op("econv", _econv_example)
 
 
-def _econv_scatter_supports(s, w, *, stride=1, padding="SAME"):
-    del s
+def _econv_scatter_supports(s, w, *, stride=1, padding="SAME", **kwargs):
+    del s, kwargs
     kh, kw = w.shape[:2]
     if kh % 2 == 0 or kw % 2 == 0:
         return f"event scatter needs odd kernels, got {(kh, kw)}"
@@ -881,7 +983,8 @@ def _econv_scatter_supports(s, w, *, stride=1, padding="SAME"):
 
 
 @register("econv", REF, priority=0, differentiable=True, mesh_aware=True)
-def _econv_ref(s, w, *, stride=1, padding="SAME"):
+def _econv_ref(s, w, *, stride=1, padding="SAME", occupancy=None):
+    del occupancy    # dense lax conv: no event metadata consumed
     from repro.core.econv import tconv
     return tconv(s, w, stride=stride, padding=padding)
 
@@ -894,31 +997,37 @@ def _econv_ref(s, w, *, stride=1, padding="SAME"):
 # to the tiled kernels instead.
 @register("econv", "jnp", priority=5, auto=False,
           supports=_econv_scatter_supports, vjp="ref")
-def _econv_scatter(s, w, *, stride=1, padding="SAME"):
-    del stride, padding
+def _econv_scatter(s, w, *, stride=1, padding="SAME", occupancy=None):
+    del stride, padding, occupancy
     from repro.core.econv import econv_scatter
     return econv_scatter(s, w)
 
 
-def _econv_im2col(s, w, stride, padding, matmul):
+def _econv_im2col(s, w, stride, padding, matmul, occupancy=None):
     """im2col + an occupancy-skipping spike matmul: binary patches of a
     binary map stay binary, so the event matmul kernel is the conv's MXU
     form. `matmul` picks the realization (predicated ops.spike_matmul or
-    event-compacted ops.spike_matmul_csr)."""
+    event-compacted ops.spike_matmul_csr). `occupancy` is a map for the
+    PATCH matrix — the input map propagated through the im2col window
+    (`core.events.conv_patch_occupancy`), never a re-scan of the
+    (kh*kw-times larger) patch tensor."""
     kh, kw, ci, co = w.shape
     patches = jax.lax.conv_general_dilated_patches(
         s, (kh, kw), (stride, stride), padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
     n, ho, wo, _ = patches.shape
     # patch features are ordered (Ci, kh, kw): transpose weights to match
+    # (the carried map is order-agnostic: its k-tiles bound whole rows)
     w2 = jnp.transpose(w, (2, 0, 1, 3)).reshape(ci * kh * kw, co)
-    out = matmul(patches.reshape(n * ho * wo, -1), w2.astype(jnp.float32))
+    out = matmul(patches.reshape(n * ho * wo, -1), w2.astype(jnp.float32),
+                 occupancy=occupancy)
     return out.reshape(n, ho, wo, co)
 
 
-def _econv_pallas(s, w, *, stride=1, padding="SAME"):
+def _econv_pallas(s, w, *, stride=1, padding="SAME", occupancy=None):
     from repro.kernels import ops
-    return _econv_im2col(s, w, stride, padding, ops.spike_matmul)
+    return _econv_im2col(s, w, stride, padding, ops.spike_matmul,
+                         occupancy)
 
 
 register("econv", "pallas-interpret", platforms=("cpu",), priority=1,
@@ -927,11 +1036,12 @@ register("econv", "pallas", platforms=("tpu",), priority=20,
          vjp="ref", mesh_aware=True)(_econv_pallas)
 
 
-def _econv_csr(s, w, *, stride=1, padding="SAME"):
+def _econv_csr(s, w, *, stride=1, padding="SAME", occupancy=None):
     """Same im2col form, but patch-row tiles with no events cost no grid
     steps/DMA on the event-compacted kernel."""
     from repro.kernels import ops
-    return _econv_im2col(s, w, stride, padding, ops.spike_matmul_csr)
+    return _econv_im2col(s, w, stride, padding, ops.spike_matmul_csr,
+                         occupancy)
 
 
 register("econv", "pallas-csr-interpret", platforms=("cpu",), priority=2,
@@ -1008,30 +1118,74 @@ register("tconv", "pallas", platforms=("tpu",), priority=20,
 
 
 # --------------------------------------------------- dispatch entry points
+# The typed entries accept an `EventTensor` in place of dense spikes and
+# unpack it into (spikes, occupancy-kwarg) for the registered backends:
+# event backends consume the carried map, oracles ignore it, and either
+# way the values are identical — occupancy only gates what is provably
+# zero. A map carried for the wrong tiling raises before resolution.
+def _event_args(s, kw=None):
+    from repro.core.events import EventTensor
+    kw = dict(kw or {})
+    if isinstance(s, EventTensor):
+        occ = s.occupancy_for(128, 128)
+        if occ is not None:
+            kw["occupancy"] = occ
+        s = s.spikes
+    return s, kw
+
+
 def lif_scan(x, *, decay=0.5, v_th=1.0, soft_reset=True, surrogate_alpha=2.0):
     return dispatch("lif_scan", x, decay=decay, v_th=v_th,
                     soft_reset=soft_reset, surrogate_alpha=surrogate_alpha)
 
 
+def lif_scan_occ(x, *, decay=0.5, v_th=1.0, soft_reset=True,
+                 surrogate_alpha=2.0):
+    """Fire + emit the occupancy maps: returns (spikes, (128,128) tile
+    map, 8-row chunk map) — wrap in an EventTensor via
+    `models.layers.lif_fire_events`."""
+    return dispatch("lif_scan_occ", x, decay=decay, v_th=v_th,
+                    soft_reset=soft_reset, surrogate_alpha=surrogate_alpha)
+
+
 def spike_matmul(s, w):
-    return dispatch("spike_matmul", s, w)
+    s, kw = _event_args(s)
+    return dispatch("spike_matmul", s, w, **kw)
 
 
 def apec_matmul(s, w, *, g=2):
-    return dispatch("apec_matmul", s, w, g=g)
+    s, kw = _event_args(s, {"g": g})
+    return dispatch("apec_matmul", s, w, **kw)
 
 
 def sdsa(q, k, v, *, mode="or"):
-    return dispatch("sdsa", q, k, v, mode=mode)
+    from repro.core.events import as_spikes
+    return dispatch("sdsa", as_spikes(q), as_spikes(k), as_spikes(v),
+                    mode=mode)
 
 
 def causal_sdsa(q, k, v, *, mode="or"):
-    return dispatch("causal_sdsa", q, k, v, mode=mode)
+    from repro.core.events import as_spikes
+    return dispatch("causal_sdsa", as_spikes(q), as_spikes(k), as_spikes(v),
+                    mode=mode)
 
 
 def econv(s, w, *, stride=1, padding="SAME"):
-    return dispatch("econv", s, w, stride=stride, padding=padding)
+    from repro.core.events import EventTensor, conv_patch_occupancy
+    kw = {"stride": stride, "padding": padding}
+    if isinstance(s, EventTensor):
+        # The carried map is for the INPUT flattening — the im2col patch
+        # matrix has different rows/K, so the map is propagated through
+        # the window (tile-granular dilation), not passed through as-is.
+        occ = conv_patch_occupancy(s, w.shape, stride, padding)
+        if occ is not None:
+            kw["occupancy"] = occ
+        s = s.spikes
+    return dispatch("econv", s, w, **kw)
 
 
 def tconv(s, w, *, stride=2, padding="SAME"):
-    return dispatch("tconv", s, w, stride=stride, padding=padding)
+    # Transposed conv dilates event addresses (zero-insertion): a carried
+    # map does not survive — dense view only (documented invalidation).
+    from repro.core.events import as_spikes
+    return dispatch("tconv", as_spikes(s), w, stride=stride, padding=padding)

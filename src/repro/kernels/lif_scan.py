@@ -178,6 +178,125 @@ def _lif_bwd_pallas(vres, g, *, decay, v_th, soft_reset, surrogate_alpha,
     )(vres, g)
 
 
+# ------------------------------------------- fused occupancy emission
+# The full-event pipeline's producer side: while the forward scan holds
+# each spike tile in VMEM it also popcounts it, so the per-tile event
+# counts leave the kernel as a second (scalar-memory) output with zero
+# extra HBM traffic over the spikes themselves — occupancy becomes a
+# byproduct of spike production instead of a dense re-read downstream.
+# Counts are emitted per (timestep, block_m-row chunk, block_n-lane tile)
+# and aggregated to the consumers' (128, 128) matmul tiling outside the
+# kernel by `kernels.ops.lif_occ` (a reduction over the tiny count map,
+# not the spike tensor).
+def _lif_occ_kernel(x_ref, s_ref, cnt_ref, v_ref, *, t_steps: int,
+                    decay: float, v_th: float, soft_reset: bool):
+    v_ref[...] = jnp.zeros_like(v_ref)
+
+    def body(t, _):
+        v = v_ref[...] * decay + x_ref[t].astype(jnp.float32)
+        s = (v >= v_th).astype(jnp.float32)
+        if soft_reset:
+            v_ref[...] = v - s * v_th
+        else:
+            v_ref[...] = v * (1.0 - s)
+        s_ref[t] = s.astype(s_ref.dtype)
+        cnt_ref[t, 0, 0] = jnp.sum(s.astype(jnp.int32))   # tile popcount
+        return ()
+
+    jax.lax.fori_loop(0, t_steps, body, ())
+
+
+def _lif_occ_fwd_kernel(x_ref, s_ref, cnt_ref, vres_ref, v_ref, *,
+                        t_steps: int, decay: float, v_th: float,
+                        soft_reset: bool):
+    """Autodiff forward: spikes + per-tile counts + pre-reset membrane
+    residuals (what the surrogate backward consumes)."""
+    v_ref[...] = jnp.zeros_like(v_ref)
+
+    def body(t, _):
+        v = v_ref[...] * decay + x_ref[t].astype(jnp.float32)
+        s = (v >= v_th).astype(jnp.float32)
+        vres_ref[t] = v
+        if soft_reset:
+            v_ref[...] = v - s * v_th
+        else:
+            v_ref[...] = v * (1.0 - s)
+        s_ref[t] = s.astype(s_ref.dtype)
+        cnt_ref[t, 0, 0] = jnp.sum(s.astype(jnp.int32))
+        return ()
+
+    jax.lax.fori_loop(0, t_steps, body, ())
+
+
+def _lif_occ_pallas(x, *, decay, v_th, soft_reset, block_m, block_n,
+                    emit_vres: bool):
+    """x: (T, M, N) -> (spikes (T, M, N), counts (T, M/bm, N/bn) int32
+    [, vres (T, M, N) f32]). Counts live in SMEM: one scalar per
+    (t, row-chunk, lane-tile), written while the spike tile is resident."""
+    interpret = jax.default_backend() == "cpu"
+    t_steps, m, n = x.shape
+    if m % block_m or n % block_n:
+        raise ValueError(f"(M,N)=({m},{n}) must tile by ({block_m},{block_n})")
+    kernel = functools.partial(
+        _lif_occ_fwd_kernel if emit_vres else _lif_occ_kernel,
+        t_steps=t_steps, decay=decay, v_th=v_th, soft_reset=soft_reset)
+    spec = pl.BlockSpec((t_steps, block_m, block_n), lambda i, j: (0, i, j))
+    cnt_spec = pl.BlockSpec((t_steps, 1, 1), lambda i, j: (0, i, j),
+                            memory_space=pltpu.SMEM)
+    cnt_shape = jax.ShapeDtypeStruct(
+        (t_steps, m // block_m, n // block_n), jnp.int32)
+    out_specs = (spec, cnt_spec) + ((spec,) if emit_vres else ())
+    out_shape = (jax.ShapeDtypeStruct(x.shape, x.dtype), cnt_shape) \
+        + ((jax.ShapeDtypeStruct(x.shape, jnp.float32),) if emit_vres else ())
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def lif_scan_occ_pallas_sg(x, decay: float = 0.5, v_th: float = 1.0,
+                           soft_reset: bool = True,
+                           surrogate_alpha: float = 2.0,
+                           block_m: int = 8, block_n: int = 128):
+    """Differentiable fused LIF with occupancy emission.
+
+    x: (T, M, N) drive -> (spikes (T, M, N), counts (T, M/bm, N/bn)).
+    Spikes are bit-identical to `lif_scan_pallas`; counts are the
+    non-differentiated aux (their cotangent is discarded — occupancy is
+    metadata, not signal). `jax.grad` runs the same reversed-scan
+    surrogate kernel as `lif_scan_pallas_sg`.
+    """
+    return _lif_occ_pallas(x, decay=decay, v_th=v_th, soft_reset=soft_reset,
+                           block_m=block_m, block_n=block_n, emit_vres=False)
+
+
+def _occ_sg_fwd(x, decay, v_th, soft_reset, surrogate_alpha, block_m,
+                block_n):
+    s, cnt, vres = _lif_occ_pallas(
+        x, decay=decay, v_th=v_th, soft_reset=soft_reset, block_m=block_m,
+        block_n=block_n, emit_vres=True)
+    return (s, cnt), vres
+
+
+def _occ_sg_bwd(decay, v_th, soft_reset, surrogate_alpha, block_m, block_n,
+                vres, g):
+    gs, _g_cnt = g          # occupancy aux carries no gradient
+    dx = _lif_bwd_pallas(vres, gs, decay=decay, v_th=v_th,
+                         soft_reset=soft_reset,
+                         surrogate_alpha=surrogate_alpha,
+                         block_m=block_m, block_n=block_n)
+    return (dx,)
+
+
+lif_scan_occ_pallas_sg.defvjp(_occ_sg_fwd, _occ_sg_bwd)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
 def lif_scan_pallas_sg(x, decay: float = 0.5, v_th: float = 1.0,
                        soft_reset: bool = True, surrogate_alpha: float = 2.0,

@@ -12,9 +12,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.spikes import (PACK, TileCSR, occupancy_to_csr, pack_spikes,
-                               pow2_step_cap, tile_occupancy, unpack_spikes)
-from .lif_scan import lif_scan_pallas_sg
+from repro.core.events import EventTensor
+from repro.core.spikes import (PACK, TileCSR, build_csr, pack_spikes,
+                               tile_occupancy, unpack_spikes)
+from .lif_scan import lif_scan_occ_pallas_sg, lif_scan_pallas_sg
 from .sdsa_kernel import (sdsa_causal_status_pallas, sdsa_packed,
                           sdsa_status_pallas)
 from .spike_matmul import (apec_matmul_csr_pallas, spike_matmul_csr_pallas,
@@ -51,6 +52,50 @@ def lif(x: jax.Array, decay: float = 0.5, v_th: float = 1.0,
     out = lif_scan_pallas_sg(flat.reshape(t, m, n), decay, v_th, soft_reset,
                              surrogate_alpha)
     return out.reshape(t, -1)[:, :orig].reshape((t,) + rest)
+
+
+@functools.partial(jax.jit, static_argnames=("decay", "v_th", "soft_reset",
+                                              "surrogate_alpha"))
+def lif_occ(x: jax.Array, decay: float = 0.5, v_th: float = 1.0,
+            soft_reset: bool = True, surrogate_alpha: float = 2.0):
+    """Fused LIF that also emits the (128, 128)-tiled occupancy map of its
+    own spike output — the full-event producer.
+
+    x: (T, ..., K) drive -> (spikes (T, ..., K),
+    occupancy (ceil(T*R/128), ceil(K/128)) int32,
+    chunks (ceil(T*R/128)*16, ceil(K/128)) int32) where R = prod of the
+    middle axes. `occupancy` is exactly `padded_occupancy(spikes)` —
+    valid for every matmul-form consumer that flattens lead axes into
+    rows; `chunks` is the kernel's native per-(8-row, 128-lane) popcount
+    map (what window propagation dilates at fine granularity). Both come
+    from the scan kernel's in-VMEM popcounts plus a reduction over the
+    tiny count map, never a dense re-read of the spikes. Requires
+    R % 8 == 0 (the kernel's row-chunk size; the dispatch `supports`
+    gate falls back to ref otherwise).
+    """
+    t = x.shape[0]
+    k = x.shape[-1]
+    mid = x.shape[1:-1]
+    r = 1
+    for d in mid:
+        r *= d
+    if r % 8:
+        raise ValueError(f"middle axes {mid} (R={r}) must divide by 8")
+    xr = x.reshape(t, r, k)
+    xr, k_orig = _pad_to(xr, 2, 128)   # zero drive never fires: counts 0
+    s, cnt = lif_scan_occ_pallas_sg(xr, decay, v_th, soft_reset,
+                                    surrogate_alpha)
+    spikes = s[..., :k_orig].reshape(x.shape)
+    # (T, R/8, KT) per-chunk counts -> (ceil(T*R/128), KT) matmul tiles:
+    # flattened row chunk (t, a) sits at index t*(R/8)+a, so groups of 16
+    # consecutive chunks are exactly the 128-row tiles (zero-padded tail
+    # chunks match the consumers' zero-padded rows).
+    kt = cnt.shape[-1]
+    cnt2 = cnt.reshape(t * (r // 8), kt)
+    cnt2, _ = _pad_to(cnt2, 0, 16)
+    occ = jnp.sum(cnt2.reshape(-1, 16, kt), axis=1)
+    return (spikes, jax.lax.stop_gradient(occ),
+            jax.lax.stop_gradient(cnt2))
 
 
 @jax.jit
@@ -177,42 +222,95 @@ def padded_occupancy(s: jax.Array, block_m: int = 128,
     return tile_occupancy(s2, block_m, block_k)
 
 
+def _carried_occupancy(s, occupancy, block_m: int, block_k: int,
+                       want_csr: bool = False):
+    """Unpack an EventTensor operand into (dense spikes, validated carried
+    occupancy, cached TileCSR). Explicit `occupancy=` wins over the
+    carried map; a map built for another tiling raises (loudly) inside
+    `EventTensor.occupancy_for`."""
+    if isinstance(s, EventTensor):
+        csr = None
+        if occupancy is None:
+            occupancy = s.occupancy_for(block_m, block_k)
+            if want_csr and occupancy is not None:
+                csr = s.csr(block_m, block_k)
+        return s.spikes, occupancy, csr
+    return s, occupancy, None
+
+
+def _group_occupancy(occ, g: int, rows: int, block_m: int = 128):
+    """Conservative overlap-operand map derived from the carried map of
+    the undecomposed spikes: the overlap tile at row-tile i unions group
+    members living in s row-tiles [g*i, g*i+g) (AND-of-group is a subset
+    of each member, so a zero s-tile group guarantees a zero overlap
+    tile). Only derivable when the row tiling regroups exactly
+    (rows % (block_m*g) == 0); otherwise None (caller re-derives)."""
+    if occ is None or rows % (block_m * g):
+        return None
+    mt = occ.shape[0]
+    return jnp.sum(occ.reshape(mt // g, g, occ.shape[1]), axis=1)
+
+
 @functools.partial(jax.jit, static_argnames=("g",))
-def apec_matmul(s: jax.Array, w: jax.Array, g: int = 2) -> jax.Array:
+def _apec_matmul_jit(w, g, ov, res, occ_res, occ_ov):
+    wf = w.astype(jnp.float32)
+    psum_ov = spike_matmul(ov, wf, occupancy=occ_ov)   # (R/g, F) cached sums
+    psum_res = spike_matmul(res, wf, occupancy=occ_res)  # (R, F) residuals
+    return psum_res + jnp.repeat(psum_ov, g, axis=0)   # reuse across members
+
+
+def apec_matmul(s, w: jax.Array, g: int = 2, *, decomposed=None,
+                occ_res: jax.Array | None = None,
+                occ_ov: jax.Array | None = None,
+                occupancy: jax.Array | None = None) -> jax.Array:
     """APEC matmul on the packed kernels: bitwise overlap/residual
     decomposition, then two occupancy-skipping matmuls with the overlap
     partial sums reused across each group's members.
 
-    s: (..., P, C) binary with P % g == 0; w: (C, F) -> (..., P, F).
-    Leading axes are flattened into the position axis — safe because each
-    row contributes whole groups when P divides by g. (Each matmul runs
-    its own occupancy pre-pass — overlap and residual are distinct
-    operands, so there is nothing to share on this path; the fused
-    `apec_matmul_csr` is the one that builds a single union pre-pass.)
+    s: (..., P, C) binary (or an `EventTensor`) with P % g == 0;
+    w: (C, F) -> (..., P, F). Leading axes are flattened into the
+    position axis — safe because each row contributes whole groups when P
+    divides by g.
+
+    Callers that already decomposed pass ``decomposed=(residual,
+    overlap)`` (flattened (R, C) / (R/g, C)) plus their per-operand maps
+    ``occ_res`` / ``occ_ov`` — aligning this path with the CSR kernel's
+    single-pre-pass behavior instead of paying two fresh dense passes
+    here. A carried ``occupancy`` (of the undecomposed s) gates both
+    matmuls conservatively: residual tiles are a subset of s tiles, and
+    the overlap map folds g s-row-tiles (`_group_occupancy`).
     """
+    s, occupancy, _ = _carried_occupancy(s, occupancy, 128, 128)
     lead = s.shape[:-2]
     p, c = s.shape[-2:]
     if p % g:
         raise ValueError(f"positions {p} not divisible by group {g}")
     s2 = s.reshape(-1, c)
-    ov, res = apec_decompose(s2, g)                  # packed bitwise kernel
-    wf = w.astype(jnp.float32)
-    psum_ov = spike_matmul(ov, wf)                   # (R/g, F) cached sums
-    psum_res = spike_matmul(res, wf)                 # (R, F) residuals
-    out = psum_res + jnp.repeat(psum_ov, g, axis=0)  # reuse across members
+    if decomposed is None:
+        ov, res = apec_decompose(s2, g)              # packed bitwise kernel
+    else:
+        res, ov = decomposed
+    if occupancy is not None and occ_res is None:
+        occ_res = occupancy                          # res tiles ⊆ s tiles
+        if occ_ov is None:
+            occ_ov = _group_occupancy(occupancy, g, s2.shape[0])
+    out = _apec_matmul_jit(w, g, ov, res, occ_res, occ_ov)
     return out.reshape(lead + (p, w.shape[-1])).astype(w.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
-def spike_matmul(s: jax.Array, w: jax.Array, block_m: int = 128,
+def spike_matmul(s, w: jax.Array, block_m: int = 128,
                  block_n: int = 128, block_k: int = 128,
                  occupancy: jax.Array | None = None) -> jax.Array:
     """Occupancy-skipping spike matmul for (..., M, K) x (K, N).
 
+    `s` may be an `EventTensor` — its carried map replaces the pre-pass.
     `occupancy`: optional precomputed per-tile event counts from
-    `padded_occupancy(s, block_m, block_k)` — callers that already ran the
-    pre-pass (APEC, stat-collecting layers) skip recomputing it here.
+    `padded_occupancy(s, block_m, block_k)` (or the fused LIF emission) —
+    callers that already hold the map skip recomputing it here. A map for
+    the wrong tiling/tile grid is rejected, never silently consumed.
     """
+    s, occupancy, _ = _carried_occupancy(s, occupancy, block_m, block_k)
     lead = s.shape[:-2]
     m, k = s.shape[-2:]
     n = w.shape[-1]
@@ -227,20 +325,17 @@ def spike_matmul(s: jax.Array, w: jax.Array, block_m: int = 128,
 
 
 # ------------------------------------------------- event-compacted (CSR)
-def _build_csr(occ, block_m, block_k):
-    """CSR work list with a power-of-two step-count bucket (dense-capped,
-    `core.spikes.pow2_step_cap` — shared with the per-shard pre-pass so
-    single-device and sharded grids bucket identically). The traced path
-    keeps the dense cap (one compile)."""
-    tiling = (block_m, block_k)
-    if isinstance(occ, jax.core.Tracer):
-        return occupancy_to_csr(occ, tiling=tiling)
-    exact = occupancy_to_csr(occ, tiling=tiling)
-    mt, kt = occ.shape
-    cap = pow2_step_cap(exact.n_steps, mt * kt)
-    if cap == exact.n_steps:
-        return exact
-    return occupancy_to_csr(occ, cap=cap, tiling=tiling)
+# The pow2-bucketed CSR builder lives in core.spikes.build_csr (shared
+# with the per-shard pre-pass and EventTensor.csr).
+_build_csr = build_csr
+
+
+def _check_map(occupancy, s2, block_m, block_k):
+    if occupancy.shape != (s2.shape[0] // block_m, s2.shape[1] // block_k):
+        raise ValueError(
+            f"occupancy map {occupancy.shape} does not match the padded "
+            f"({s2.shape[0] // block_m}, {s2.shape[1] // block_k}) tile "
+            f"grid — built for a different flattening or tiling")
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
@@ -249,9 +344,10 @@ def _spike_matmul_csr_core(s2, w2, csr, *, block_m, block_n, block_k):
                                    block_n=block_n, block_k=block_k)
 
 
-def spike_matmul_csr(s: jax.Array, w: jax.Array,
+def spike_matmul_csr(s, w: jax.Array,
                      csr: TileCSR | None = None, *, block_m: int = 128,
-                     block_n: int = 128, block_k: int = 128) -> jax.Array:
+                     block_n: int = 128, block_k: int = 128,
+                     occupancy: jax.Array | None = None) -> jax.Array:
     """Event-compacted spike matmul for (..., M, K) x (K, N).
 
     The CSR pre-pass (occupancy -> `TileCSR` work list) runs *outside* the
@@ -259,17 +355,28 @@ def spike_matmul_csr(s: jax.Array, w: jax.Array,
     compaction trims the grid to occupied tiles only, so empty tiles cost
     zero grid steps; under jit tracing the step count is the dense bound
     but clamped padding steps still cost zero tile DMA and zero FLOPs.
-    `csr`: optional precomputed `TileCSR` for this padded tiling (from
-    `padded_occupancy` + `occupancy_to_csr`) — the layer-level pass-through.
+    `s` may be an `EventTensor` (carried map + cached work list).
+    `csr`: optional precomputed `TileCSR` for this padded tiling — the
+    layer-level pass-through. `occupancy`: optional precomputed map for
+    callers holding occupancy but no work list yet — the compaction runs
+    on the tiny map; the dense `tile_occupancy` pass is skipped.
     """
+    if csr is None:
+        s, occupancy, csr = _carried_occupancy(s, occupancy, block_m,
+                                               block_k, want_csr=True)
+    else:
+        s, occupancy, _ = _carried_occupancy(s, occupancy, block_m, block_k)
     lead = s.shape[:-2]
     m, k = s.shape[-2:]
     n = w.shape[-1]
     s2 = s.reshape(-1, k) if lead else s.reshape(m, k)
     s2, w2, m_orig, n_orig = _pad_operands(s2, w, block_m, block_n, block_k)
     if csr is None:
-        csr = _build_csr(tile_occupancy(s2, block_m, block_k),
-                         block_m, block_k)
+        if occupancy is None:
+            occupancy = tile_occupancy(s2, block_m, block_k)
+        else:
+            _check_map(occupancy, s2, block_m, block_k)
+        csr = _build_csr(occupancy, block_m, block_k)
     # The jit core can't see the static tags — validate before entering.
     csr.check_compatible(block_m, block_k,
                          s2.shape[0] // block_m, s2.shape[1] // block_k)
@@ -288,9 +395,10 @@ def _apec_matmul_csr_core(res2, ov2, w2, csr, occ_res, occ_ov, *, g,
                                   block_k=block_k)
 
 
-def apec_matmul_csr(s: jax.Array, w: jax.Array, g: int = 2, *,
+def apec_matmul_csr(s, w: jax.Array, g: int = 2, *,
                     block_m: int = 128, block_n: int = 128,
-                    block_k: int = 128) -> jax.Array:
+                    block_k: int = 128,
+                    occupancy: jax.Array | None = None) -> jax.Array:
     """APEC matmul fused into one event-compacted kernel pass.
 
     Overlap/residual decomposition (packed bitwise kernel), then a single
@@ -300,7 +408,15 @@ def apec_matmul_csr(s: jax.Array, w: jax.Array, g: int = 2, *,
     in the epilogue. The union CSR pre-pass runs once and is shared
     between the two operands (no per-matmul occupancy recompute, no
     `jnp.repeat` combine pass).
+
+    `s` may be an `EventTensor`, and `occupancy` a precomputed map of the
+    UNDECOMPOSED spikes: an s-tile holds events iff its residual or
+    (broadcast) overlap tile does, so the carried map IS the union gate —
+    the work list compacts from it directly and both in-kernel dots are
+    gated conservatively on it (an exclusive-operand step runs one empty
+    dot instead of paying two dense pre-passes on the decomposed pair).
     """
+    s, occupancy, _ = _carried_occupancy(s, occupancy, block_m, block_k)
     lead = s.shape[:-2]
     p, c = s.shape[-2:]
     if p % g:
@@ -315,13 +431,21 @@ def apec_matmul_csr(s: jax.Array, w: jax.Array, g: int = 2, *,
     ov2, _ = _pad_to(ov2, 1, block_k)
     # One union pre-pass serves both operands: a k-tile enters the work
     # list when either the residual or the overlap tile holds events, and
-    # per-step counts gate each dot separately in-kernel.
-    occ_res = tile_occupancy(res2, block_m, block_k)
-    occ_ov = tile_occupancy(ov2, block_m // g, block_k)
-    csr = _build_csr(occ_res + occ_ov, block_m, block_k)
-    steps = (csr.tile_m_idx, csr.tile_k_idx)
-    occ_res_steps = (occ_res[steps] * csr.valid).astype(jnp.int32)
-    occ_ov_steps = (occ_ov[steps] * csr.valid).astype(jnp.int32)
+    # per-step counts gate each dot separately in-kernel. A carried map
+    # replaces the pre-pass outright (union == s-tile occupancy).
+    if occupancy is not None:
+        _check_map(occupancy, res2, block_m, block_k)
+        csr = _build_csr(occupancy, block_m, block_k)
+        steps = (csr.tile_m_idx, csr.tile_k_idx)
+        gate = (occupancy[steps] * csr.valid).astype(jnp.int32)
+        occ_res_steps = occ_ov_steps = gate
+    else:
+        occ_res = tile_occupancy(res2, block_m, block_k)
+        occ_ov = tile_occupancy(ov2, block_m // g, block_k)
+        csr = _build_csr(occ_res + occ_ov, block_m, block_k)
+        steps = (csr.tile_m_idx, csr.tile_k_idx)
+        occ_res_steps = (occ_res[steps] * csr.valid).astype(jnp.int32)
+        occ_ov_steps = (occ_ov[steps] * csr.valid).astype(jnp.int32)
     out = _apec_matmul_csr_core(res2, ov2, w2, csr, occ_res_steps,
                                 occ_ov_steps, g=g, block_m=block_m,
                                 block_n=block_n, block_k=block_k)

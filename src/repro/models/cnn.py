@@ -28,20 +28,31 @@ from repro.configs.base import CNNConfig, CNNLayer
 from repro.core.direct_coding import quantize
 from repro.core.econv import conv_transpose, econv
 from repro.core.eafc import eafc
-from repro.core.lif import LIFConfig, lif_scan
+from repro.core.events import EventTensor, max_pool_events
+from repro.core.lif import LIFConfig
+from .layers import lif_fire_events
 
 Params = Dict[str, Any]
 
 
-def _conv_seq(s: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+def _fire(drive: jax.Array, lif: LIFConfig) -> EventTensor:
+    """Fire stage with fused metadata emission: spikes + occupancy leave
+    the LIF together (`lif_scan_occ`), so the next conv's event kernel
+    consumes the carried map instead of re-scanning the activation."""
+    return lif_fire_events(drive, lif)
+
+
+def _conv_seq(s, w: jax.Array, stride: int = 1) -> jax.Array:
     """(T,B,H,W,C) drive through the registry `econv` op, T folded into
-    the batch (one conv on T*B images instead of a vmap of T convs)."""
+    the batch (one conv on T*B images instead of a vmap of T convs).
+    `s` may be an `EventTensor` — the (T,B)->(T*B) fold preserves the
+    trailing channel axis, so the carried map survives into the conv."""
     t, b = s.shape[:2]
     out = econv(s.reshape((t * b,) + s.shape[2:]), w, stride=stride)
     return out.reshape((t, b) + out.shape[1:])
 
 
-def _tconv_seq(s: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+def _tconv_seq(s, w: jax.Array, stride: int) -> jax.Array:
     """(T,B,H,W,C) spikes through the registry `tconv` (transposed conv)."""
     t, b = s.shape[:2]
     out = conv_transpose(s.reshape((t * b,) + s.shape[2:]), w, stride=stride)
@@ -101,17 +112,16 @@ def vgg11_apply(cfg: CNNConfig, p: Params, x: jax.Array,
     stats: List[jax.Array] = []
     for layer, w in zip(VGG11_LAYERS, p["convs"]):
         if layer.kind == "maxpool":
-            s = jax.lax.reduce_window(
-                s, -jnp.inf, jax.lax.max,
-                (1, 1, layer.pool, layer.pool, 1),
-                (1, 1, layer.pool, layer.pool, 1), "VALID")
+            # pooling keeps the carried map alive (tile-map dilation)
+            s = max_pool_events(s, layer.pool)
             continue
         drive = _conv_seq(s, w)
-        s = lif_scan(drive, lif)          # binary spikes, all timesteps
+        s = _fire(drive, lif)             # binary spikes + occupancy map
         if collect_stats:
-            stats.append(s)
+            stats.append(s.spikes)
     # EAFC head (OPT3): event-driven avgpool+FC over every timestep.
-    logits = jnp.mean(jax.vmap(lambda st: eafc(st, p["fc"], cfg.fc_pool))(s),
+    logits = jnp.mean(jax.vmap(lambda st: eafc(st, p["fc"],
+                                               cfg.fc_pool))(s.spikes),
                       axis=0)
     return (logits, stats) if collect_stats else logits
 
@@ -148,21 +158,22 @@ def resnet18_apply(cfg: CNNConfig, p: Params, x: jax.Array,
     xin = jnp.broadcast_to((q.astype(jnp.float32) * scale)[None],
                            (t,) + x.shape)
     drive = _conv_seq(xin, p["stem"])
-    s = lif_scan(drive, lif)
-    stats: List[jax.Array] = [s] if collect_stats else []
+    s = _fire(drive, lif)
+    stats: List[jax.Array] = [s.spikes] if collect_stats else []
     for blk in p["blocks"]:
         st0 = blk["stride"]
         h = _conv_seq(s, blk["conv1"], stride=st0)
-        h = lif_scan(h, lif)
+        h = _fire(h, lif)
         h2 = _conv_seq(h, blk["conv2"])
-        # Residual Spike SRAM path: shortcut drives added pre-fire.
-        short = s
-        if "proj" in blk:
-            short = _conv_seq(s, blk["proj"], stride=st0)
-        s = lif_scan(h2 + short, lif)
+        # Residual Spike SRAM path: shortcut drives added pre-fire (the
+        # sum is membrane drive, not spikes — metadata re-emits at _fire).
+        short = _conv_seq(s, blk["proj"], stride=st0) if "proj" in blk \
+            else s.spikes
+        s = _fire(h2 + short, lif)
         if collect_stats:
-            stats.append(s)
-    logits = jnp.mean(jax.vmap(lambda ss: eafc(ss, p["fc"], cfg.fc_pool))(s),
+            stats.append(s.spikes)
+    logits = jnp.mean(jax.vmap(lambda ss: eafc(ss, p["fc"],
+                                               cfg.fc_pool))(s.spikes),
                       axis=0)
     return (logits, stats) if collect_stats else logits
 
@@ -197,7 +208,7 @@ def segnet_apply(cfg: CNNConfig, p: Params, x: jax.Array,
         if last:
             return (jnp.mean(drive, axis=0), stats) if collect_stats \
                 else jnp.mean(drive, axis=0)
-        s = lif_scan(drive, lif)
+        s = _fire(drive, lif)
         if collect_stats:
-            stats.append(s)
+            stats.append(s.spikes)
     raise AssertionError("unreachable")

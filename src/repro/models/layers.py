@@ -17,6 +17,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro.core.events import EventTensor
 from repro.core.lif import LIFConfig
 
 Params = Dict[str, Any]
@@ -93,6 +94,24 @@ def lif_fire(x: jax.Array, lif_cfg: LIFConfig) -> jax.Array:
                     surrogate_alpha=lif_cfg.surrogate_alpha)
 
 
+def lif_fire_events(x: jax.Array, lif_cfg: LIFConfig) -> EventTensor:
+    """Fire AND carry the event metadata: the full-event producer.
+
+    Routes through `lif_scan_occ`, whose Pallas backend emits the
+    (128, 128) per-tile occupancy map while the spike tile is still in
+    VMEM (ref computes it with `tile_occupancy` — identical map). The
+    returned `EventTensor` flows to the next layer's event op, which
+    skips its own dense occupancy pre-pass; the map is stop-gradient aux,
+    so `jax.grad` matches the dense-spike forward exactly.
+    """
+    from repro.kernels.dispatch import dispatch
+    s, occ, chunks = dispatch("lif_scan_occ", x, decay=lif_cfg.decay,
+                              v_th=lif_cfg.v_th,
+                              soft_reset=lif_cfg.soft_reset,
+                              surrogate_alpha=lif_cfg.surrogate_alpha)
+    return EventTensor(s, occ, chunks=chunks)
+
+
 # --------------------------------------------------------------- SwiGLU MLP
 def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
     k1, k2, k3 = jax.random.split(key, 3)
@@ -111,7 +130,20 @@ def mlp_apply(p: Params, x: jax.Array, spiking: bool,
     is fired through LIF (binary hidden spikes), then down-projected —
     every matmul sees binary activations (full-event execution). SiLU
     gating is replaced by the LIF threshold, the FPE analog.
+
+    Full-event mode (x is an `EventTensor`): both up-projections consume
+    the ONE carried occupancy map, the hidden fire re-emits metadata
+    fused, and the down-projection consumes that — zero standalone
+    occupancy pre-passes inside the block. (The dispatch route passes the
+    map; work-list compaction from it is tiny-map work per consumer. The
+    per-instance `EventTensor.csr()` cache serves direct `kernels.ops`
+    callers.)
     """
+    if isinstance(x, EventTensor):
+        from repro.kernels import dispatch as _d
+        h = _d.spike_matmul(x, p["w_gate"]) + _d.spike_matmul(x, p["w_up"])
+        h = lif_fire_events(h, lif_cfg)
+        return _d.spike_matmul(h, p["w_down"])
     if spiking:
         h = x @ (p["w_gate"].astype(x.dtype))
         h = h + x @ (p["w_up"].astype(x.dtype))

@@ -15,10 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SpikingConfig
+from repro.core.events import max_pool_events
 from repro.core.lif import LIFConfig
 from repro.kernels import dispatch
 from .cnn import _conv_init
-from .layers import dense_init, lif_fire
+from .layers import dense_init, lif_fire, lif_fire_events
 
 Params = Dict[str, Any]
 
@@ -59,28 +60,32 @@ def spikingformer_apply(p: Params, x: jax.Array, n_heads: int = 8,
     # Registry-routed econv over the flattened (T*B) batch: dense TConv on
     # CPU, im2col + occupancy-skipping spike matmul on TPU. Stage 0 eats
     # the direct-coded (multi-bit) image, which the event path doesn't
-    # model (OPT1 territory) — it stays on the dense oracle.
+    # model (OPT1 territory) — it stays on the dense oracle. From stage 1
+    # on the stream is full-event: the fire stage emits spikes WITH their
+    # occupancy map (`lif_fire_events`), the (T,B)->(T*B) fold and the
+    # pooling both carry it forward, and each econv consumes it instead
+    # of re-deriving occupancy from the activation it was just handed.
     from repro.core.econv import econv, tconv
     for i, w in enumerate(p["sps"]):
         tb = s.shape[:2]
         flat = s.reshape((-1,) + s.shape[2:])
         drive = tconv(flat, w) if i == 0 else econv(flat, w)
         drive = drive.reshape(tb + drive.shape[1:])
-        s = lif_fire(drive, lif)
+        s = lif_fire_events(drive, lif)
         if i in (1, 2):
-            s = jax.lax.reduce_window(
-                s, -jnp.inf, jax.lax.max, (1, 1, 2, 2, 1), (1, 1, 2, 2, 1),
-                "VALID")
+            s = max_pool_events(s, 2)
         if collect_stats:
-            stats.append(s)
+            stats.append(s.spikes)
 
     dim = s.shape[-1]
     n_tok = s.shape[2] * s.shape[3]
-    tokens = s.reshape(t, b, n_tok, dim)                   # (T,B,N,D) spikes
-    x_mp = tokens                                           # membrane stream
+    tokens = s.reshape(t, b, n_tok, dim)         # (T,B,N,D), map survives
+    x_mp = tokens.spikes                          # membrane stream
 
     for blk in p["blocks"]:
-        # SSA: q/k/v spikes -> Attention Core (non-causal OR form).
+        # SSA: q/k/v spikes -> Attention Core (non-causal OR form). The
+        # head split changes the trailing axis, so no map is carried into
+        # SDSA (which consumes packed words, not occupancy, anyway).
         sq = lif_fire(x_mp @ blk["w_q"], lif).reshape(
             t, b, n_tok, n_heads, dim // n_heads)
         sk = lif_fire(x_mp @ blk["w_k"], lif).reshape(
@@ -93,12 +98,13 @@ def spikingformer_apply(p: Params, x: jax.Array, n_heads: int = 8,
         if collect_stats:
             stats.append(attn)
         x_mp = x_mp + attn @ blk["w_o"]
-        # Spiking MLP (FFN)
-        h = lif_fire(x_mp, lif)
-        h = lif_fire(h @ blk["w_fc1"], lif)
+        # Spiking MLP (FFN): full-event — both fires carry their maps and
+        # both projections consume them through the registry matmul.
+        h = lif_fire_events(x_mp, lif)
+        h = lif_fire_events(dispatch.spike_matmul(h, blk["w_fc1"]), lif)
         if collect_stats:
-            stats.append(h)
-        x_mp = x_mp + h @ blk["w_fc2"]
+            stats.append(h.spikes)
+        x_mp = x_mp + dispatch.spike_matmul(h, blk["w_fc2"])
 
     feats = jnp.mean(lif_fire(x_mp, lif), axis=(0, 2))      # rate + token avg
     logits = feats @ p["head"]

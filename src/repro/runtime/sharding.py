@@ -287,7 +287,7 @@ def per_shard_occupied_tiles(s, n_shards: int, block_m: int = 128,
 
 
 def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
-                     with_report: bool = False, **kwargs):
+                     occupancy=None, with_report: bool = False, **kwargs):
     """Route a matmul-form registry op (`spike_matmul` / `apec_matmul`)
     through `shard_map` on `mesh`, with mesh-aware backend resolution.
 
@@ -300,6 +300,16 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     Differentiable end to end: the pinned backend carries its registered
     VJP, and shard_map transposes the row sharding.
 
+    `s` may be an `core.events.EventTensor` (or `occupancy=` a carried
+    map): the sharded path then REUSES the producer's map instead of
+    rebuilding local work lists from the resident spikes — a concrete map
+    compacts straight into per-shard trimmed work lists
+    (`shard_occupancy_to_csr` on the tiny map, no dense pre-pass and no
+    gather), and a traced map shards row-contiguously into the body so
+    each shard compacts its own slice. When the per-shard tile grid can't
+    split the map evenly (ragged rows), the map is dropped with a warning
+    and shards re-derive locally — never silently misgated.
+
     `csr_stack`: optional stacked per-shard `TileCSR`
     (`core.spikes.shard_occupancy_to_csr` + `stack_shard_csrs`) for
     `spike_matmul` on the CSR family — each shard consumes its own
@@ -308,22 +318,31 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     global occupancy map.
 
     `with_report=True` additionally returns the routing/straggler report:
-    resolved backend + attribution, and (for concrete `s`) the per-shard
-    occupied-tile `OccupancyImbalance`.
+    resolved backend + attribution, occupancy provenance
+    (``occupancy_source``: carried / csr_stack / rederived), and (for
+    concrete `s`) the per-shard occupied-tile `OccupancyImbalance`.
     """
-    from repro.core.spikes import TileCSR
+    from repro.core.events import EventTensor
+    from repro.core.spikes import (TileCSR, shard_occupancy_to_csr,
+                                   stack_shard_csrs)
     from repro.kernels import dispatch, ops
     from repro.launch.mesh import shard_map
+
+    if isinstance(s, EventTensor):
+        if occupancy is None:
+            occupancy = s.occupancy_for(128, 128)
+        s = s.spikes
 
     axes = event_rows_axes(mesh, s.shape[0])
     n_shards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
 
-    def _report(backend, attribution):
+    def _report(backend, attribution, occupancy_source):
         if not with_report:
             return None
         from repro.runtime.straggler import occupancy_imbalance
         rep = {"op": op, "backend": backend, "attribution": attribution,
-               "n_shards": n_shards, "occupancy": None}
+               "n_shards": n_shards, "occupancy": None,
+               "occupancy_source": occupancy_source}
         if n_shards > 1 and not isinstance(s, jax.core.Tracer):
             rep["occupancy"] = occupancy_imbalance(
                 per_shard_occupied_tiles(s, n_shards))
@@ -339,12 +358,49 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     be, attribution = dispatch.resolve_with_attribution(
         op, s, w, mesh=n_shards, **kwargs)
     if n_shards <= 1:
-        out = be.fn(s, w, **kwargs)
-        return (out, _report(be.name, attribution)) if with_report else out
+        if occupancy is not None:
+            out = be.fn(s, w, occupancy=occupancy, **kwargs)
+            src = "carried"
+        else:
+            out = be.fn(s, w, **kwargs)
+            src = "csr_stack" if csr_stack is not None else "rederived"
+        return (out, _report(be.name, attribution, src)) if with_report \
+            else out
 
     lead = tuple(axes) if len(axes) > 1 else axes[0]
     row_spec = P(lead, *([None] * (s.ndim - 1)))
     w_spec = P(*([None] * w.ndim))
+
+    rows = int(np.prod(s.shape[:-1]))
+    if occupancy is not None and (
+            rows % n_shards or (rows // n_shards) % 128
+            or occupancy.shape[0] % n_shards):
+        # A carried map only splits into congruent per-shard maps when
+        # every shard owns whole 128-row tiles (the same condition the
+        # CSR mesh gate checks). Say so — the caller believes the carried
+        # route is live.
+        warnings.warn(
+            f"exspike sharding: carried occupancy dropped for {op!r} — "
+            f"{rows} rows over {n_shards} shards do not split into whole "
+            f"128-row tiles; shards re-derive locally",
+            RuntimeWarning, stacklevel=2)
+        occupancy = None
+    if occupancy is not None and csr_stack is None \
+            and op == "spike_matmul" and be.name.startswith("pallas-csr") \
+            and not isinstance(occupancy, jax.core.Tracer):
+        # Concrete carried map -> per-shard TRIMMED work lists, built from
+        # the tiny map alone (the whole point: no dense pre-pass, no
+        # gather, and the producer's emission is what feeds the mesh).
+        csr_stack = stack_shard_csrs(shard_occupancy_to_csr(
+            occupancy, n_shards, tiling=(128, 128)))
+        occupancy = None
+        occupancy_source = "carried"
+    elif csr_stack is not None:
+        occupancy_source = "csr_stack"
+    elif occupancy is not None:
+        occupancy_source = "carried"
+    else:
+        occupancy_source = "rederived"
 
     if csr_stack is not None and not be.name.startswith("pallas-csr"):
         # Degraded off the CSR family (mesh gate / capability): the
@@ -356,6 +412,10 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
             f"{be.name!r} ({attribution}), not the CSR family",
             RuntimeWarning, stacklevel=2)
         csr_stack = None
+        # A carried map passed alongside the stack still feeds the
+        # sharded occupancy-operand path below — attribute it honestly.
+        occupancy_source = "carried" if occupancy is not None \
+            else "rederived"
     if csr_stack is not None:
         csr_arrays = tuple(csr_stack[:5])   # row_ptr/tile_m/tile_k/occ/valid
         csr_specs = tuple(P(lead) for _ in csr_arrays)
@@ -385,6 +445,22 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
 
         run.defvjp(run_fwd, run_bwd)
         out = run(s, w)
+    elif occupancy is not None:
+        # Carried map, traced (or a non-spike_matmul op): shard the map
+        # row-contiguously alongside the spikes — each shard's body
+        # consumes its own slice (the CSR family compacts it in-shard;
+        # the predicated family gates on it directly). The map rides as
+        # a shard_map operand, so no shard re-derives from dense spikes.
+        occ_spec = P(lead, None)
+
+        def body(sl, wl, occl):
+            return dispatch.call_backend(op, be.name, sl, wl,
+                                         occupancy=occl, **kwargs)
+
+        fn = shard_map(body, mesh=mesh,
+                       in_specs=(row_spec, w_spec, occ_spec),
+                       out_specs=row_spec)
+        out = fn(s, w, occupancy)
     else:
         def body(sl, wl):
             return dispatch.call_backend(op, be.name, sl, wl, **kwargs)
@@ -392,7 +468,8 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
         fn = shard_map(body, mesh=mesh, in_specs=(row_spec, w_spec),
                        out_specs=row_spec)
         out = fn(s, w)
-    return (out, _report(be.name, attribution)) if with_report else out
+    return (out, _report(be.name, attribution, occupancy_source)) \
+        if with_report else out
 
 
 # ---------------------------------------------------------------- helpers

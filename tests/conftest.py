@@ -173,10 +173,49 @@ MULTIDEVICE_SCRIPT = textwrap.dedent("""
             assert rb["spike_matmul"] \
                 == "pallas-interpret<-pallas-csr-interpret", rb
 
+    def event_tensor():
+        from repro.core.events import EventTensor
+        from repro.kernels import dispatch
+        from repro.runtime import sharding
+        mesh8 = make_mesh((8, 1), ("data", "model"))
+        s = (jax.random.uniform(jax.random.PRNGKey(5), (1024, 128)) < 0.05
+             ).astype(jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(6), (128, 64), jnp.float32)
+        et = EventTensor.from_spikes(s)
+        ref = np.asarray(jnp.dot(s, w))
+        g_ref = np.asarray(jax.grad(lambda ww: jnp.sum(s @ ww))(w))
+        with dispatch.use_backend("pallas-csr-interpret", op="spike_matmul"):
+            # concrete carried map -> per-shard TRIMMED work lists built
+            # from the tiny map (occupancy_source must say so: the
+            # sharded path reuses the producer's emission, it does not
+            # rebuild local lists from resident spikes)
+            out, rep = sharding.event_op_sharded(
+                mesh8, "spike_matmul", et, w, with_report=True)
+            assert rep["occupancy_source"] == "carried", rep
+            assert rep["attribution"] == "pallas-csr-interpret", rep
+            np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+            # traced carried map: sharded occupancy operand inside the
+            # shard_map body, fwd AND bwd parity vs single device
+            f = jax.jit(lambda ov, ww: sharding.event_op_sharded(
+                mesh8, "spike_matmul", s, ww, occupancy=ov))
+            np.testing.assert_allclose(np.asarray(f(et.occupancy, w)), ref,
+                                       atol=1e-5)
+            g = jax.grad(lambda ww: jnp.sum(sharding.event_op_sharded(
+                mesh8, "spike_matmul", et, ww)))(w)
+            np.testing.assert_allclose(np.asarray(g), g_ref, atol=1e-5)
+            g2 = jax.jit(jax.grad(lambda ww: jnp.sum(f(et.occupancy, ww))))(w)
+            np.testing.assert_allclose(np.asarray(g2), g_ref, atol=1e-5)
+        with dispatch.use_backend("pallas-csr-interpret", op="apec_matmul"):
+            out3, rep3 = sharding.event_op_sharded(
+                mesh8, "apec_matmul", et, w, g=2, with_report=True)
+            assert rep3["occupancy_source"] == "carried", rep3
+            np.testing.assert_allclose(np.asarray(out3), ref, atol=1e-5)
+
     section("CKPT_ELASTIC", ckpt_elastic)
     section("ELASTIC_E2E", elastic_e2e)
     section("SHARD_MAP", shard_map_moe)
     section("MESH_DISPATCH", mesh_dispatch)
+    section("EVENT_TENSOR", event_tensor)
 """)
 
 

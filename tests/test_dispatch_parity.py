@@ -36,14 +36,24 @@ PAIRS = [
 ]
 
 
+def _assert_tree_close(got, expect, atol):
+    """Leaf-wise comparison — ops may return pytrees (e.g. `lif_scan_occ`
+    returns (spikes, occupancy))."""
+    g_leaves = jax.tree.leaves(got)
+    e_leaves = jax.tree.leaves(expect)
+    assert len(g_leaves) == len(e_leaves)
+    for g, e in zip(g_leaves, e_leaves):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(e, np.float32), atol=atol)
+
+
 @pytest.mark.parametrize("op,backend", PAIRS,
                          ids=[f"{o}-{b}" for o, b in PAIRS])
 def test_backend_matches_ref_oracle(op, backend):
     args, kwargs = dispatch.example_inputs(op, jax.random.PRNGKey(0))
     expect = dispatch.call_backend(op, dispatch.REF, *args, **kwargs)
     got = dispatch.call_backend(op, backend, *args, **kwargs)
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(expect, np.float32), atol=ATOL)
+    _assert_tree_close(got, expect, ATOL)
 
 
 # -------------------------------------------------------- gradient parity
@@ -63,10 +73,21 @@ DIFF_PAIRS = [
 GRAD_ATOL = 1e-4
 
 
+def _make_probe(out_ref):
+    """One fixed probe per output leaf (int leaves — non-differentiated
+    aux like the `lif_scan_occ` map — probe to a constant-zero term)."""
+    leaves, treedef = jax.tree.flatten(out_ref)
+    probes = [jax.random.normal(jax.random.PRNGKey(42 + i), l.shape,
+                                jnp.float32) for i, l in enumerate(leaves)]
+    return jax.tree.unflatten(treedef, probes)
+
+
 def _probe_loss(op, backend, kwargs, probe):
     def loss(args):
         out = dispatch.call_backend(op, backend, *args, **kwargs)
-        return jnp.sum(out.astype(jnp.float32) * probe)
+        terms = jax.tree.map(
+            lambda o, pr: jnp.sum(o.astype(jnp.float32) * pr), out, probe)
+        return sum(jax.tree.leaves(terms))
     return loss
 
 
@@ -75,8 +96,7 @@ def _probe_loss(op, backend, kwargs, probe):
 def test_grad_matches_ref_oracle(op, backend):
     args, kwargs = dispatch.example_inputs(op, jax.random.PRNGKey(0))
     out_ref = dispatch.call_backend(op, dispatch.REF, *args, **kwargs)
-    probe = jax.random.normal(jax.random.PRNGKey(42), out_ref.shape,
-                              jnp.float32)
+    probe = _make_probe(out_ref)
     g_ref = jax.grad(_probe_loss(op, dispatch.REF, kwargs, probe))(args)
     g = jax.grad(_probe_loss(op, backend, kwargs, probe))(args)
     assert len(g) == len(g_ref)
@@ -84,6 +104,69 @@ def test_grad_matches_ref_oracle(op, backend):
         np.testing.assert_allclose(np.asarray(got, np.float32),
                                    np.asarray(expect, np.float32),
                                    atol=GRAD_ATOL)
+
+
+# ---------------------------------- EventTensor-carried forward parity
+# The full-event pipeline's gradient contract: a forward whose consumer
+# receives the producer's carried occupancy (stop-gradient aux) must
+# match the dense-spike forward — values AND jax.grad — for every
+# differentiable backend of every map-consuming op. Enumerated from the
+# live registry like everything else.
+EVENT_CONSUMER_OPS = ("spike_matmul", "apec_matmul", "econv")
+EVENT_PAIRS = [
+    (op, be)
+    for op in EVENT_CONSUMER_OPS
+    for be in dispatch.differentiable_backend_names(op)
+    if jax.default_backend() in dispatch.get_backend(op, be).platforms
+]
+
+
+def _event_probe_setup(op):
+    if op == "econv":
+        drive = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 8, 8, 8)) * 2
+        w = jax.random.normal(jax.random.PRNGKey(9), (3, 3, 8, 6))
+        return drive, w, {"stride": 1, "padding": "SAME"}
+    drive = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 48)) * 2.0
+    w = jax.random.normal(jax.random.PRNGKey(9), (48, 24))
+    return drive, w, ({"g": 2} if op == "apec_matmul" else {})
+
+
+@pytest.mark.parametrize("op,backend", EVENT_PAIRS,
+                         ids=[f"{o}-{b}" for o, b in EVENT_PAIRS])
+def test_grad_through_event_tensor_forward_matches_dense(op, backend):
+    from repro.core.events import conv_patch_occupancy
+    from repro.core.lif import LIFConfig
+    from repro.models.layers import lif_fire_events
+    drive, w, kwargs = _event_probe_setup(op)
+    lif = LIFConfig()
+
+    def forward(x, carried):
+        et = lif_fire_events(x, lif)           # fused producer (ref on CPU)
+        kw = dict(kwargs)
+        if op == "econv":
+            et = et.reshape((-1,) + et.shape[2:])     # T*B fold keeps map
+            if carried:
+                kw["occupancy"] = conv_patch_occupancy(et, w.shape, 1,
+                                                       "SAME")
+        elif carried:
+            kw["occupancy"] = et.occupancy_for(128, 128)
+        return dispatch.call_backend(op, backend, et.spikes, w, **kw)
+
+    out_carried = forward(drive, True)
+    out_dense = forward(drive, False)
+    np.testing.assert_allclose(np.asarray(out_carried),
+                               np.asarray(out_dense), atol=1e-5)
+    probe = jax.random.normal(jax.random.PRNGKey(42), out_dense.shape)
+
+    def loss(carried):
+        return lambda x: jnp.sum(forward(x, carried).astype(jnp.float32)
+                                 * probe)
+
+    g_carried = jax.grad(loss(True))(drive)
+    g_dense = jax.grad(loss(False))(drive)
+    assert bool(jnp.any(g_dense != 0))
+    np.testing.assert_allclose(np.asarray(g_carried), np.asarray(g_dense),
+                               atol=1e-5)
 
 
 def test_every_backend_declares_gradient_contract():
