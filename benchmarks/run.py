@@ -41,8 +41,8 @@ import traceback
 
 def _suites():
     from . import (e2e_event, fig2_econv_vs_tconv, fig7_apec, fig8_breakdown,
-                   fig9_cpu, kernel_backends, roofline, sparsity_sweep,
-                   table1_resources, table2_throughput)
+                   fig9_cpu, hybrid_sweep, kernel_backends, roofline,
+                   sparsity_sweep, table1_resources, table2_throughput)
     return [
         ("fig2", fig2_econv_vs_tconv.run),
         ("fig7", fig7_apec.run),
@@ -58,6 +58,10 @@ def _suites():
         # sharded-vs-single CSR columns (8-way host mesh; re-launches
         # itself with forced host devices when this process has fewer)
         ("sparsity_mesh", sparsity_sweep.run_mesh_rows),
+        # density-adaptive hybrid dispatch vs the two static pins
+        # (single-device model stacks + 8-way mesh rows)
+        ("hybrid", hybrid_sweep.run),
+        ("hybrid_mesh", hybrid_sweep.run_mesh_rows),
     ]
 
 

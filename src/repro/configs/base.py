@@ -14,6 +14,9 @@ class SpikingConfig:
     lif_vth: float = 1.0
     sdsa_mode: str = "or"       # "or" (paper Fig. 6) | "sum" (trainable)
     apec_group: int = 2         # paper's default G2
+    hybrid: bool = False        # density-adaptive dispatch: matmul-form ops
+                                # with a carried occupancy map pick dense vs
+                                # event per call (kernels.dispatch.use_hybrid)
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)

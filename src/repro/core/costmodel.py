@@ -194,6 +194,204 @@ def tile_matmul_savings(
     )
 
 
+# --------------------------------------------------------------------------
+# Hybrid dense<->event route calibration (PR 6)
+#
+# The hybrid dispatch mode needs a *predicate*: given the carried occupancy
+# map's occupied-tile count, is the event-compacted (pallas-csr family)
+# route cheaper than the predicated-dense (pallas family) route?  The two
+# ledgers above say what each route pays structurally — dense runs every
+# grid step (full DMA) and spends MXU only on occupied tiles; event runs
+# only occupied steps plus one dummy per all-empty m-tile row, at a
+# per-step compaction overhead (scalar prefetch + trimmed-grid setup).
+# The two unknowns are machine-relative rates:
+#
+#   r — MXU work per occupied step, in units of one step's tile DMA
+#   h — event-route per-step overhead, same units
+#
+# Both are *fit against the committed BENCH_PR3.json sparsity sweeps*
+# (the measured predicated-vs-compacted crossover this repo has been
+# tracking since PR 3) rather than hand-tuned: see
+# ROUTE_CALIBRATION_POINTS and fit_route_params below.
+# --------------------------------------------------------------------------
+
+import functools
+import json
+import math
+import re
+
+# Geometry of the BENCH_PR3 sparsity sweep rows (benchmarks/sparsity_sweep):
+# (M, K, N) = (512, 512, 256) at 128-blocks -> a 4x4 occupancy map, 16 tiles.
+CALIBRATION_TILES_M = 4
+CALIBRATION_TILES_K = 4
+
+# (occupied_tiles, t_dense_us, t_event_us) per op, transcribed from the two
+# sweeps committed in BENCH_PR3.json (rows `sparsity/<op>/pallas[-csr]/s*`;
+# occupied = occupancy_fraction * 16).  test_hybrid_dispatch asserts this
+# table equals crossover_points_from_bench("BENCH_PR3.json", op) so the
+# embedded constants cannot drift from the committed artifact.
+ROUTE_CALIBRATION_POINTS: dict[str, tuple[tuple[int, float, float], ...]] = {
+    "spike_matmul": (
+        (16, 19865.0, 22432.2), (13, 18517.1, 21322.9),
+        (6, 12198.0, 11972.8), (3, 14113.5, 10709.5), (1, 11965.9, 6704.7),
+        (16, 17170.3, 22083.6), (13, 17011.4, 20597.0),
+        (6, 10876.1, 9943.2), (3, 10093.7, 10834.9), (1, 8829.8, 5846.8),
+    ),
+    "apec_matmul": (
+        (16, 22323.9, 27813.6), (13, 25166.1, 25116.2),
+        (6, 15328.0, 15821.9), (3, 19160.7, 14200.1), (1, 12176.5, 9935.8),
+        (16, 27109.4, 28301.1), (13, 19246.3, 25143.1),
+        (6, 20903.1, 16601.1), (3, 18878.6, 14265.4), (1, 14449.1, 9039.2),
+    ),
+}
+
+_SPARSITY_ROW = re.compile(
+    r"^sparsity/(?P<op>[\w-]+)/(?P<route>pallas(?:-csr)?)/s\d+,"
+    r"(?P<us>[\d.]+),.*?occupancy=(?P<occ>[\d.]+)")
+
+
+def crossover_points_from_bench(path: str, op: str,
+                                ) -> tuple[tuple[int, float, float], ...]:
+    """Re-derive (occupied_tiles, t_dense_us, t_event_us) from a committed
+    benchmark JSON (BENCH_PR3.json schema) — the provenance check for
+    ROUTE_CALIBRATION_POINTS."""
+    with open(path) as f:
+        payload = json.load(f)
+    total = CALIBRATION_TILES_M * CALIBRATION_TILES_K
+    points: list[tuple[int, float, float]] = []
+    for sweep in payload["sweeps"]:
+        dense: dict[int, float] = {}
+        event: dict[int, float] = {}
+        for row in sweep["rows"]:
+            m = _SPARSITY_ROW.match(row)
+            if not m or m.group("op") != op:
+                continue
+            occupied = round(float(m.group("occ")) * total)
+            side = event if m.group("route") == "pallas-csr" else dense
+            side[occupied] = float(m.group("us"))
+        for occupied in sorted(set(dense) & set(event), reverse=True):
+            points.append((occupied, dense[occupied], event[occupied]))
+    return tuple(points)
+
+
+@functools.lru_cache(maxsize=None)
+def _expected_empty_rows(occupied: int, mt: int, kt: int) -> float:
+    """Expected all-empty m-tile rows when `occupied` tiles land uniformly
+    on an (mt, kt) map — matches the clustered-spike generators, which
+    permute exactly n_live tiles.  Each empty row costs the event route a
+    dummy step (tile_matmul_savings charges the same)."""
+    total = mt * kt
+    occupied = max(0, min(int(occupied), total))
+    if occupied > total - kt:
+        return 0.0
+    return mt * math.comb(total - kt, occupied) / math.comb(total, occupied)
+
+
+def route_step_costs(occupied: int, mt: int, kt: int,
+                     r: float, h: float) -> tuple[float, float]:
+    """(dense_cost, event_cost) of one matmul-form call, in units of one
+    grid step's tile DMA.  Same structural accounting as
+    tile_matmul_savings (per output N-tile, so nt cancels):
+
+      dense: every one of the mt*kt steps streams its tiles; only the
+             `occupied` steps spend MXU work (r each).
+      event: only occupied steps plus the all-empty-row dummies run, each
+             paying DMA + the compaction overhead h; dummies skip the MXU
+             (their occ=0 predicates the accumulate off, same as dense's
+             empty steps).
+    """
+    dummies = _expected_empty_rows(occupied, mt, kt)
+    dense = mt * kt + r * occupied
+    event = occupied * (1.0 + r + h) + dummies * (1.0 + h)
+    return dense, event
+
+
+def fit_route_params(points: tuple[tuple[int, float, float], ...],
+                     mt: int = CALIBRATION_TILES_M,
+                     kt: int = CALIBRATION_TILES_K) -> tuple[float, float]:
+    """Fit (r, h) by coarse log-grid least squares on the *ratio*
+    event/dense (ratios cancel the unknown us-per-step scale, so the two
+    timing sweeps calibrate two unitless rates)."""
+    grid = np.geomspace(0.02, 20.0, 61)
+    best = (math.inf, 1.0, 1.0)
+    for r in grid:
+        for h in grid:
+            err = 0.0
+            for occupied, t_dense, t_event in points:
+                dense, event = route_step_costs(occupied, mt, kt, r, h)
+                err += (math.log(event / dense)
+                        - math.log(t_event / t_dense)) ** 2
+            if err < best[0]:
+                best = (err, float(r), float(h))
+    return best[1], best[2]
+
+
+@functools.lru_cache(maxsize=None)
+def calibrated_route_params(op: str) -> tuple[float, float]:
+    """(r, h) for `op`; econv shares spike_matmul's calibration (it lowers
+    to the same spike-matmul tile grids via im2col)."""
+    points = ROUTE_CALIBRATION_POINTS.get(op)
+    if points is None:
+        points = ROUTE_CALIBRATION_POINTS["spike_matmul"]
+    return fit_route_params(points)
+
+
+def event_route_wins(op: str, occupied: int, mt: int, kt: int) -> bool:
+    """The hybrid predicate: does the event-compacted route cost less than
+    the predicated-dense route at this occupied-tile count?"""
+    r, h = calibrated_route_params(op)
+    dense, event = route_step_costs(occupied, mt, kt, r, h)
+    return event < dense
+
+
+# --- pow2 occupancy buckets (same idiom as the CSR step caps) -------------
+# bucket(c) = bit_length(c): 0 | 1 | 2-3 | 4-7 | 8-15 | ...  jit then sees
+# at most bit_length(mt*kt)+1 routes per map shape, never one per count.
+
+def pow2_bucket(count: int) -> int:
+    """Band index of an occupied-tile count (concrete ints)."""
+    return int(count).bit_length()
+
+
+def pow2_bucket_traced(count, max_bits: int):
+    """Traced bit_length: #{i < max_bits : count >= 2**i}. `max_bits` is
+    static (total_tiles.bit_length()), so the result stays in range."""
+    import jax.numpy as jnp
+    thresholds = jnp.asarray(2, jnp.int32) ** jnp.arange(max_bits,
+                                                         dtype=jnp.int32)
+    return jnp.sum((count >= thresholds).astype(jnp.int32))
+
+
+def num_buckets(total_tiles: int) -> int:
+    return int(total_tiles).bit_length() + 1
+
+
+def bucket_representative(bucket: int, total_tiles: int) -> int:
+    """Midpoint-ish count of band `bucket` (0, 1, 3, 6, 12, ...), clamped
+    to the map's tile total — the concrete count the predicate is asked
+    about on behalf of the whole band."""
+    return min(int(total_tiles), (3 << bucket) >> 2)
+
+
+def hybrid_route_table(op: str, mt: int, kt: int) -> tuple[bool, ...]:
+    """Per-bucket route choice for an (mt, kt) map: True = event route."""
+    total = mt * kt
+    return tuple(
+        event_route_wins(op, bucket_representative(b, total), mt, kt)
+        for b in range(num_buckets(total)))
+
+
+def hybrid_event_bucket_threshold(op: str, mt: int, kt: int) -> int:
+    """Largest bucket routed to the event kernel, taking the leading-True
+    prefix of hybrid_route_table (routes must be monotone in occupancy for
+    a single lax.cond boundary); -1 when dense always wins."""
+    table = hybrid_route_table(op, mt, kt)
+    threshold = 0
+    while threshold < len(table) and table[threshold]:
+        threshold += 1
+    return threshold - 1
+
+
 def summarize(layers: list[LayerCycles], hw: ExSpikeHW = ExSpikeHW(),
               apec: bool = False) -> dict:
     """Network-level Table II style metrics."""

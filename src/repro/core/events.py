@@ -260,7 +260,8 @@ def as_spikes(x):
 
 # ----------------------------------------------- occupancy propagation
 def window_occupancy(et: EventTensor, window: Tuple[int, int], stride: int,
-                     out_hw: Tuple[int, int], out_k: int):
+                     out_hw: Tuple[int, int], out_k: int,
+                     padding: str = "SAME"):
     """Propagate a carried map through a raster-monotone spatial window
     transform (im2col patch extraction, pooling) WITHOUT touching the
     dense tensor.
@@ -300,14 +301,23 @@ def window_occupancy(et: EventTensor, window: Tuple[int, int], stride: int,
     else:
         cnt8 = xp.repeat(xp.sum(fine, axis=1), per)
     in_chunks = cnt8.shape[0]
-    # The window of output position (n, y, x) reaches input raster
-    # addresses within +-halo of its anchor. Odd stride-1 SAME windows
-    # are symmetric (+-(k//2)); otherwise bound by k-1 (padding can shift
-    # the window start by up to k-1 positions).
-    if stride == 1 and kh % 2 and kw % 2:
-        halo = (kh // 2) * w_ + (kw // 2)
-    else:
-        halo = (kh - 1) * w_ + (kw - 1)
+    # The window of output position (n, y, x) covers input rows
+    # [y*stride - pad_top, y*stride - pad_top + kh - 1] (likewise cols),
+    # so the raster reach around the anchor a = (y*stride)*w_ + x*stride
+    # is ASYMMETRIC: back by exactly the leading padding, forward by the
+    # rest of the window. XLA's SAME convention puts floor(pad/2) first;
+    # VALID pads nothing, so windows only extend forward. The previous
+    # symmetric (k-1) bound marked up to k-1 rows of out-of-image chunks
+    # occupied behind every straddling window — on stride > 1 pooling and
+    # non-divisible H/W that handed the compacted kernel back the very
+    # boundary tiles the carried map had excluded.
+    if padding == "SAME":
+        pad_top = max((ho - 1) * stride + kh - h, 0) // 2
+        pad_left = max((wo - 1) * stride + kw - w_, 0) // 2
+    else:                                    # VALID: window starts at anchor
+        pad_top = pad_left = 0
+    back_halo = pad_top * w_ + pad_left
+    fwd_halo = (kh - 1 - pad_top) * w_ + (kw - 1 - pad_left)
     # Anchor interval per output chunk: anchors are monotone in raster
     # order, so chunk c's reach is [anchor(first row)-halo,
     # anchor(last row)+halo], clamped to the owning image (windows never
@@ -326,8 +336,8 @@ def window_occupancy(et: EventTensor, window: Tuple[int, int], stride: int,
         y, x = rem // wo, rem % wo
         a = n_i * (h * w_) + (y * stride) * w_ + x * stride
         if sign < 0:
-            return xp.maximum(a - halo, n_i * (h * w_))
-        return xp.minimum(a + halo, (n_i + 1) * (h * w_) - 1)
+            return xp.maximum(a - back_halo, n_i * (h * w_))
+        return xp.minimum(a + fwd_halo, (n_i + 1) * (h * w_) - 1)
 
     csum = xp.concatenate(
         [xp.zeros((1,), cnt8.dtype), xp.cumsum(cnt8)])
@@ -360,7 +370,8 @@ def conv_patch_occupancy(et: EventTensor, w_shape: Tuple[int, ...],
         return None
     if ho <= 0 or wo <= 0:
         return None
-    occ, _ = window_occupancy(et, (kh, kw), stride, (ho, wo), ci * kh * kw)
+    occ, _ = window_occupancy(et, (kh, kw), stride, (ho, wo), ci * kh * kw,
+                              padding)
     return occ
 
 
@@ -379,7 +390,8 @@ def max_pool_events(et, pool: int):
         return pooled
     h, w_, c = s.shape[-3:]
     occ, chunks = window_occupancy(et, (pool, pool), pool,
-                                   (h // pool, w_ // pool), c)
+                                   (h // pool, w_ // pool), c,
+                                   padding="VALID")
     return EventTensor(pooled, occ, et.tiling, chunks)
 
 

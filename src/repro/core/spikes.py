@@ -187,8 +187,10 @@ def occupancy_to_csr(occ: jax.Array, cap: Optional[int] = None,
     `cap` bounds the step count (static). Default: the exact count
     (occupied tiles + one dummy per empty row) when `occ` is concrete,
     MT*KT under tracing. A caller-supplied `cap` must cover the real count
-    — concrete inputs are checked, traced inputs silently truncate (pass
-    the worst case, MT*KT, when unsure).
+    — concrete inputs are checked exactly; traced inputs are checked
+    against the static lower bound of MT (one dummy step per m-tile row,
+    so all-empty maps still zero every output block) and beyond that
+    silently truncate (pass the worst case, MT*KT, when unsure).
     """
     mt, kt = occ.shape
     if not isinstance(occ, jax.core.Tracer):
@@ -218,6 +220,15 @@ def occupancy_to_csr(occ: jax.Array, cap: Optional[int] = None,
                        (mt, kt))
     if cap is None:
         cap = mt * kt
+    elif cap < mt:
+        # Static lower bound: every m-tile row needs at least its dummy
+        # step or its output block is never visited — Pallas leaves
+        # unvisited blocks unzeroed, so an all-empty map with cap < MT
+        # would return garbage rows, silently. The data-dependent exact
+        # count can't be checked under tracing; the row count can.
+        raise ValueError(
+            f"cap {cap} < {mt} m-tile rows: every row needs >= 1 step "
+            f"(dummy steps zero all-empty rows' output blocks)")
     mask = occ > 0
     mask2 = mask.at[:, 0].set(mask[:, 0] | ~jnp.any(mask, axis=1))
     flat, = jnp.nonzero(mask2.ravel(), size=cap, fill_value=0)
@@ -308,8 +319,13 @@ def shard_occupancy_to_csr(occ: jax.Array, n_shards: int,
             f"occupancy rows {mt} not divisible by {n_shards} shards")
     rows = mt // n_shards
     occ_np = np.asarray(occ)
-    locals_ = [jnp.asarray(occ_np[i * rows:(i + 1) * rows])
-               for i in range(n_shards)]
+    # Keep the per-shard maps as NUMPY: inside a jit trace,
+    # `jnp.asarray(np_array)` lifts the constant into the trace (a
+    # tracer), which would silently flip `occupancy_to_csr` onto its
+    # traced path — staging the whole compaction into the program and
+    # losing the trimmed grid the concrete pre-pass exists for. Numpy
+    # slices stay concrete no matter what trace is ambient.
+    locals_ = [occ_np[i * rows:(i + 1) * rows] for i in range(n_shards)]
     exact = [occupancy_to_csr(o, tiling=tiling) for o in locals_]
     cap = pow2_step_cap(max(c.n_steps for c in exact), rows * kt)
     if all(c.n_steps == cap for c in exact):

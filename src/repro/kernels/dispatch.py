@@ -82,6 +82,14 @@ import numpy as np
 
 ENV_VAR = "EXSPIKE_BACKEND"
 REF = "ref"
+# Override value selecting density-adaptive hybrid resolution instead of a
+# concrete backend: matmul-form calls carrying an occupancy map route
+# per call between the predicated-dense and event-compacted kernel
+# families on the cost model's calibrated crossover (see use_hybrid).
+HYBRID = "hybrid"
+# Ops hybrid resolution applies to: matmul-form consumers of a carried
+# (MT, KT) occupancy map with a registered dense/event kernel pair.
+HYBRID_OPS = ("spike_matmul", "apec_matmul", "econv")
 ALL_PLATFORMS = ("cpu", "gpu", "tpu")
 
 
@@ -341,6 +349,24 @@ def use_backend(name: str, op: Optional[str] = None):
         _OVERRIDES.pop()
 
 
+@contextlib.contextmanager
+def use_hybrid(op: Optional[str] = None):
+    """Density-adaptive hybrid resolution (``EXSPIKE_BACKEND=hybrid`` is
+    the env-var spelling): while active, matmul-form calls (HYBRID_OPS)
+    that carry an occupancy map pick between the predicated-dense and
+    event-compacted kernel routes PER CALL, on the cost model's
+    calibrated dense/event crossover evaluated at the map's occupied-tile
+    count — bucketed into pow2 bands so jit compiles at most
+    O(log tiles) routes per map shape. Concrete maps resolve in Python
+    (attribution ``<route><-hybrid[b<bucket>]``); traced maps resolve to
+    a `lax.cond` on the bucketed count (attribution
+    ``hybrid[<event>|<dense>@b<threshold>]``). Calls hybrid cannot route
+    (no carried map, op outside HYBRID_OPS, no registered route pair)
+    fall through to normal auto selection, tagged ``<-hybrid``."""
+    with use_backend(HYBRID, op=op):
+        yield
+
+
 # ------------------------------------------------------------ mesh context
 _MESH: list = []   # stack of ambient meshes for trace-time resolution
 
@@ -401,10 +427,14 @@ def _shard_view(args, n_shards: int):
 
 
 # -------------------------------------------------------------- resolution
-# Degrade/fallback warnings fire once per (op, from-backend, to-backend)
-# per process: resolution runs at trace time, and a retrace storm
+# Degrade/fallback warnings fire once per (op, from-backend, to-backend,
+# route) per process: resolution runs at trace time, and a retrace storm
 # repeating the same RuntimeWarning hundreds of times buries the one
-# occurrence that matters. `reset_fallback_warnings()` re-arms (tests).
+# occurrence that matters. The `route` component keeps hybrid routing's
+# edges distinct — a dense-route degrade and an event-route degrade of
+# the same op are different events, and muting the second because the
+# first fired would hide that BOTH halves of the hybrid pair moved.
+# `reset_fallback_warnings()` re-arms every key, route-qualified or not.
 _WARNED: set = set()
 
 
@@ -413,12 +443,31 @@ def reset_fallback_warnings() -> None:
 
 
 def _warn_once(op: str, src: str, dst: str, msg: str,
-               stacklevel: int = 3) -> None:
-    key = (op, src, dst)
+               stacklevel: int = 3, route: Optional[str] = None) -> None:
+    key = (op, src, dst, route)
     if key in _WARNED:
         return
     _WARNED.add(key)
     warnings.warn(msg, RuntimeWarning, stacklevel=stacklevel + 1)
+
+
+# Observers appended by `watch_resolutions`: every resolve records
+# {"op", "backend", "attribution"} — how benchmarks and the CI smoke
+# assert which route hybrid actually chose, call by call.
+_RESOLUTION_WATCHERS: list = []
+
+
+@contextlib.contextmanager
+def watch_resolutions():
+    """Context manager yielding a list that receives one
+    ``{"op", "backend", "attribution"}`` record per resolution (trace-time
+    under jit, so one record per compiled route, per call when eager)."""
+    rec: list = []
+    _RESOLUTION_WATCHERS.append(rec)
+    try:
+        yield rec
+    finally:
+        _RESOLUTION_WATCHERS.remove(rec)
 
 
 def _fallback(op: str, wanted: str, reason: str) -> Backend:
@@ -429,14 +478,127 @@ def _fallback(op: str, wanted: str, reason: str) -> Backend:
     return _REGISTRY[op].backends[REF]
 
 
+# ---------------------------------------------------- hybrid resolution
+def _hybrid_route_pair(spec: OpSpec) -> Optional[Tuple[Backend, Backend]]:
+    """(event_route, dense_route) for this platform: the highest-priority
+    event-compacted (csr-family) backend and its declared dense fallback —
+    the same pair the override fallback chain walks, so hybrid's routes
+    are exactly the two kernels the BENCH trajectory has been comparing.
+    None when either half is missing (hybrid then disengages)."""
+    platform = jax.default_backend()
+    event = max(
+        (b for b in spec.backends.values()
+         if "csr" in b.name and b.fallback and platform in b.platforms),
+        key=lambda b: b.priority, default=None)
+    if event is None:
+        return None
+    dense = spec.backends.get(event.fallback)
+    if dense is None or platform not in dense.platforms:
+        return None
+    return event, dense
+
+
+def _hybrid_cond_fn(op: str, event_be: Backend, dense_be: Backend,
+                    threshold: int):
+    """Traced-occupancy hybrid body: branch between the two routes with
+    `lax.cond` on the pow2-bucketed occupied-tile count. The bucket
+    threshold is re-derived from the occupancy actually received (static
+    shape at trace time), so inside shard_map each shard branches on ITS
+    OWN local map — per-shard routing can differ, by design. Both routes
+    are custom_vjp-wrapped already, so the cond stays differentiable."""
+    del threshold   # attribution-time value; the fn recomputes per shape
+
+    def fn(*args, occupancy=None, **kw):
+        from repro.core import costmodel
+        mt, kt = occupancy.shape
+        thresh = costmodel.hybrid_event_bucket_threshold(op, mt, kt)
+        n_buckets = costmodel.num_buckets(mt * kt)
+        if thresh < 0:
+            return dense_be.fn(*args, occupancy=occupancy, **kw)
+        if thresh >= n_buckets - 1:
+            return event_be.fn(*args, occupancy=occupancy, **kw)
+        count = jnp.sum((occupancy > 0).astype(jnp.int32))
+        bucket = costmodel.pow2_bucket_traced(count, (mt * kt).bit_length())
+        return jax.lax.cond(
+            bucket <= thresh,
+            lambda: event_be.fn(*args, occupancy=occupancy, **kw),
+            lambda: dense_be.fn(*args, occupancy=occupancy, **kw))
+    return fn
+
+
+def _hybrid_resolution(spec: OpSpec, op: str, kwargs, reason_of,
+                       n_shards: int) -> Optional[Tuple[Backend, str]]:
+    """Resolve under the HYBRID override. Returns (backend, attribution)
+    or None to disengage (no carried map / no route pair / op outside
+    HYBRID_OPS) — the caller then falls through to auto selection."""
+    occ = kwargs.get("occupancy")
+    if op not in HYBRID_OPS or occ is None or getattr(occ, "ndim", 0) != 2:
+        return None
+    pair = _hybrid_route_pair(spec)
+    if pair is None:
+        return None
+    event_be, dense_be = pair
+    event_reason = reason_of(event_be)
+    dense_reason = reason_of(dense_be)
+    if event_reason is not None and dense_reason is not None:
+        return None          # both routes refuse: normal chain takes over
+    if event_reason is not None:
+        _warn_once(op, event_be.name, dense_be.name,
+                   f"exspike dispatch: hybrid event route {event_be.name!r} "
+                   f"for op {op!r} unavailable ({event_reason}); pinning "
+                   f"dense route {dense_be.name!r}",
+                   stacklevel=5, route="event")
+        return dense_be, f"{dense_be.name}<-{HYBRID}"
+    if dense_reason is not None:
+        _warn_once(op, dense_be.name, event_be.name,
+                   f"exspike dispatch: hybrid dense route {dense_be.name!r} "
+                   f"for op {op!r} unavailable ({dense_reason}); pinning "
+                   f"event route {event_be.name!r}",
+                   stacklevel=5, route="dense")
+        return event_be, f"{event_be.name}<-{HYBRID}"
+    from repro.core import costmodel
+    mt, kt = occ.shape
+    mt_local = mt // n_shards if n_shards > 1 and mt % n_shards == 0 else mt
+    if not isinstance(occ, jax.core.Tracer):
+        # Concrete map (eager pre-pass): pick in Python on the band's
+        # representative count — same decision jit would bake in, zero
+        # runtime cost, and the bucket lands in the attribution.
+        count = int(np.count_nonzero(np.asarray(occ) > 0))
+        bucket = costmodel.pow2_bucket(-(-count // n_shards)
+                                       if n_shards > 1 else count)
+        rep = costmodel.bucket_representative(bucket, mt_local * kt)
+        event = costmodel.event_route_wins(op, rep, mt_local, kt)
+        be = event_be if event else dense_be
+        return be, f"{be.name}<-{HYBRID}[b{bucket}]"
+    threshold = costmodel.hybrid_event_bucket_threshold(op, mt_local, kt)
+    cond = Backend(
+        name=f"{HYBRID}[{event_be.name}|{dense_be.name}@b{threshold}]",
+        fn=_hybrid_cond_fn(op, event_be, dense_be, threshold),
+        platforms=event_be.platforms, priority=0, auto=False,
+        differentiable=event_be.differentiable and dense_be.differentiable,
+        mesh_aware=event_be.mesh_aware)
+    return cond, cond.name
+
+
 def resolve_with_attribution(op: str, *args, mesh=None,
                              **kwargs) -> Tuple[Backend, str]:
     """Pick the backend `dispatch` would run, plus an attribution string:
     the backend name, suffixed ``<-requested`` when resolution degraded
     from a higher-preference backend (override fallback chain or a
     mesh/capability gate) — `resolved_backends()` surfaces this so sweeps
-    and serve logs show what *actually* ran and why it moved. `resolve` /
+    and serve logs show what *actually* ran and why it moved. Under
+    `use_hybrid` the attribution carries the chosen route and its
+    occupancy bucket (see `use_hybrid` for the formats). `resolve` /
     `resolve_attribution` are the single-value projections."""
+    be, attribution = _resolve_impl(op, *args, mesh=mesh, **kwargs)
+    for rec in _RESOLUTION_WATCHERS:
+        rec.append({"op": op, "backend": be.name,
+                    "attribution": attribution})
+    return be, attribution
+
+
+def _resolve_impl(op: str, *args, mesh=None,
+                  **kwargs) -> Tuple[Backend, str]:
     spec = _REGISTRY[op]
     mesh = mesh if mesh is not None else ambient_mesh()
     n_shards = data_shard_count(mesh)
@@ -451,10 +613,26 @@ def resolve_with_attribution(op: str, *args, mesh=None,
 
     def attributed(be: Backend, requested: Optional[str]) -> Tuple[Backend, str]:
         if requested is None or requested == be.name:
+            if hybrid_requested:
+                # hybrid disengaged (no carried map / no route pair):
+                # normal selection ran, but the tag keeps visible that
+                # hybrid was asked for and stepped aside.
+                return be, f"{be.name}<-{HYBRID}"
             return be, be.name
         return be, f"{be.name}<-{requested}"
 
     override = _override_for(op)
+    # Hybrid only means anything for the matmul-form ops with a dense/
+    # event pair; on every other op a blanket use_hybrid() is a plain
+    # no-op (auto selection, untagged) — not a disengage.
+    hybrid_requested = override == HYBRID and op in HYBRID_OPS
+    if override == HYBRID and not hybrid_requested:
+        override = None
+    if hybrid_requested:
+        routed = _hybrid_resolution(spec, op, kwargs, reason_of, n_shards)
+        if routed is not None:
+            return routed
+        override = None      # disengage -> auto selection, tagged above
     if override is not None:
         be = spec.backends.get(override)
         if be is None:
@@ -499,7 +677,7 @@ def resolve_with_attribution(op: str, *args, mesh=None,
         # degrading to the oracle would hide lost compression/kernel
         # coverage — warn. (Platform filtering stays silent.)
         return attributed(_fallback(op, *cap_failure), cap_failure[0])
-    return spec.backends[REF], REF
+    return attributed(spec.backends[REF], None)
 
 
 def resolve(op: str, *args, mesh=None, **kwargs) -> Backend:
@@ -579,6 +757,13 @@ def table() -> str:
             f"{',mesh' if b.mesh_aware is not False else ''})"
             for b in sorted(spec.backends.values(), key=lambda b: -b.priority))
         lines.append(f"{op:14s} -> {bes}")
+        pair = _hybrid_route_pair(spec) if op in HYBRID_OPS else None
+        if pair is not None:
+            from repro.core import costmodel
+            r, h = costmodel.calibrated_route_params(op)
+            lines.append(
+                f"{'':14s}    hybrid: event={pair[0].name} | "
+                f"dense={pair[1].name} (calibrated r={r:.2f}, h={h:.2f})")
     return "\n".join(lines)
 
 

@@ -309,6 +309,12 @@ def spike_matmul(s, w: jax.Array, block_m: int = 128,
     `padded_occupancy(s, block_m, block_k)` (or the fused LIF emission) —
     callers that already hold the map skip recomputing it here. A map for
     the wrong tiling/tile grid is rejected, never silently consumed.
+
+    This is the PREDICATED-DENSE route of the hybrid pair: the grid walks
+    every tile and the map gates compute per step. Density-adaptive
+    dispatch (`kernels.dispatch.use_hybrid`) picks between this and the
+    event-compacted `spike_matmul_csr` per call from the carried map's
+    occupied-tile count — direct callers pick a route statically instead.
     """
     s, occupancy, _ = _carried_occupancy(s, occupancy, block_m, block_k)
     lead = s.shape[:-2]
@@ -360,6 +366,12 @@ def spike_matmul_csr(s, w: jax.Array,
     layer-level pass-through. `occupancy`: optional precomputed map for
     callers holding occupancy but no work list yet — the compaction runs
     on the tiny map; the dense `tile_occupancy` pass is skipped.
+
+    This is the EVENT route of the hybrid pair (see `spike_matmul`): it
+    wins when few tiles are occupied (the compacted grid skips empty
+    steps outright) and loses to predicated-dense near-full occupancy
+    (per-step compaction overhead with nothing left to skip) — the
+    calibrated crossover lives in `core.costmodel`.
     """
     if csr is None:
         s, occupancy, csr = _carried_occupancy(s, occupancy, block_m,

@@ -30,7 +30,7 @@ from repro.core.econv import conv_transpose, econv
 from repro.core.eafc import eafc
 from repro.core.events import EventTensor, max_pool_events
 from repro.core.lif import LIFConfig
-from .layers import lif_fire_events
+from .layers import hybrid_scope, lif_fire_events
 
 Params = Dict[str, Any]
 
@@ -104,6 +104,11 @@ def vgg11_init(cfg: CNNConfig, key) -> Params:
 def vgg11_apply(cfg: CNNConfig, p: Params, x: jax.Array,
                 collect_stats: bool = False):
     """x: (B, H, W, C) image -> logits (B, n_classes) [, spike maps]."""
+    with hybrid_scope(cfg.spiking):
+        return _vgg11_body(cfg, p, x, collect_stats)
+
+
+def _vgg11_body(cfg, p, x, collect_stats):
     lif = LIFConfig(decay=cfg.spiking.lif_decay, v_th=cfg.spiking.lif_vth)
     t = cfg.spiking.t_steps
     q, scale = quantize(x, cfg.direct_coding_bits)
@@ -152,6 +157,11 @@ def resnet18_init(cfg: CNNConfig, key) -> Params:
 
 def resnet18_apply(cfg: CNNConfig, p: Params, x: jax.Array,
                    collect_stats: bool = False):
+    with hybrid_scope(cfg.spiking):
+        return _resnet18_body(cfg, p, x, collect_stats)
+
+
+def _resnet18_body(cfg, p, x, collect_stats):
     lif = LIFConfig(decay=cfg.spiking.lif_decay, v_th=cfg.spiking.lif_vth)
     t = cfg.spiking.t_steps
     q, scale = quantize(x, cfg.direct_coding_bits)
@@ -193,6 +203,11 @@ def segnet_init(cfg: CNNConfig, key) -> Params:
 def segnet_apply(cfg: CNNConfig, p: Params, x: jax.Array,
                  collect_stats: bool = False):
     """x: (B, H, W, C) -> per-pixel logits (B, H, W, 2)."""
+    with hybrid_scope(cfg.spiking):
+        return _segnet_body(cfg, p, x, collect_stats)
+
+
+def _segnet_body(cfg, p, x, collect_stats):
     lif = LIFConfig(decay=cfg.spiking.lif_decay, v_th=cfg.spiking.lif_vth)
     t = cfg.spiking.t_steps
     q, scale = quantize(x, cfg.direct_coding_bits)

@@ -76,6 +76,23 @@ def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
     return out.astype(x.dtype)
 
 
+# ------------------------------------------------------------ hybrid scope
+def hybrid_scope(spiking_cfg):
+    """Dispatch scope a model's apply body runs under.
+
+    `SpikingConfig.hybrid=True` turns on density-adaptive routing: every
+    matmul-form op that receives a carried occupancy map picks dense vs
+    event per call from the calibrated cost model (bucketed, so jit sees
+    a bounded route set). Off (the default) keeps auto/override
+    resolution exactly as before — zero behavior change.
+    """
+    import contextlib
+    if getattr(spiking_cfg, "hybrid", False):
+        from repro.kernels.dispatch import use_hybrid
+        return use_hybrid()
+    return contextlib.nullcontext()
+
+
 # --------------------------------------------------------------- LIF helper
 def lif_fire(x: jax.Array, lif_cfg: LIFConfig) -> jax.Array:
     """Binarize pre-activations into spikes over the leading T axis.

@@ -19,7 +19,7 @@ from repro.core.events import max_pool_events
 from repro.core.lif import LIFConfig
 from repro.kernels import dispatch
 from .cnn import _conv_init
-from .layers import dense_init, lif_fire, lif_fire_events
+from .layers import dense_init, hybrid_scope, lif_fire, lif_fire_events
 
 Params = Dict[str, Any]
 
@@ -50,6 +50,11 @@ def spikingformer_apply(p: Params, x: jax.Array, n_heads: int = 8,
                         spiking_cfg: SpikingConfig = SpikingConfig(t_steps=4),
                         collect_stats: bool = False):
     """x: (B, 32, 32, C) -> logits (B, n_classes) [, spike maps]."""
+    with hybrid_scope(spiking_cfg):
+        return _spikingformer_body(p, x, n_heads, spiking_cfg, collect_stats)
+
+
+def _spikingformer_body(p, x, n_heads, spiking_cfg, collect_stats):
     lif = LIFConfig(decay=spiking_cfg.lif_decay, v_th=spiking_cfg.lif_vth)
     t = spiking_cfg.t_steps
     b = x.shape[0]

@@ -335,6 +335,26 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
 
     axes = event_rows_axes(mesh, s.shape[0])
     n_shards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    rows = int(np.prod(s.shape[:-1]))
+
+    def _per_shard_routes(attribution):
+        """Per-shard hybrid route choices ("event"/"dense") for the report:
+        which kernel each shard's local occupied-tile count selects under
+        the calibrated predicate — recorded only when this resolution went
+        through hybrid routing (the traced cond branches per shard; this
+        is the same decision, named per shard for the report)."""
+        if "hybrid" not in attribution or n_shards <= 1 \
+                or isinstance(s, jax.core.Tracer):
+            return ()
+        from repro.core import costmodel
+        mt_l = -(-(rows // n_shards) // 128)
+        kt = -(-int(s.shape[-1]) // 128)
+        return tuple(
+            "event" if costmodel.event_route_wins(
+                op, costmodel.bucket_representative(
+                    costmodel.pow2_bucket(c), mt_l * kt), mt_l, kt)
+            else "dense"
+            for c in per_shard_occupied_tiles(s, n_shards))
 
     def _report(backend, attribution, occupancy_source):
         if not with_report:
@@ -345,18 +365,39 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
                "occupancy_source": occupancy_source}
         if n_shards > 1 and not isinstance(s, jax.core.Tracer):
             rep["occupancy"] = occupancy_imbalance(
-                per_shard_occupied_tiles(s, n_shards))
+                per_shard_occupied_tiles(s, n_shards),
+                routes=_per_shard_routes(attribution))
         return rep
 
     if csr_stack is not None and op != "spike_matmul":
         raise ValueError(
             f"csr_stack is a spike_matmul pass-through; op {op!r} builds "
             f"its own (union) pre-pass in-kernel")
+    if n_shards > 1 and occupancy is not None and (
+            rows % n_shards or (rows // n_shards) % 128
+            or occupancy.shape[0] % n_shards):
+        # A carried map only splits into congruent per-shard maps when
+        # every shard owns whole 128-row tiles (the same condition the
+        # CSR mesh gate checks). Say so — the caller believes the carried
+        # route is live. Checked BEFORE resolution: hybrid routing keys
+        # off the occupancy kwarg, and resolving on a map that is about
+        # to be dropped would pin a route the body can't feed.
+        warnings.warn(
+            f"exspike sharding: carried occupancy dropped for {op!r} — "
+            f"{rows} rows over {n_shards} shards do not split into whole "
+            f"128-row tiles; shards re-derive locally",
+            RuntimeWarning, stacklevel=2)
+        occupancy = None
     # Resolve against the shard count we will actually execute with (the
     # dividing axes), not the mesh's full batch capacity — when the rows
     # don't divide, execution stays unsharded and resolution must match.
+    # The carried map joins resolution as the occupancy kwarg: hybrid
+    # routing (dispatch.use_hybrid) decides dense-vs-event on it.
+    res_kwargs = dict(kwargs)
+    if occupancy is not None:
+        res_kwargs["occupancy"] = occupancy
     be, attribution = dispatch.resolve_with_attribution(
-        op, s, w, mesh=n_shards, **kwargs)
+        op, s, w, mesh=n_shards, **res_kwargs)
     if n_shards <= 1:
         if occupancy is not None:
             out = be.fn(s, w, occupancy=occupancy, **kwargs)
@@ -371,20 +412,6 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     row_spec = P(lead, *([None] * (s.ndim - 1)))
     w_spec = P(*([None] * w.ndim))
 
-    rows = int(np.prod(s.shape[:-1]))
-    if occupancy is not None and (
-            rows % n_shards or (rows // n_shards) % 128
-            or occupancy.shape[0] % n_shards):
-        # A carried map only splits into congruent per-shard maps when
-        # every shard owns whole 128-row tiles (the same condition the
-        # CSR mesh gate checks). Say so — the caller believes the carried
-        # route is live.
-        warnings.warn(
-            f"exspike sharding: carried occupancy dropped for {op!r} — "
-            f"{rows} rows over {n_shards} shards do not split into whole "
-            f"128-row tiles; shards re-derive locally",
-            RuntimeWarning, stacklevel=2)
-        occupancy = None
     if occupancy is not None and csr_stack is None \
             and op == "spike_matmul" and be.name.startswith("pallas-csr") \
             and not isinstance(occupancy, jax.core.Tracer):
@@ -452,8 +479,16 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
         # the predicated family gates on it directly). The map rides as
         # a shard_map operand, so no shard re-derives from dense spikes.
         occ_spec = P(lead, None)
+        registered = be.name in dispatch.backend_names(op)
 
         def body(sl, wl, occl):
+            if not registered:
+                # Synthetic hybrid cond backend (dispatch names it
+                # "hybrid[event|dense@bN]" but never registers it): its fn
+                # re-derives the bucket threshold from the LOCAL map shape
+                # and cond-branches per shard — exactly the per-shard
+                # routing the report's occ_routes field records.
+                return be.fn(sl, wl, occupancy=occl, **kwargs)
             return dispatch.call_backend(op, be.name, sl, wl,
                                          occupancy=occl, **kwargs)
 

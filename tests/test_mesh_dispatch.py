@@ -234,6 +234,92 @@ def test_event_op_sharded_rejects_csr_stack_for_other_ops():
                             csr_stack=stack)
 
 
+# ----------------------------------------- hybrid route-keyed warn-once
+def test_hybrid_route_warn_not_suppressed_by_plain_degrade():
+    """The plain override degrade and hybrid's event-route refusal share
+    the same (op, from, to) edge — csr -> its dense fallback. Warn-once
+    state is keyed by route too, so the first HYBRID warning must fire
+    even after the plain degrade already consumed the route-less key
+    (each names a different decision the user needs to see once)."""
+    from repro.kernels import ops
+    s = _spikes(jax.random.PRNGKey(30), (512, 256))
+    w = jnp.zeros((256, 64), jnp.float32)
+    occ = ops.padded_occupancy(s)
+    # 1) plain degrade eats the route-less (op, csr, dense) key
+    with dispatch.use_backend(CSR, op="spike_matmul"):
+        with pytest.warns(RuntimeWarning, match="per-shard rows"):
+            dispatch.resolve("spike_matmul", s, w, mesh=8)
+    # 2) hybrid's event-route refusal on the same edge still warns once
+    with dispatch.use_hybrid("spike_matmul"):
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            for _ in range(3):
+                be, attr = dispatch.resolve_with_attribution(
+                    "spike_matmul", s, w, mesh=8, occupancy=occ)
+        msgs = [str(r.message) for r in rec
+                if issubclass(r.category, RuntimeWarning)]
+        assert len(msgs) == 1, msgs
+        assert "hybrid event route" in msgs[0]
+        assert be.name == "pallas-interpret"
+        assert attr == f"pallas-interpret<-{dispatch.HYBRID}"
+
+
+def test_hybrid_route_warn_rearms_after_reset():
+    """reset_fallback_warnings covers the route-keyed entries too: after a
+    reset, the hybrid route warning fires again (fresh-process behavior),
+    exactly like the plain degrade chain's."""
+    from repro.kernels import ops
+    s = _spikes(jax.random.PRNGKey(31), (512, 256))
+    w = jnp.zeros((256, 64), jnp.float32)
+    occ = ops.padded_occupancy(s)
+    with dispatch.use_hybrid("spike_matmul"):
+        with pytest.warns(RuntimeWarning, match="hybrid event route"):
+            dispatch.resolve_with_attribution(
+                "spike_matmul", s, w, mesh=8, occupancy=occ)
+        dispatch.reset_fallback_warnings()
+        with pytest.warns(RuntimeWarning, match="hybrid event route"):
+            dispatch.resolve_with_attribution(
+                "spike_matmul", s, w, mesh=8, occupancy=occ)
+
+
+def test_occupancy_imbalance_carries_routes():
+    """The straggler report's occ_routes field: per-shard hybrid route
+    choices ride alongside the occupied-tile skew (positional, shard
+    order) and stay out of the fields string when hybrid is off."""
+    from repro.runtime.straggler import occupancy_imbalance
+    imb = occupancy_imbalance([4, 0, 1], routes=("dense", "event", "event"))
+    assert imb.routes == ("dense", "event", "event")
+    assert "occ_routes=dense:event:event" in imb.as_fields()
+    assert "occ_routes" not in occupancy_imbalance([4, 0, 1]).as_fields()
+
+
+def test_event_op_sharded_reports_per_shard_hybrid_routes():
+    """A skewed concrete map under hybrid: the with_report occupancy
+    imbalance names each shard's route — a sparse shard on the event
+    kernel while dense shards run predicated is the feature, and
+    `occ_routes` is where it surfaces."""
+    from repro.kernels import ops
+    from repro.launch.mesh import make_mesh
+    from repro.runtime import sharding as rs
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices")
+    n_dev = 2
+    mesh = make_mesh((n_dev, 1), ("data", "model"))
+    # shard 0 dense, shard 1 nearly empty
+    s = jnp.zeros((256 * n_dev, 256), jnp.float32).at[:256].set(1.0)
+    s = s.at[256, 0].set(1.0)
+    w = jnp.zeros((256, 64), jnp.float32)
+    occ = ops.padded_occupancy(s)
+    with dispatch.use_hybrid("spike_matmul"):
+        out, rep = rs.event_op_sharded(mesh, "spike_matmul", s, w,
+                                       occupancy=occ, with_report=True)
+    assert dispatch.HYBRID in rep["attribution"]
+    routes = rep["occupancy"].routes
+    assert len(routes) == n_dev
+    assert routes[0] == "dense" and routes[1] == "event", routes
+    assert "occ_routes=dense:event" in rep["occupancy"].as_fields()
+
+
 # ------------------------------------------------- 8-device subprocess
 def test_mesh_dispatch_multidevice_parity(multidevice_run):
     """8-way mesh: spike/apec matmuls resolve to the csr family inside

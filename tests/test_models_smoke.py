@@ -26,7 +26,16 @@ def _batch(cfg, b=2, s=16, seed=0):
     return batch
 
 
-@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+# The internlm2 reduced config is the suite's slowest single case
+# (13-22s per mode, XLA compile-bound — see CI --durations); it guards
+# no event-path contract the other arches don't, so it carries the
+# `slow` marker for deselectable local runs (-m "not slow").
+_ARCH_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a == "internlm2-20b" else a
+    for a in registry.ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", _ARCH_PARAMS)
 @pytest.mark.parametrize("spiking", [True, False])
 def test_arch_forward_and_train_step(arch, spiking):
     cfg = registry.get_reduced(arch)

@@ -66,6 +66,72 @@ def test_csr_all_empty_input_keeps_one_step_per_row():
     np.testing.assert_array_equal(csr.row_ptr, [0, 1, 2])
 
 
+def test_csr_all_empty_traced_keeps_one_step_per_row():
+    """Traced (jit) compaction of an all-empty map: every m-tile row must
+    still own >= 1 (dummy) step — a row with no step would leave its
+    output block unzeroed (the kernel only writes visited rows)."""
+    occ = jnp.zeros((3, 4), jnp.int32)
+    csr = jax.jit(occupancy_to_csr)(occ)
+    assert csr.n_steps >= 3
+    rows = np.asarray(csr.tile_m_idx)[np.asarray(csr.valid) == 1]
+    assert set(rows.tolist()) == {0, 1, 2}      # every row visited
+    assert int(np.sum(np.asarray(csr.occ))) == 0  # dummies never compute
+
+
+def test_csr_traced_cap_below_row_count_raises():
+    """A caller cap below the m-tile row count cannot place a dummy step
+    in every row — rows past the cap would keep garbage output blocks.
+    The static lower bound must be enforced loudly at trace time."""
+    occ = jnp.zeros((3, 4), jnp.int32)
+    for bad_cap in (0, 1, 2):
+        with pytest.raises(ValueError, match="m-tile rows"):
+            jax.jit(occupancy_to_csr, static_argnames=("cap",))(
+                occ, cap=bad_cap)
+
+
+def test_csr_kernel_all_empty_traced_writes_zeros():
+    """All-zero spikes through the jitted wrapper (traced map -> dense
+    cap): the dummy grid must zero every output block, matching the
+    concrete-path all-empty test above."""
+    s = jnp.zeros((256, 384), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(20), (384, 64))
+    occ = ops.padded_occupancy(s)
+    out = jax.jit(lambda sv, ov: ops.spike_matmul_csr(sv, w, occupancy=ov))(
+        s, occ)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_shard_prepass_stays_concrete_under_ambient_trace():
+    """A CONCRETE map closed over by a jitted caller must still get the
+    trimmed eager pre-pass. Regression: `shard_occupancy_to_csr` used to
+    re-wrap its numpy shard slices with `jnp.asarray`, which under an
+    ambient jit trace lifts them to tracers — `occupancy_to_csr` then
+    silently took its traced path, staging the whole compaction (cumsum/
+    scatter per shard) into the program and replacing the trimmed caps
+    with dense ones. A jitted `event_op_sharded` over a carried map paid
+    ~4x the work list it was promised."""
+    from repro.core.spikes import shard_occupancy_to_csr, stack_shard_csrs
+
+    occ_np = np.zeros((8, 4), np.int32)
+    occ_np[0, 1] = 3                       # 1 occupied tile in shard 0
+    occ = jnp.asarray(occ_np)              # shards 2,3 all-empty
+    built = []
+
+    def f(x):
+        stack = stack_shard_csrs(
+            shard_occupancy_to_csr(occ, 4, tiling=(128, 128)))
+        built.append(stack)
+        return x + jnp.sum(stack.valid)
+
+    jaxpr = jax.make_jaxpr(f)(jnp.zeros(()))
+    # the pre-pass must NOT be staged into the traced program
+    assert "cumsum" not in str(jaxpr) and "scatter" not in str(jaxpr)
+    # and the cap must stay the trimmed one: busiest shard has 2 rows ->
+    # 2 steps (1 occupied + 1 dummy), pow2 bucket 2 — not rows*kt == 8
+    # (leading axis of the stacked fields is the 4 shards)
+    assert built[0].tile_m_idx.shape == (4, 2)
+
+
 # ------------------------------------------------------------ kernel edges
 def test_csr_kernel_all_empty_writes_zeros():
     s = jnp.zeros((256, 256), jnp.float32)
