@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, List
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +28,78 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ----------------------------------------- paired interleaved min-of-N
+# The one noise-band timing protocol every paired sweep uses (hybrid,
+# e2e, packed): candidate routes whose difference is an order of
+# magnitude below their totals can only be compared under identical
+# load, so samples are INTERLEAVED with the order ROTATED per round (no
+# route keeps the first-in-round cache advantage, host drift is
+# common-mode), and each route reports its MINIMUM — this host's cgroup
+# scheduling inserts multi-ms stalls that corrupt means and medians,
+# while the per-route minimum is the reproducible unthrottled cost.
+# "Not slower" is then judged against a SELF-MEASURED noise band: the
+# paired-median deviation identical-program clone pairs show in the same
+# rounds (separately-jitted copies of the same HLO land 0.2-7% apart on
+# this host depending on instance placement and quota phase).
+
+NOISE_BAND_FLOOR = 0.02   # clone pairs never resolve tighter than ~2%
+
+
+def time_interleaved(fns: dict, *args, iters: int = 24,
+                     warmup: int = 2) -> tuple[dict, dict]:
+    """Per-name (min seconds, all samples) for a dict of callables, each
+    invoked as fn(*args), interleaved with rotating order per round."""
+    names = list(fns)
+    for _ in range(warmup):
+        for n in names:
+            jax.block_until_ready(fns[n](*args))
+    samples: dict = {n: [] for n in names}
+    for i in range(iters):
+        order = names[i % len(names):] + names[:i % len(names)]
+        for n in order:
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[n](*args))
+            samples[n].append(time.perf_counter() - t0)
+    return {n: min(v) for n, v in samples.items()}, samples
+
+
+def time_pair(fn_a: Callable, fn_b: Callable, *args, iters: int = 24,
+              warmup: int = 2) -> tuple[float, float, float]:
+    """Two-route special case: (min_a, min_b, min_b/min_a). Rotation over
+    two names IS per-round order alternation."""
+    mins, _ = time_interleaved({"a": fn_a, "b": fn_b}, *args, iters=iters,
+                               warmup=warmup)
+    return mins["a"], mins["b"], mins["b"] / mins["a"]
+
+
+def paired_median_ratio(samples: dict, a: str, b: str) -> float:
+    """Median of per-round t_a/t_b ratios — within a round the routes run
+    back-to-back, so drift cancels; the median kills one-sided stall
+    outliers (a min-of-ratios would credit `a` whenever `b` caught the
+    stall)."""
+    r = sorted(x / y for x, y in zip(samples[a], samples[b]))
+    return r[len(r) // 2]
+
+
+def noise_band(samples: dict, clone_pairs) -> float:
+    """Largest paired-median deviation-from-1 the identical-program clone
+    pairings show in the same rounds — what "not slower" has to mean on
+    this host. `clone_pairs`: (clone_name, pinned_name) tuples; one clone
+    alone underestimates the band half the time (its own deviation can
+    land BELOW 1)."""
+    return max(abs(paired_median_ratio(samples, c, p) - 1.0)
+               for c, p in clone_pairs)
+
+
+def not_slower(ratio: float, band: float, identical: int = 0) -> int:
+    """1 when `ratio` is within the measured band (floored at
+    NOISE_BAND_FLOOR) of 1.0, or when `identical` gives structural proof
+    the two programs are the same executable (route/HLO identity) — two
+    instances of one program can still measure a few % apart from
+    placement luck, which is not a routing loss."""
+    return int(ratio <= 1.0 + max(band, NOISE_BAND_FLOOR) or identical)
 
 
 # ------------------------------------------------- spike map collection

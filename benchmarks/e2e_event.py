@@ -33,12 +33,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import costmodel
 from repro.core.events import EventTensor
 from repro.core.lif import LIFConfig
 from repro.core.spikes import build_csr
 from repro.kernels import dispatch, ops
 from repro.models.layers import lif_fire_events
-from .common import csv_row, time_fn
+from .common import (csv_row, noise_band, not_slower, time_fn,
+                     time_interleaved, time_pair)
 from .sparsity_sweep import SPARSITIES, clustered_spikes
 
 LIF = LIFConfig()        # v_th=1.0: a {0,1} drive fires itself back out
@@ -65,45 +67,15 @@ ITERS = 24   # CPU wall-clock needs more samples than the op sweeps
 
 def _time_min(fn, *args, iters=ITERS, warmup=2):
     """Best-of-N wall seconds (stable for the small pre-pass probes)."""
-    import time
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best
+    mins, _ = time_interleaved({"fn": fn}, *args, iters=iters, warmup=warmup)
+    return mins["fn"]
 
 
 def _time_pair(fn_a, fn_b, *args, iters=ITERS, warmup=2):
-    """Paired measurement for two routes whose difference (a few ms of
-    metadata work) is an order of magnitude below their totals: samples
-    are INTERLEAVED (so load drift biases both routes the same way) with
-    the order ALTERNATED per iteration (cancels the measured ~4%
-    first-in-pair cache advantage), and each route reports its MINIMUM —
-    this host's cgroup scheduling inserts multi-ms stalls that corrupt
-    means and medians, while the per-route minimum is the reproducible
-    unthrottled cost. Returns (min_a, min_b, min_b/min_a)."""
-    import time
-
-    def one(fn):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        return time.perf_counter() - t0
-
-    for _ in range(warmup):
-        jax.block_until_ready(fn_a(*args))
-        jax.block_until_ready(fn_b(*args))
-    ts_a, ts_b = [], []
-    for i in range(iters):
-        if i % 2 == 0:
-            ts_a.append(one(fn_a))
-            ts_b.append(one(fn_b))
-        else:
-            ts_b.append(one(fn_b))
-            ts_a.append(one(fn_a))
-    return min(ts_a), min(ts_b), min(ts_b) / min(ts_a)
+    """Paired interleaved min-of-N via the shared protocol
+    (`common.time_pair` — one implementation for this sweep and the
+    hybrid trio timer). Returns (min_a, min_b, min_b/min_a)."""
+    return time_pair(fn_a, fn_b, *args, iters=iters, warmup=warmup)
 
 
 def _stage_drive(key, kind, shape, sparsity):
@@ -142,11 +114,28 @@ def _produce_dense(drive):
     return dispatch.lif_scan(drive)
 
 
+@jax.jit
+def _produce_packed(drive):
+    # uint32 words as the canonical payload: packing fused into the same
+    # emission pass that popcounts the occupancy map (no f32 spike tensor
+    # leaves the fire stage)
+    return lif_fire_events(drive, LIF, packed=True)
+
+
 def _forward(drives, stages, carried: bool):
     outs = []
     for (name, kind, _, w), drive in zip(stages, drives):
         s = _produce_carried(drive) if carried else _produce_dense(drive)
         outs.append(_consume(kind, s, w))
+    return outs
+
+
+def _forward_packed(drives, stages):
+    """The packed pipeline: every fire stage emits a packed-only
+    EventTensor and every consumer unpacks VMEM-resident in-kernel."""
+    outs = []
+    for (name, kind, _, w), drive in zip(stages, drives):
+        outs.append(_consume(kind, _produce_packed(drive), w))
     return outs
 
 
@@ -233,5 +222,190 @@ def run() -> list[str]:
     return rows
 
 
+# ----------------------------------------------- packed payload (PR 7)
+def _consumer_operand(kind, s_dense, w):
+    """The (R, K) matrix the layer's matmul-form kernel actually tiles:
+    im2col patches for convs (K = kh*kw*C), the flattened spikes for
+    matmuls — the operand whose occupancy map prices the bytes ledger."""
+    if kind == "conv":
+        flat = s_dense.reshape((-1,) + s_dense.shape[2:])
+        kh, kw = w.shape[:2]
+        operand = jax.lax.conv_general_dilated_patches(
+            flat, (kh, kw), (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return operand.reshape(-1, operand.shape[-1]), w.shape[-1]
+    return s_dense.reshape(-1, s_dense.shape[-1]), w.shape[-1]
+
+
+def _stack_bytes(stages, drives):
+    """Modeled HBM bytes over the stack, f32-csr vs packed-csr: emission
+    writes (`costmodel.spike_payload_bytes`) + consumer spike-tile reads
+    (`costmodel.matmul_bytes_moved`), with the payload-invariant weight/
+    output traffic kept separate — both routes run the SAME trimmed grid,
+    so only the event-payload stream responds to packing."""
+    spike = {"f32": 0.0, "packed": 0.0}
+    weight = out = 0.0
+    for (name, kind, shape, w), drive in zip(stages, drives):
+        s = _produce_dense(drive)
+        operand, n = _consumer_operand(kind, s, w)
+        occ = np.asarray(ops.padded_occupancy(operand, 128, 128))
+        rows_emit = int(np.prod(shape[:-1]))
+        for payload, backend in (("f32", "pallas-csr"),
+                                 ("packed", "packed-csr")):
+            bm = costmodel.matmul_bytes_moved(occ, n, backend=backend)
+            spike[payload] += bm.spike_hbm + costmodel.spike_payload_bytes(
+                rows_emit, shape[-1],
+                "dense" if payload == "f32" else "packed")
+        weight += bm.weight_hbm
+        out += bm.out_hbm
+    return spike, weight, out
+
+
+def run_packed() -> list[str]:
+    """Packed uint32 pipeline vs the f32 CSR pipeline, same stacks.
+
+    Rows per (family, sparsity):
+      ``e2e_event/<family>/f32csr/s<pct>``   stack produce+consume us,
+          dense f32 spikes through the pallas-csr family.
+      ``e2e_event/<family>/packed/s<pct>``   same stack with packed
+          emission and packed-csr consumers; ``routes=`` asserts every
+          consume resolved to the packed family (no silent densify).
+      ``e2e_event/<family>/packed_margin/s<pct>``  paired ratio vs the
+          self-measured clone noise band (the hybrid suite's protocol).
+      ``e2e_event/<family>/bytes/s<pct>``    the modeled bytes-moved
+          ledger: event-payload HBM traffic (emission writes + spike-tile
+          reads) per payload, reduction, and the payload-invariant
+          weight/output traffic alongside. Committed as BENCH_PR7.json.
+    """
+    rows = []
+    platform = jax.default_backend()
+    tpu = platform == "tpu"
+    csr = "pallas-csr" if tpu else "pallas-csr-interpret"
+    pcsr = "packed-csr" if tpu else "packed-csr-interpret"
+
+    def f32_scope():
+        import contextlib
+        ctx = contextlib.ExitStack()
+        for op in ("spike_matmul", "econv"):
+            ctx.enter_context(dispatch.use_backend(csr, op=op))
+        return ctx
+
+    def packed_scope():
+        import contextlib
+        ctx = contextlib.ExitStack()
+        for op in ("spike_matmul", "econv"):
+            ctx.enter_context(dispatch.use_backend(pcsr, op=op))
+        return ctx
+
+    for family, spec in FAMILIES.items():
+        stages = [(n, kind, shape,
+                   jax.random.normal(jax.random.PRNGKey(i + 1),
+                                     wshape, jnp.float32) * 0.05)
+                  for i, (n, kind, shape, wshape) in enumerate(spec)]
+        for sparsity in SPARSITIES:
+            key = jax.random.PRNGKey(int(sparsity * 1000))
+            drives = [
+                _stage_drive(jax.random.fold_in(key, i), kind, shape,
+                             sparsity)
+                for i, (_, kind, shape, _w) in enumerate(stages)]
+            # parity guard: the packed route must match the f32 oracle
+            # before its timings mean anything, and every consume must
+            # ATTRIBUTE to the packed family (never a silent densify)
+            with f32_scope():
+                ref = _forward(drives, stages, True)
+            with dispatch.watch_resolutions() as recs, packed_scope():
+                outs = _forward_packed(drives, stages)
+            for a, b in zip(ref, outs):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-4)
+            picked = [r["attribution"].split("<-")[0] for r in recs
+                      if r["op"] in ("spike_matmul", "econv")]
+            assert picked and all(p == pcsr for p in picked), \
+                f"packed consume leaked off the packed family: {picked}"
+            routes = ":".join(sorted(set(picked)))
+
+            # per-layer paired timing (the hybrid suite's protocol):
+            # modes interleaved per layer, per-(layer, mode) minimums
+            # summed; f32b/packedb re-run the same pins — their sums
+            # against the originals are the measured noise floor.
+            modes = ("f32", "packed", "f32b", "packedb")
+            sums = {m: 0.0 for m in modes}
+            for stage, d in zip(stages, drives):
+                def one(m, st=stage, dd=d):
+                    if m.startswith("f32"):
+                        with f32_scope():
+                            return _forward([dd], [st], True)
+                    with packed_scope():
+                        return _forward_packed([dd], [st])
+                layer_best, _ = time_interleaved(
+                    {m: (lambda m=m: one(m)) for m in modes}, iters=ITERS)
+                for m in modes:
+                    sums[m] += layer_best[m]
+            ratio = sums["packed"] / sums["f32"]
+            band = max(abs(sums["f32b"] / sums["f32"] - 1.0),
+                       abs(sums["packedb"] / sums["packed"] - 1.0))
+
+            spike, weight_b, out_b = _stack_bytes(stages, drives)
+            mb = 1.0 / 2**20
+            pct = int(sparsity * 100)
+            common = f"platform={platform};layers={len(stages)}"
+            rows.append(csv_row(f"e2e_event/{family}/f32csr/s{pct}",
+                                sums["f32"] * 1e6,
+                                f"{common};backend={csr}"))
+            rows.append(csv_row(f"e2e_event/{family}/packed/s{pct}",
+                                sums["packed"] * 1e6,
+                                f"{common};backend={pcsr};routes={routes}"))
+            rows.append(csv_row(
+                f"e2e_event/{family}/packed_margin/s{pct}", 0.0,
+                f"packed_vs_f32={ratio:.3f};noise_band={band:.3f};"
+                f"not_slower={not_slower(ratio, band)};{common}"))
+            rows.append(csv_row(
+                f"e2e_event/{family}/bytes/s{pct}", 0.0,
+                f"spike_mb_f32={spike['f32'] * mb:.3f};"
+                f"spike_mb_packed={spike['packed'] * mb:.3f};"
+                f"bytes_reduction={spike['f32'] / spike['packed']:.1f};"
+                f"weight_mb={weight_b * mb:.3f};out_mb={out_b * mb:.3f};"
+                f"total_mb_f32={(spike['f32'] + weight_b + out_b) * mb:.3f};"
+                f"total_mb_packed="
+                f"{(spike['packed'] + weight_b + out_b) * mb:.3f};"
+                f"total_reduction="
+                f"{(spike['f32'] + weight_b + out_b) / (spike['packed'] + weight_b + out_b):.2f};"
+                f"{common}"))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--packed", action="store_true",
+                    help="packed-payload rows (e2e packed pipeline + "
+                         "single-op packed sparsity sweep) instead of the "
+                         "carried-vs-rederive suite")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="(with --packed) write BENCH_PR7-schema JSON: "
+                         "packed-route resolution + the bytes-moved rows")
+    args = ap.parse_args()
+    if not args.packed:
+        print("\n".join(run()))
+        return
+    from .sparsity_sweep import run_packed as run_packed_ops
+    rows = run_packed_ops() + run_packed()
+    print("\n".join(rows))
+    if args.json:
+        pcsr = ("packed-csr" if jax.default_backend() == "tpu"
+                else "packed-csr-interpret")
+        with dispatch.use_backend(pcsr, op="spike_matmul"), \
+                dispatch.use_backend(pcsr, op="apec_matmul"), \
+                dispatch.use_backend(pcsr, op="econv"):
+            resolved = dispatch.resolved_backends()
+        with open(args.json, "w") as f:
+            json.dump({"sweeps": [{
+                "requested": pcsr,
+                "resolved": resolved,
+                "rows": rows,
+            }]}, f, indent=2)
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

@@ -40,14 +40,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import dispatch, ops
-from .common import csv_row
+from .common import (NOISE_BAND_FLOOR, csv_row, noise_band, not_slower,
+                     paired_median_ratio, time_interleaved)
 from .e2e_event import (FAMILIES, _consume, _forward, _produce_carried,
                         _stage_drive)
 from .sparsity_sweep import SPARSITIES, clustered_spikes
 
-ITERS = 24   # min-of-N; interleaved samples, see _time_trio (the e2e
-             # suite's sample count — fewer rounds leave the per-mode
-             # minimums of IDENTICAL programs a few % apart on a
+_ = NOISE_BAND_FLOOR    # re-exported: the band floor rides every margin row
+
+ITERS = 24   # min-of-N; interleaved samples, see common.time_interleaved
+             # (the e2e suite's sample count — fewer rounds leave the
+             # per-mode minimums of IDENTICAL programs a few % apart on a
              # cgroup-throttled host)
 MESH_SHARDS = 8
 M_MESH, K_MESH, N_MESH = 1024, 512, 256
@@ -73,23 +76,10 @@ def _mode_scope(mode: str):
 
 def _time_trio(fns: dict, iters: int = ITERS,
                warmup: int = 2) -> tuple[dict, dict]:
-    """Per-mode (min, all samples), interleaved with rotating order — the
-    three modes see identical load drift and none keeps the first-in-round
-    cache advantage (same protocol as the e2e pair timer)."""
-    import time
-
-    names = list(fns)
-    for _ in range(warmup):
-        for n in names:
-            jax.block_until_ready(fns[n]())
-    samples = {n: [] for n in names}
-    for i in range(iters):
-        order = names[i % len(names):] + names[:i % len(names)]
-        for n in order:
-            t0 = time.perf_counter()
-            jax.block_until_ready(fns[n]())
-            samples[n].append(time.perf_counter() - t0)
-    return {n: min(v) for n, v in samples.items()}, samples
+    """Per-mode (min, all samples) via the shared interleaved rotating-
+    order protocol (`common.time_interleaved` — one implementation for
+    this sweep and the e2e pair timer)."""
+    return time_interleaved(fns, iters=iters, warmup=warmup)
 
 
 def _margin(samples: dict) -> tuple[float, float, str]:
@@ -115,31 +105,15 @@ def _margin(samples: dict) -> tuple[float, float, str]:
     clock."""
     med = {m: sorted(v)[len(v) // 2] for m, v in samples.items()}
     winner = "dense" if med["dense"] <= med["event"] else "event"
-
-    def paired(a, b):
-        r = sorted(x / y for x, y in zip(samples[a], samples[b]))
-        return r[len(r) // 2]
-
-    band = max(abs(paired("dense2", "dense") - 1.0),
-               abs(paired("event2", "event") - 1.0))
-    return paired("hybrid", winner), band, winner
+    band = noise_band(samples, (("dense2", "dense"), ("event2", "event")))
+    return paired_median_ratio(samples, "hybrid", winner), band, winner
 
 
-# "Not slower" allows the measured identical-program noise band, never
-# less than the ~2% median deviation this host's clone pairs show
-# across a sweep (separately-jitted copies of the same HLO land 0.2-7%
-# apart depending on instance placement and quota phase).
-NOISE_BAND_FLOOR = 0.02
-
-
-def _not_slower(ratio: float, band: float, identical: int = 0) -> int:
-    """identical: structural proof (hybrid_is_winner_route / same_hlo)
-    that hybrid's program IS the winner's — the two executables can
-    still measure a few % apart from instance placement luck, which a
-    hand-pinned backend would be equally subject to; that is not a
-    routing loss, so identity settles the claim regardless of the
-    clock. The measured ratio still rides the row for inspection."""
-    return int(ratio <= 1.0 + max(band, NOISE_BAND_FLOOR) or identical)
+# "Not slower" (common.not_slower) allows the measured identical-program
+# noise band, floored at common.NOISE_BAND_FLOOR; `identical` is
+# structural proof (hybrid_is_winner_route / same_hlo) that hybrid's
+# program IS the winner's, which settles ties regardless of the clock.
+_not_slower = not_slower
 
 
 def run() -> list[str]:

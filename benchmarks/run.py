@@ -53,8 +53,12 @@ def _suites():
         ("roofline", roofline.run),
         ("backends", kernel_backends.run),
         ("sparsity", sparsity_sweep.run),
+        # uint32-packed CSR vs f32 CSR single ops + bytes-moved ledger
+        ("sparsity_packed", sparsity_sweep.run_packed),
         # whole-network carried-occupancy (EventTensor) vs re-derive
         ("e2e_event", e2e_event.run),
+        # whole-network packed pipeline vs f32 CSR + bytes-moved ledger
+        ("e2e_packed", e2e_event.run_packed),
         # sharded-vs-single CSR columns (8-way host mesh; re-launches
         # itself with forced host devices when this process has fewer)
         ("sparsity_mesh", sparsity_sweep.run_mesh_rows),

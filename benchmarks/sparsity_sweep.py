@@ -43,7 +43,8 @@ import jax.numpy as jnp
 from repro.core import costmodel
 from repro.core.spikes import occupancy_fraction
 from repro.kernels import ops
-from .common import csv_row, time_fn
+from .common import csv_row, noise_band, not_slower, time_fn, \
+    time_interleaved
 
 SPARSITIES = (0.50, 0.60, 0.80, 0.90, 0.97)
 IN_TILE_DENSITY = 0.5
@@ -141,6 +142,77 @@ def run() -> list[str]:
             f"csr_wins_from_sparsity="
             f"{'none' if crossover[op] is None else crossover[op]};"
             f"platform={platform}"))
+    return rows
+
+
+# ------------------------------------------------------- packed payload
+def _bytes_fields(occ, n: int) -> str:
+    """Absolute modeled HBM traffic of the two CSR payloads on this map
+    (`costmodel.matmul_bytes_moved`): the event-payload stream responds
+    32x to packing, the weight/output streams are route-invariant (same
+    trimmed grid) and reported alongside."""
+    mb = 1.0 / 2**20
+    f32 = costmodel.matmul_bytes_moved(occ, n, backend="pallas-csr")
+    pk = costmodel.matmul_bytes_moved(occ, n, backend="packed-csr")
+    return (f"spike_mb_csr={f32.spike_hbm * mb:.3f};"
+            f"spike_mb_packed={pk.spike_hbm * mb:.3f};"
+            f"spike_reduction={f32.spike_hbm / pk.spike_hbm:.1f};"
+            f"weight_mb={f32.weight_hbm * mb:.3f};"
+            f"out_mb={f32.out_hbm * mb:.3f};"
+            f"total_reduction={f32.total / pk.total:.2f}")
+
+
+def run_packed() -> list[str]:
+    """uint32-packed CSR vs f32 CSR, single ops at the sweep points.
+
+    Rows ``sparsity/<op>/packed-csr/s<pct>`` time the packed kernel on
+    pre-packed words (packing is the producer's job — fused into emission
+    in the pipeline — so the consumer-side comparison starts from each
+    route's canonical payload; both routes re-derive their occupancy +
+    work list per call). Fields carry the paired packed-vs-csr ratio
+    against the self-measured clone noise band (`common.time_interleaved`
+    protocol) plus the absolute bytes-moved ledger.
+    """
+    import functools
+
+    from repro.core.spikes import pack_spikes
+
+    rows = []
+    platform = jax.default_backend()
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    variants = {
+        "spike_matmul": (ops.spike_matmul_csr,
+                         functools.partial(ops.spike_matmul_packed,
+                                           packed_k=K)),
+        "apec_matmul": (functools.partial(ops.apec_matmul_csr, g=APEC_G),
+                        functools.partial(ops.apec_matmul_packed, g=APEC_G,
+                                          packed_k=K)),
+    }
+    for op, (csr_fn, packed_fn) in variants.items():
+        for sparsity in SPARSITIES:
+            key = jax.random.PRNGKey(int(sparsity * 1000))
+            s = clustered_spikes(key, M, K, sparsity)
+            p = pack_spikes(s)
+            ref = csr_fn(s, w)
+            import numpy as np
+            np.testing.assert_allclose(np.asarray(packed_fn(p, w)),
+                                       np.asarray(ref), atol=1e-4)
+            fns = {"csr": (lambda: csr_fn(s, w)),
+                   "packed": (lambda: packed_fn(p, w)),
+                   "csr2": (lambda: csr_fn(s, w)),
+                   "packed2": (lambda: packed_fn(p, w))}
+            best, samples = time_interleaved(fns, iters=24)
+            ratio = best["packed"] / best["csr"]
+            band = noise_band(samples, (("csr2", "csr"),
+                                        ("packed2", "packed")))
+            occ = ops.padded_occupancy(s, BLOCK, BLOCK)
+            pct = int(sparsity * 100)
+            rows.append(csv_row(
+                f"sparsity/{op}/packed-csr/s{pct}", best["packed"] * 1e6,
+                f"platform={platform};csr_us={best['csr'] * 1e6:.1f};"
+                f"packed_vs_csr={ratio:.3f};noise_band={band:.3f};"
+                f"not_slower={not_slower(ratio, band)};"
+                f"{_bytes_fields(occ, N)};{_savings_fields(s, N)}"))
     return rows
 
 

@@ -17,6 +17,10 @@ class SpikingConfig:
     hybrid: bool = False        # density-adaptive dispatch: matmul-form ops
                                 # with a carried occupancy map pick dense vs
                                 # event per call (kernels.dispatch.use_hybrid)
+    packed: bool = False        # uint32 spike words as the canonical
+                                # inter-layer payload (inference-only; the
+                                # fire stages emit packed EventTensors and
+                                # dispatch routes to packed-csr backends)
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)

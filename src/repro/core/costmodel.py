@@ -143,6 +143,41 @@ class TileSkipSavings:
             if self.dma_bytes_total else 0.0
 
 
+PACK = 32                 # channels per uint32 spike word (core.spikes.PACK)
+PACK_WORD_BYTES = 4
+
+
+def spike_tile_bytes(block_m: int, block_k: int, payload: str = "dense",
+                     spike_bytes: int = 4) -> float:
+    """HBM bytes of one (block_m, block_k) spike tile in `payload` form.
+
+    "dense": block_k elements of `spike_bytes` each (the f32 route).
+    "packed": block_k/32 uint32 words — the 32x compression the packed-csr
+    family streams instead. block_k must stay a multiple of 32 (the
+    kernels' word tiling; 128-blocks are).
+    """
+    if payload == "packed":
+        if block_k % PACK:
+            raise ValueError(f"packed tile needs block_k % {PACK} == 0, "
+                             f"got {block_k}")
+        return float(block_m * (block_k // PACK) * PACK_WORD_BYTES)
+    if payload != "dense":
+        raise ValueError(f"unknown spike payload {payload!r}")
+    return float(block_m * block_k * spike_bytes)
+
+
+def spike_payload_bytes(rows: int, k: int, payload: str = "dense",
+                        spike_bytes: int = 4) -> float:
+    """One HBM materialization of a (rows, k) spike tensor — what the
+    producing fire stage writes out (and a re-deriving pre-pass reads
+    back). Packed emission writes ceil(k/32) uint32 words per row."""
+    if payload == "packed":
+        return float(rows) * (-(-k // PACK)) * PACK_WORD_BYTES
+    if payload != "dense":
+        raise ValueError(f"unknown spike payload {payload!r}")
+    return float(rows) * k * spike_bytes
+
+
 def tile_matmul_savings(
     occupancy: "np.ndarray",
     n: int,
@@ -153,16 +188,26 @@ def tile_matmul_savings(
     spike_bytes: int = 4,
     weight_bytes: int = 4,
     backend: str = "pallas",
+    payload: str = "dense",
 ) -> TileSkipSavings:
     """FLOPs-saved vs DMA-saved of one (M, K) x (K, N) spike matmul.
 
     `occupancy`: the (MT, KT) per-tile event-count map the kernels consume
     (`core.spikes.tile_occupancy`). `backend`: "pallas" (predicated dense
-    grid) or "pallas-csr" (event-compacted grid). The CSR accounting
-    charges one dummy step per all-empty m-tile row — those rows must
-    still be visited to zero their output blocks, and the dummy's spike/
-    weight tile fetch is real traffic.
+    grid), "pallas-csr" (event-compacted grid), or "packed-csr" (the same
+    compacted grid streaming uint32 words — implies payload="packed").
+    The CSR accounting charges one dummy step per all-empty m-tile row —
+    those rows must still be visited to zero their output blocks, and the
+    dummy's spike/weight tile fetch is real traffic.
+
+    `payload` sets the per-step spike-tile DMA currency (dense elements vs
+    packed words), so the DMA-saved column states the route's own traffic
+    honestly instead of charging f32 bytes to a packed stream. The saved
+    FRACTION is payload-invariant (total and saved scale together); the
+    absolute dma_bytes_* differ 32x on the spike side.
     """
+    if backend == "packed-csr":
+        payload = "packed"
     occ = np.asarray(occupancy)
     mt, kt = occ.shape
     nt = int(np.ceil(n / block_n))
@@ -170,15 +215,15 @@ def tile_matmul_savings(
     empty = mt * kt - occupied
     empty_rows = int(np.sum(~(occ > 0).any(axis=1)))
     per_tile_flops = 2.0 * block_m * block_k * block_n
-    per_step_dma = float(block_m * block_k * spike_bytes
-                         + block_k * block_n * weight_bytes)
+    per_step_dma = (spike_tile_bytes(block_m, block_k, payload, spike_bytes)
+                    + block_k * block_n * weight_bytes)
     steps_total = mt * kt * nt
     flops_total = steps_total * per_tile_flops
     flops_saved = empty * nt * per_tile_flops     # both backends skip MXU
     if backend == "pallas":                       # predicated: full grid,
         steps_run = steps_total                   # full tile traffic
         dma_saved = 0.0
-    elif backend == "pallas-csr":
+    elif backend in ("pallas-csr", "packed-csr"):
         steps_run = (occupied + empty_rows) * nt
         dma_saved = (steps_total - steps_run) * per_step_dma
     else:
@@ -191,6 +236,82 @@ def tile_matmul_savings(
         flops_saved=flops_saved,
         dma_bytes_total=steps_total * per_step_dma,
         dma_bytes_saved=dma_saved,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bytes-moved ledger (PR 7): absolute HBM traffic per op, packed vs f32.
+#
+# The DMA ledger above answers "what fraction of this route's own tile
+# traffic does compaction save"; the bytes ledger answers the PR 7
+# question — how many HBM bytes actually move, in each payload. Three
+# components are kept separate because only one responds to packing:
+#
+#   spike_hbm  — event-payload tile reads (steps_run x spike tile bytes).
+#                This is the traffic event compression acts on: 32x down
+#                when the words stay packed end to end.
+#   weight_hbm — weight tile reads. Route-invariant between payloads (the
+#                packed and f32 CSR kernels run the SAME trimmed grid), so
+#                it is reported, never folded into the headline reduction.
+#   out_hbm    — output tile writes (mt x nt tiles, once each). Invariant.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BytesMoved:
+    """Absolute modeled HBM traffic of one matmul-form op call."""
+    backend: str
+    payload: str
+    spike_hbm: float     # spike/event tile reads (the compressible stream)
+    weight_hbm: float    # weight tile reads (payload-invariant)
+    out_hbm: float       # output tile writes (payload-invariant)
+
+    @property
+    def total(self) -> float:
+        return self.spike_hbm + self.weight_hbm + self.out_hbm
+
+
+def matmul_bytes_moved(
+    occupancy: "np.ndarray",
+    n: int,
+    *,
+    block_m: int = 128,
+    block_k: int = 128,
+    block_n: int = 128,
+    backend: str = "pallas-csr",
+    payload: str = "dense",
+    spike_bytes: int = 4,
+    weight_bytes: int = 4,
+    out_bytes: int = 4,
+) -> BytesMoved:
+    """Modeled HBM bytes in/out of one (M, K) x (K, N) spike matmul.
+
+    Same grid accounting as `tile_matmul_savings` (full grid for the
+    predicated "pallas" backend; occupied + empty-row-dummy steps for the
+    csr family), with the spike stream priced in its actual payload:
+    backend "packed-csr" forces payload="packed" (uint32 words, 1/32 the
+    dense bytes per tile).
+    """
+    if backend == "packed-csr":
+        payload = "packed"
+    occ = np.asarray(occupancy)
+    mt, kt = occ.shape
+    nt = int(np.ceil(n / block_n))
+    if backend == "pallas":
+        steps_run = mt * kt * nt
+    elif backend in ("pallas-csr", "packed-csr"):
+        occupied = int(np.count_nonzero(occ > 0))
+        empty_rows = int(np.sum(~(occ > 0).any(axis=1)))
+        steps_run = (occupied + empty_rows) * nt
+    else:
+        raise ValueError(f"unknown tile-skipping backend {backend!r}")
+    return BytesMoved(
+        backend=backend,
+        payload=payload,
+        spike_hbm=steps_run * spike_tile_bytes(block_m, block_k, payload,
+                                               spike_bytes),
+        weight_hbm=float(steps_run) * block_k * block_n * weight_bytes,
+        out_hbm=float(mt * nt) * block_m * block_n * out_bytes,
     )
 
 
@@ -271,6 +392,50 @@ def crossover_points_from_bench(path: str, op: str,
             side[occupied] = float(m.group("us"))
         for occupied in sorted(set(dense) & set(event), reverse=True):
             points.append((occupied, dense[occupied], event[occupied]))
+    return tuple(points)
+
+
+# (sparsity_pct, spike_mb_f32, spike_mb_packed) per model family,
+# transcribed from the e2e bytes-ledger rows committed in BENCH_PR7.json
+# (rows `e2e_event/<family>/bytes/s*`). The MB values are MODELED (from
+# the deterministic clustered-spike occupancy maps via matmul_bytes_moved
+# + spike_payload_bytes), so regeneration reproduces them exactly.
+# test_packed_events asserts this table equals
+# packed_bytes_points_from_bench("BENCH_PR7.json", family) — the embedded
+# constants cannot drift from the committed artifact — and that the
+# packed reduction clears 4x at the 90/97% points (it is ~32x by
+# construction: same trimmed grid, 1/32 the bytes per spike tile).
+PACKED_BYTES_POINTS: dict[str, tuple[tuple[int, float, float], ...]] = {
+    "cnn": (
+        (50, 4.75, 0.148), (60, 4.625, 0.145), (80, 2.938, 0.092),
+        (90, 2.875, 0.09), (97, 2.875, 0.09),
+    ),
+    "spikingformer": (
+        (50, 6.5, 0.203), (60, 5.625, 0.176), (80, 4.312, 0.135),
+        (90, 3.562, 0.111), (97, 3.5, 0.109),
+    ),
+}
+
+_PACKED_BYTES_ROW = re.compile(
+    r"^e2e_event/(?P<family>[\w-]+)/bytes/s(?P<pct>\d+),[\d.]+,"
+    r".*?spike_mb_f32=(?P<f32>[\d.]+);spike_mb_packed=(?P<packed>[\d.]+)")
+
+
+def packed_bytes_points_from_bench(path: str, family: str,
+                                   ) -> tuple[tuple[int, float, float], ...]:
+    """Re-derive (sparsity_pct, spike_mb_f32, spike_mb_packed) from a
+    committed benchmark JSON (BENCH_PR7.json schema) — the provenance
+    check for PACKED_BYTES_POINTS."""
+    with open(path) as f:
+        payload = json.load(f)
+    points: list[tuple[int, float, float]] = []
+    for sweep in payload["sweeps"]:
+        for row in sweep["rows"]:
+            m = _PACKED_BYTES_ROW.match(row)
+            if not m or m.group("family") != family:
+                continue
+            points.append((int(m.group("pct")), float(m.group("f32")),
+                           float(m.group("packed"))))
     return tuple(points)
 
 

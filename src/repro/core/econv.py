@@ -31,9 +31,16 @@ import jax.numpy as jnp
 
 
 def tconv(s: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME") -> jax.Array:
-    """TConv oracle. s: (N,H,W,Ci) binary; w: (kh,kw,Ci,Co)."""
+    """TConv oracle. s: (N,H,W,Ci) binary; w: (kh,kw,Ci,Co).
+
+    Binary spikes arrive in whatever dtype the caller stores them
+    (bool/int8 event maps, f32 surrogate outputs); lax.conv demands
+    matching operand dtypes, so the spike operand is promoted to the
+    weight dtype HERE — inside the op, not silently at dispatch entry.
+    The output is an activation in w.dtype either way.
+    """
     return jax.lax.conv_general_dilated(
-        s, w, (stride, stride), padding,
+        s.astype(w.dtype), w, (stride, stride), padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
@@ -115,9 +122,10 @@ def conv_transpose_ref(s: jax.Array, w: jax.Array, stride: int = 2,
                        padding: str = "SAME") -> jax.Array:
     """Transposed-conv oracle (the segmentation decoder's upsampling op;
     `ref` backend of the `tconv` registry op). s: (N,H,W,Ci); w:
-    (kh,kw,Ci,Co) -> (N, H*stride, W*stride, Co) for SAME."""
+    (kh,kw,Ci,Co) -> (N, H*stride, W*stride, Co) for SAME. Bool/int8
+    spike operands are promoted to w.dtype here (see `tconv`)."""
     return jax.lax.conv_transpose(
-        s, w, (stride, stride), padding,
+        s.astype(w.dtype), w, (stride, stride), padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
@@ -157,7 +165,8 @@ def conv_transpose_upsampled(s: jax.Array, w: jax.Array, stride: int = 2,
     intermediate stays binary for binary inputs."""
     up = upsample_events(s, stride, w.shape[0], w.shape[1], padding)
     return jax.lax.conv_general_dilated(
-        up, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        up.astype(w.dtype), w, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
 def conv_transpose(s, w: jax.Array, stride: int = 2,

@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .spikes import build_csr, pack_spikes, popcount, tile_occupancy
+from .spikes import (build_csr, pack_spikes, pack_spikes_padded,
+                     packed_width, popcount, tile_occupancy, unpack_spikes)
 
 
 class EventStream(NamedTuple):
@@ -113,6 +114,26 @@ def word_event_counts(s: jax.Array, axis: int = -1) -> jax.Array:
 # * non-spike transforms (matmul outputs, membrane sums): the result is
 #   not binary — it is not an EventTensor at all until the next fire
 #   stage re-emits one.
+#
+# Packed payload (PR 7)
+# ---------------------
+# `packed` optionally replaces `spikes` as the canonical payload: uint32
+# words along the channel axis (bit i of word w = channel w*32+i, the
+# `spikes.pack_spikes` little-endian layout, zero-padded to whole words),
+# shape = spikes.shape[:-1] + (ceil(K/32),). In packed-only mode
+# (spikes=None) the logical shape/dtype live in the `feature_size` /
+# `spike_dtype` static aux, and NOTHING densifies silently: `.dense()` is
+# the one explicit unpack point (what `as_spikes` calls for the ops with
+# no packed backend), dispatch routes packed calls only to backends
+# declaring `payload="packed"`, and the fallback chain unpacks via an
+# attributed shim. Pack survival mirrors the occupancy rules: last-axis-
+# preserving reshapes keep the words (rows regroup, bits don't move);
+# last-axis-changing reshapes RAISE on a packed-only tensor (call
+# `.dense()` first — the loud spelling of the densify); spatial max-pool
+# pools words bitwise-OR (the per-bit max of binary lanes), so the packed
+# payload survives pooling with the maps. The packed payload is
+# forward-only: it is integer-typed aux under autodiff (float0
+# cotangent); training paths carry dense spikes.
 
 
 CHUNK = 8    # fine-map row granularity: the LIF kernel's block_m
@@ -125,23 +146,58 @@ class EventTensor:
     (metadata lost to a transform); consumers then re-derive. `chunks` is
     the optional fine (8-row) map used only by window propagation."""
 
-    __slots__ = ("spikes", "occupancy", "tiling", "chunks", "_csr_cache")
+    __slots__ = ("spikes", "occupancy", "tiling", "chunks", "packed",
+                 "feature_size", "spike_dtype", "_csr_cache")
 
-    def __init__(self, spikes: jax.Array, occupancy: Optional[jax.Array],
+    def __init__(self, spikes: Optional[jax.Array],
+                 occupancy: Optional[jax.Array],
                  tiling: Tuple[int, int] = (128, 128),
-                 chunks: Optional[jax.Array] = None):
+                 chunks: Optional[jax.Array] = None,
+                 packed: Optional[jax.Array] = None,
+                 feature_size: Optional[int] = None,
+                 spike_dtype=None):
         self.spikes = spikes
         self.occupancy = occupancy
         self.tiling = tuple(tiling)
         self.chunks = chunks
+        self.packed = packed
         self._csr_cache = None
+        if spikes is None and packed is None:
+            raise ValueError("EventTensor needs a payload: spikes, packed, "
+                             "or both")
+        if spikes is not None and hasattr(spikes, "shape"):
+            feature_size = spikes.shape[-1]
+            spike_dtype = spikes.dtype
+        elif feature_size is None:
+            raise ValueError(
+                "packed-only EventTensor needs feature_size= (the logical "
+                "channel count; the word axis alone is ambiguous)")
+        self.feature_size = feature_size
+        self.spike_dtype = jnp.dtype(spike_dtype or jnp.float32)
+        if packed is not None and hasattr(packed, "shape"):
+            if packed.dtype != jnp.uint32:
+                raise ValueError(
+                    f"EventTensor packed payload must be uint32 words, got "
+                    f"{packed.dtype}")
+            want_w = packed_width(self.feature_size)
+            if packed.shape[-1] != want_w:
+                raise ValueError(
+                    f"EventTensor packed width {packed.shape[-1]} words "
+                    f"does not cover feature_size {self.feature_size} "
+                    f"(want {want_w})")
+            if spikes is not None and hasattr(spikes, "shape") \
+                    and tuple(packed.shape[:-1]) != tuple(spikes.shape[:-1]):
+                raise ValueError(
+                    f"EventTensor packed lead shape "
+                    f"{tuple(packed.shape[:-1])} does not match spikes "
+                    f"{tuple(spikes.shape[:-1])}")
         if occupancy is not None and hasattr(occupancy, "shape") \
-                and hasattr(spikes, "shape"):
+                and self._has_shapes():
             want = self.expected_map_shape(*self.tiling)
             if tuple(occupancy.shape) != want:
                 raise ValueError(
                     f"EventTensor occupancy shape {tuple(occupancy.shape)} "
-                    f"does not cover spikes {tuple(spikes.shape)} under "
+                    f"does not cover spikes {tuple(self.shape)} under "
                     f"tiling {self.tiling} (expected {want})")
             if chunks is not None and tuple(chunks.shape) != (
                     want[0] * (self.tiling[0] // CHUNK), want[1]):
@@ -149,55 +205,79 @@ class EventTensor:
                     f"EventTensor chunk map {tuple(chunks.shape)} does not "
                     f"refine occupancy {want} at {CHUNK}-row granularity")
 
+    def _has_shapes(self) -> bool:
+        payload = self.spikes if self.spikes is not None else self.packed
+        return hasattr(payload, "shape")
+
     # ------------------------------------------------------------ pytree
     def tree_flatten(self):
-        return (self.spikes, self.occupancy, self.chunks), (self.tiling,)
+        return ((self.spikes, self.occupancy, self.chunks, self.packed),
+                (self.tiling, self.feature_size, self.spike_dtype))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        spikes, occupancy, chunks = children
+        spikes, occupancy, chunks, packed = children
         obj = object.__new__(cls)
         obj.spikes = spikes
         obj.occupancy = occupancy
         obj.tiling = aux[0]
         obj.chunks = chunks
+        obj.packed = packed
+        obj.feature_size = aux[1]
+        obj.spike_dtype = aux[2]
         obj._csr_cache = None
         return obj
 
     # ------------------------------------------------------- array facade
     @property
     def shape(self):
-        return self.spikes.shape
+        if self.spikes is not None:
+            return self.spikes.shape
+        return self.packed.shape[:-1] + (self.feature_size,)
 
     @property
     def dtype(self):
-        return self.spikes.dtype
+        return self.spikes.dtype if self.spikes is not None \
+            else self.spike_dtype
 
     @property
     def ndim(self):
-        return self.spikes.ndim
+        return self.spikes.ndim if self.spikes is not None \
+            else self.packed.ndim
+
+    @property
+    def is_packed(self) -> bool:
+        """True when the canonical payload is the uint32 words (no dense
+        spikes carried — the no-f32-between-layers mode)."""
+        return self.spikes is None
 
     @property
     def rows(self) -> int:
-        return int(np.prod(self.spikes.shape[:-1]))
+        return int(np.prod(self.shape[:-1]))
 
     def expected_map_shape(self, tile_m: int, tile_k: int) -> Tuple[int, int]:
-        k = self.spikes.shape[-1]
+        k = self.shape[-1]
         return (-(-self.rows // tile_m), -(-k // tile_k))
 
     def __repr__(self):
         occ = None if self.occupancy is None else tuple(self.occupancy.shape)
-        return (f"EventTensor(spikes={tuple(self.shape)}, occupancy={occ}, "
+        payload = "packed" if self.is_packed else "spikes"
+        return (f"EventTensor({payload}={tuple(self.shape)}, occupancy={occ}, "
                 f"tiling={self.tiling})")
 
     # ------------------------------------------------------------- carrier
     @classmethod
     def from_spikes(cls, spikes: jax.Array,
-                    tiling: Tuple[int, int] = (128, 128)) -> "EventTensor":
+                    tiling: Tuple[int, int] = (128, 128),
+                    pack: bool = False) -> "EventTensor":
         """Re-derive the map from dense spikes (ONE standalone pre-pass,
         at chunk granularity; the tile map is its 16:1 aggregation) — the
         entry point for producers without fused emission. Prefer the
-        fused `lif_scan_occ` dispatch op, which emits the maps for free."""
+        fused `lif_scan_occ` dispatch op, which emits the maps for free.
+        `pack=True` additionally packs the spikes to uint32 words and
+        makes THEM the canonical payload (packed-only tensor, dense view
+        dropped) — the eager-side mirror of `lif_fire_events(packed=True)`.
+        """
         tm, tk = tiling
         k = spikes.shape[-1]
         s2 = spikes.reshape(-1, k)
@@ -205,8 +285,25 @@ class EventTensor:
         chunks = tile_occupancy(s2, CHUNK, tk)
         per = tm // CHUNK
         occ = jnp.sum(chunks.reshape(-1, per, chunks.shape[1]), axis=1)
+        if pack:
+            words = jax.lax.stop_gradient(
+                pack_spikes_padded(spikes, axis=-1))
+            return cls(None, jax.lax.stop_gradient(occ), tiling,
+                       jax.lax.stop_gradient(chunks), packed=words,
+                       feature_size=k, spike_dtype=spikes.dtype)
         return cls(spikes, jax.lax.stop_gradient(occ), tiling,
                    jax.lax.stop_gradient(chunks))
+
+    def dense(self) -> jax.Array:
+        """The dense spike view — THE explicit densify point for a
+        packed-only tensor (unpack words, slice the logical channels,
+        cast to the recorded spike dtype). Never called implicitly by
+        dispatch routing; ops with no packed backend reach it through
+        `as_spikes`."""
+        if self.spikes is not None:
+            return self.spikes
+        out = unpack_spikes(self.packed, axis=-1, dtype=self.spike_dtype)
+        return out[..., :self.feature_size]
 
     def occupancy_for(self, tile_m: int, tile_k: int) -> Optional[jax.Array]:
         """The carried map, validated for a consumer tiling — None when no
@@ -240,22 +337,49 @@ class EventTensor:
     def reshape(self, *shape) -> "EventTensor":
         """Reshape the spikes; the carried maps survive iff the trailing
         axis is preserved (rows regroup, addresses don't move — see the
-        module contract), else they are dropped."""
+        module contract), else they are dropped. A packed payload follows
+        the same rule — and on a packed-ONLY tensor a trailing-axis change
+        RAISES instead of silently unpacking (call `.dense()` first)."""
         if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
             shape = tuple(shape[0])
-        spikes = self.spikes.reshape(shape)
-        keep = spikes.shape[-1] == self.spikes.shape[-1]
+        shape = tuple(int(d) for d in shape)
+        k = self.shape[-1]
+        neg = [i for i, d in enumerate(shape) if d < 0]
+        if neg:
+            known = int(np.prod([d for d in shape if d >= 0]))
+            shape = tuple(int(np.prod(self.shape)) // max(known, 1)
+                          if d < 0 else d for d in shape)
+        keep = bool(shape) and shape[-1] == k
+        if self.spikes is None and not keep:
+            raise ValueError(
+                f"reshape to {shape} changes the packed trailing axis "
+                f"({k}); a packed-only EventTensor cannot re-bucket bits "
+                f"— call .dense() (the explicit unpack) first")
+        spikes = None if self.spikes is None else self.spikes.reshape(shape)
+        packed = self.packed
+        if packed is not None:
+            packed = packed.reshape(shape[:-1] + (packed.shape[-1],)) \
+                if keep else None
         return EventTensor(spikes, self.occupancy if keep else None,
-                           self.tiling, self.chunks if keep else None)
+                           self.tiling, self.chunks if keep else None,
+                           packed=packed, feature_size=k,
+                           spike_dtype=self.spike_dtype)
 
     def astype(self, dtype) -> "EventTensor":
-        return EventTensor(self.spikes.astype(dtype), self.occupancy,
-                           self.tiling, self.chunks)
+        """Cast the dense view's dtype. On a packed-only tensor the words
+        are dtype-free — only the recorded unpack dtype changes."""
+        spikes = None if self.spikes is None else self.spikes.astype(dtype)
+        return EventTensor(spikes, self.occupancy, self.tiling, self.chunks,
+                           packed=self.packed,
+                           feature_size=self.feature_size,
+                           spike_dtype=dtype)
 
 
 def as_spikes(x):
-    """Dense view of an array-or-EventTensor operand."""
-    return x.spikes if isinstance(x, EventTensor) else x
+    """Dense view of an array-or-EventTensor operand (for a packed-only
+    tensor this is the explicit `.dense()` unpack — the documented
+    densify point for ops without a packed backend)."""
+    return x.dense() if isinstance(x, EventTensor) else x
 
 
 # ----------------------------------------------- occupancy propagation
@@ -282,8 +406,8 @@ def window_occupancy(et: EventTensor, window: Tuple[int, int], stride: int,
     if occ is None or et.ndim < 4:
         return None, None
     kh, kw = window
-    h, w_, _ = et.spikes.shape[-3:]
-    n = int(np.prod(et.spikes.shape[:-3]))
+    h, w_, _ = et.shape[-3:]
+    n = int(np.prod(et.shape[:-3]))
     ho, wo = out_hw
     tm, tk = et.tiling
     per = tm // CHUNK
@@ -361,7 +485,7 @@ def conv_patch_occupancy(et: EventTensor, w_shape: Tuple[int, ...],
     if et.occupancy is None or et.ndim < 4:
         return None
     kh, kw, ci, co = w_shape
-    h, w_ = et.spikes.shape[-3:-1]
+    h, w_ = et.shape[-3:-1]
     if padding == "SAME":
         ho, wo = -(-h // stride), -(-w_ // stride)
     elif padding == "VALID":
@@ -378,7 +502,23 @@ def conv_patch_occupancy(et: EventTensor, w_shape: Tuple[int, ...],
 def max_pool_events(et, pool: int):
     """Spatial max-pool of (..., H, W, C) spikes with the carried maps
     propagated (chunk-granular window dilation) instead of dropped.
-    Accepts a dense array too (returns a dense array)."""
+    Accepts a dense array too (returns a dense array). A packed-only
+    tensor pools its uint32 words bitwise-OR — per bit, OR of binary
+    lanes IS the max — so the payload stays packed through pooling."""
+    if isinstance(et, EventTensor) and et.is_packed:
+        p = et.packed
+        window = (1,) * (p.ndim - 3) + (pool, pool, 1)
+        pooled_p = jax.lax.reduce_window(
+            p, jnp.uint32(0), jax.lax.bitwise_or, window, window, "VALID")
+        h, w_, _ = et.shape[-3:]
+        occ = chunks = None
+        if et.occupancy is not None and et.ndim >= 4:
+            occ, chunks = window_occupancy(et, (pool, pool), pool,
+                                           (h // pool, w_ // pool),
+                                           et.feature_size, padding="VALID")
+        return EventTensor(None, occ, et.tiling, chunks, packed=pooled_p,
+                           feature_size=et.feature_size,
+                           spike_dtype=et.spike_dtype)
     s = as_spikes(et)
     window = (1,) * (s.ndim - 3) + (pool, pool, 1)
     pooled = jax.lax.reduce_window(s, -jnp.inf, jax.lax.max, window, window,

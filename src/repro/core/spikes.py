@@ -76,6 +76,55 @@ def popcount(p: jax.Array) -> jax.Array:
     return jax.lax.population_count(p)
 
 
+def packed_width(k: int) -> int:
+    """Number of uint32 words covering `k` bits (ceil division)."""
+    return -(-int(k) // PACK)
+
+
+def pack_spikes_padded(s: jax.Array, axis: int = -1) -> jax.Array:
+    """`pack_spikes` for arbitrary axis lengths: the packed axis is
+    zero-padded up to the next multiple of 32, so the last word's high
+    bits are guaranteed-zero padding (consumers slice logical channels
+    back out with `unpack_spikes(...)[..., :k]`)."""
+    s = jnp.moveaxis(s, axis, -1)
+    pad = (-s.shape[-1]) % PACK
+    if pad:
+        widths = [(0, 0)] * (s.ndim - 1) + [(0, pad)]
+        s = jnp.pad(s, widths)
+    return jnp.moveaxis(pack_spikes(s, axis=-1), -1, axis)
+
+
+def packed_tile_occupancy(p: jax.Array, tile_m: int, tile_k: int,
+                          k: Optional[int] = None) -> jax.Array:
+    """`tile_occupancy` computed from uint32-packed spike words.
+
+    `p` is a (..., M, KW) packed matrix (KW words of 32 channels each);
+    the map covers the UNPACKED (M, KW*32) matrix tiled (tile_m, tile_k)
+    — identical counts to `tile_occupancy` on the dense tensor, derived
+    from per-word popcounts, so packing makes the occupancy pre-pass 32x
+    cheaper instead of impossible. `k` (logical channel count) only
+    validates that the word axis covers it; pad bits are zero by the
+    `pack_spikes_padded` contract and never inflate a count. Deliberately
+    NOT ticking the dense pre-pass watchers: this is the packed path's
+    cheap byproduct, not the full-width read the watchers exist to catch.
+    """
+    m, kw = p.shape[-2], p.shape[-1]
+    if k is not None and packed_width(k) != kw:
+        raise ValueError(
+            f"packed width {kw} words does not cover k={k} "
+            f"(want {packed_width(k)})")
+    if tile_k % PACK:
+        raise ValueError(f"tile_k {tile_k} not a multiple of {PACK}")
+    kt_words = tile_k // PACK
+    if m % tile_m or kw % kt_words:
+        raise ValueError(
+            f"packed shape ({m},{kw}) not tileable by ({tile_m},{kt_words})")
+    counts = popcount(p).astype(jnp.int32)
+    t = counts.reshape(counts.shape[:-2]
+                       + (m // tile_m, tile_m, kw // kt_words, kt_words))
+    return jnp.sum(t, axis=(-3, -1))
+
+
 def event_count(s: jax.Array) -> jax.Array:
     """Total number of active events in a binary spike tensor."""
     return jnp.sum(s.astype(jnp.int32))

@@ -128,6 +128,20 @@ class Backend:
     #               count fills whole 128-row tiles, keeping every shard's
     #               compacted tile grid congruent).
     mesh_aware: Union[bool, Callable[..., Optional[str]]] = False
+    # Payload capability: which spike-payload representations this
+    # backend may be AUTO-selected (or hybrid-routed) for. A call whose
+    # spike operand is uint32 words (marked by the static ``packed_k=``
+    # kwarg threaded from a packed `EventTensor`) resolves only among
+    # backends declaring "packed"; every other call resolves only among
+    # backends declaring "dense". When resolution must leave the packed
+    # family (degrade chain, no packed backend on this platform), the
+    # chosen dense backend is wrapped in an EXPLICIT unpack shim
+    # (`_unpack_shim`, warn-once + ``+unpack`` attribution) — a packed
+    # payload is never silently reinterpreted or densified. Explicit
+    # overrides / `call_backend` bypass the filter: the packed-csr family
+    # also accepts dense operands (packs internally), which is how the
+    # parity harness covers it with dense example inputs.
+    payload: Tuple[str, ...] = ("dense",)
 
     def unsupported_reason(self, *args, **kwargs) -> Optional[str]:
         platform = jax.default_backend()
@@ -194,6 +208,13 @@ def _wrap_vjp(op: str, fn, rule):
     tracer must not be closed over) but their cotangent is a symbolic zero
     — occupancy is metadata, gradients flow only through spikes/weights,
     exactly the stop_gradient contract the EventTensor pipeline declares.
+
+    Packed payloads (static ``packed_k`` kwarg, spike operand = uint32
+    words): pack is forward-only aux — the backward unpacks the saved
+    words and the cotangents flow through the UNPACKED values (ref replay
+    on the dense view; explicit rules receive `packed_k` and handle it),
+    while the word operand itself gets the float0 cotangent its integer
+    dtype mandates.
     """
     @functools.wraps(fn)
     def wrapper(*args, **kwargs):
@@ -214,6 +235,20 @@ def _wrap_vjp(op: str, fn, rule):
             def inner_bwd(res, g):
                 aux_r, a = res
                 ref_fn = _REGISTRY[op].backends[REF].fn
+                pk = static.get("packed_k")
+                if pk is not None:
+                    # Replay ref on the unpacked dense view; the word
+                    # operand is non-differentiated (float0 by dtype).
+                    from repro.core.spikes import unpack_spikes
+                    ref_static = {k: v for k, v in static.items()
+                                  if k != "packed_k"}
+                    s0 = unpack_spikes(a[0], axis=-1,
+                                       dtype=jnp.float32)[..., :pk]
+                    _, pull = jax.vjp(
+                        lambda *ar: ref_fn(s0, *ar, **ref_static, **aux_r),
+                        *a[1:])
+                    return (jax.tree.map(_zero_cotangent, aux_r),
+                            _zero_cotangent(a[0])) + tuple(pull(g))
                 _, pull = jax.vjp(
                     lambda *ar: ref_fn(*ar, **static, **aux_r), *a)
                 return (jax.tree.map(_zero_cotangent, aux_r),) \
@@ -232,10 +267,19 @@ def _wrap_vjp(op: str, fn, rule):
 def _matmul_bwd(res, kwargs, g):
     """Transpose rule for ops whose math is `out = s @ w` with optional
     leading batch axes on s (spike_matmul, apec_matmul): ds = g @ w.T,
-    dw = sum over rows of s^T g — the ref oracle's exact cotangents."""
-    del kwargs
+    dw = sum over rows of s^T g — the ref oracle's exact cotangents.
+
+    A packed spike operand (static ``packed_k`` present) contributes dw
+    through its UNPACKED values and receives the float0 cotangent its
+    integer dtype mandates — pack is forward-only aux."""
     s, w = res
     gf = g.astype(jnp.float32)
+    pk = kwargs.get("packed_k")
+    if pk is not None:
+        from repro.core.spikes import unpack_spikes
+        sf = unpack_spikes(s, axis=-1, dtype=jnp.float32)[..., :pk]
+        dw = jnp.einsum("...mk,...mn->kn", sf, gf).astype(w.dtype)
+        return _zero_cotangent(s), dw
     ds = jnp.matmul(gf, w.astype(jnp.float32).T).astype(s.dtype)
     dw = jnp.einsum("...mk,...mn->kn", s.astype(jnp.float32), gf).astype(w.dtype)
     return ds, dw
@@ -243,7 +287,7 @@ def _matmul_bwd(res, kwargs, g):
 
 def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
              auto=True, supports=None, differentiable=False, vjp=None,
-             fallback=None, mesh_aware=False):
+             fallback=None, mesh_aware=False, payload=("dense",)):
     """Decorator: register `fn` as backend `name` for `op`.
 
     Gradient contract: pass ``differentiable=True`` when `jax.grad`
@@ -262,6 +306,10 @@ def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
     (default) keeps the backend off every sharded path; True admits it
     whenever `supports` passes per shard; a callable is an extra
     per-shard gate run on local shapes.
+
+    ``payload``: payload capability (see `Backend.payload`) — the default
+    ``("dense",)`` keeps the backend off packed-payload calls; declare
+    ``("packed",)`` for backends consuming uint32 spike words natively.
     """
     def deco(fn):
         if op not in _REGISTRY:
@@ -271,7 +319,8 @@ def register(op: str, name: str, *, platforms=ALL_PLATFORMS, priority=0,
             name=name, fn=wrapped, platforms=tuple(platforms),
             priority=priority, auto=auto, supports=supports,
             differentiable=differentiable or vjp is not None,
-            fallback=fallback, mesh_aware=mesh_aware)
+            fallback=fallback, mesh_aware=mesh_aware,
+            payload=tuple(payload))
         return fn
     return deco
 
@@ -478,6 +527,28 @@ def _fallback(op: str, wanted: str, reason: str) -> Backend:
     return _REGISTRY[op].backends[REF]
 
 
+def _walk_fallback_chain(op: str, spec: OpSpec, be: Backend,
+                         reason: Optional[str],
+                         reason_of) -> Tuple[Backend, Optional[str]]:
+    """Degrade along the declared fallback chain while `reason_of`
+    refuses, warning once per edge. Returns the last backend reached and
+    its reason (None iff some link accepted the call)."""
+    seen = {be.name}
+    while reason is not None and be.fallback is not None \
+            and be.fallback not in seen:
+        nxt = spec.backends.get(be.fallback)
+        if nxt is None:
+            break
+        _warn_once(
+            op, be.name, nxt.name,
+            f"exspike dispatch: backend {be.name!r} for op {op!r} "
+            f"unavailable ({reason}); degrading to {nxt.name!r}",
+            stacklevel=5)
+        seen.add(nxt.name)
+        be, reason = nxt, reason_of(nxt)
+    return be, reason
+
+
 # ---------------------------------------------------- hybrid resolution
 def _hybrid_route_pair(spec: OpSpec) -> Optional[Tuple[Backend, Backend]]:
     """(event_route, dense_route) for this platform: the highest-priority
@@ -488,7 +559,8 @@ def _hybrid_route_pair(spec: OpSpec) -> Optional[Tuple[Backend, Backend]]:
     platform = jax.default_backend()
     event = max(
         (b for b in spec.backends.values()
-         if "csr" in b.name and b.fallback and platform in b.platforms),
+         if "csr" in b.name and b.fallback and platform in b.platforms
+         and "dense" in b.payload),   # hybrid routes dense payloads only
         key=lambda b: b.priority, default=None)
     if event is None:
         return None
@@ -533,6 +605,11 @@ def _hybrid_resolution(spec: OpSpec, op: str, kwargs, reason_of,
     HYBRID_OPS) — the caller then falls through to auto selection."""
     occ = kwargs.get("occupancy")
     if op not in HYBRID_OPS or occ is None or getattr(occ, "ndim", 0) != 2:
+        return None
+    if kwargs.get("packed_k") is not None:
+        # Packed payloads route by the `payload` capability, not by
+        # density: the packed-csr family's bytes-moved advantage holds at
+        # every occupancy, so hybrid disengages (auto selection, tagged).
         return None
     pair = _hybrid_route_pair(spec)
     if pair is None:
@@ -597,8 +674,39 @@ def resolve_with_attribution(op: str, *args, mesh=None,
     return be, attribution
 
 
+def _unpack_shim(be: Backend, packed_k: int) -> Backend:
+    """Wrap a dense-payload backend so a packed call can reach it
+    EXPLICITLY: the uint32 words are unpacked to the logical dense spikes
+    at entry (f32 — the consumers' compute dtype) and the ``packed_k``
+    marker is consumed. The ``+unpack`` attribution suffix plus the
+    warn-once at the wrap site keep the densify visible — a packed
+    payload never silently reinterprets as dense math."""
+    from repro.core.spikes import unpack_spikes
+
+    @functools.wraps(be.fn)
+    def fn(s, *rest, packed_k=None, **kw):
+        dense = unpack_spikes(s, axis=-1, dtype=jnp.float32)
+        return be.fn(dense[..., :packed_k], *rest, **kw)
+    return dataclasses.replace(be, fn=fn, name=f"{be.name}+unpack")
+
+
 def _resolve_impl(op: str, *args, mesh=None,
                   **kwargs) -> Tuple[Backend, str]:
+    be, attribution = _resolve_payload_blind(op, *args, mesh=mesh, **kwargs)
+    packed_k = kwargs.get("packed_k")
+    if packed_k is not None and "packed" not in be.payload:
+        _warn_once(
+            op, "packed", be.name,
+            f"exspike dispatch: packed payload for op {op!r} leaving the "
+            f"packed-csr family; unpacking to dense for {be.name!r} "
+            f"(explicit unpack shim)", stacklevel=5, route="payload")
+        shim = _unpack_shim(be, packed_k)
+        return shim, shim.name + attribution[len(be.name):]
+    return be, attribution
+
+
+def _resolve_payload_blind(op: str, *args, mesh=None,
+                           **kwargs) -> Tuple[Backend, str]:
     spec = _REGISTRY[op]
     mesh = mesh if mesh is not None else ambient_mesh()
     n_shards = data_shard_count(mesh)
@@ -639,29 +747,24 @@ def _resolve_impl(op: str, *args, mesh=None,
             return attributed(_fallback(op, override, "not registered"),
                               override)
         reason = reason_of(be)
-        # Walk the declared fallback chain (pallas-csr -> pallas -> ...)
-        # before surrendering to ref, so a constraint failure degrades to
-        # the nearest comparable kernel, not all the way to the oracle.
-        seen = {be.name}
-        while reason is not None and be.fallback is not None \
-                and be.fallback not in seen:
-            nxt = spec.backends.get(be.fallback)
-            if nxt is None:
-                break
-            _warn_once(
-                op, be.name, nxt.name,
-                f"exspike dispatch: backend {be.name!r} for op {op!r} "
-                f"unavailable ({reason}); degrading to {nxt.name!r}",
-                stacklevel=4)
-            seen.add(nxt.name)
-            be, reason = nxt, reason_of(nxt)
+        # Walk the declared fallback chain (packed-csr -> pallas-csr ->
+        # pallas -> ...) before surrendering to ref, so a constraint
+        # failure degrades to the nearest comparable kernel, not all the
+        # way to the oracle.
+        be, reason = _walk_fallback_chain(op, spec, be, reason, reason_of)
         if reason is not None:
             return attributed(_fallback(op, be.name, reason), override)
         return attributed(be, override)
     platform = jax.default_backend()
+    # Payload filtering is silent, like platform filtering: a dense call
+    # never auto-selects a packed-only backend and vice versa (the shim
+    # wrap in `_resolve_impl` covers a packed call that finds no packed
+    # candidate at all — including the terminal ref fallback).
+    want_payload = "packed" if kwargs.get("packed_k") is not None else "dense"
     candidates = sorted(
         (b for b in spec.backends.values()
-         if b.auto and platform in b.platforms),
+         if b.auto and platform in b.platforms
+         and (want_payload in b.payload or b.name == REF)),
         key=lambda b: -b.priority)
     cap_failure = None
     for be in candidates:
@@ -673,6 +776,16 @@ def _resolve_impl(op: str, *args, mesh=None,
         if cap_failure is None:
             cap_failure = (be.name, reason)
     if cap_failure is not None:
+        if want_payload == "packed":
+            # No other packed candidate: degrade along the refused
+            # backend's DECLARED chain (packed-csr -> pallas-csr) so the
+            # call stays on the nearest comparable kernel — the caller's
+            # shim wrap makes the densify explicit.
+            be, reason = _walk_fallback_chain(
+                op, spec, spec.backends[cap_failure[0]], cap_failure[1],
+                reason_of)
+            if reason is None:
+                return attributed(be, cap_failure[0])
         # A capability failure (shape/dtype/mode/mesh gate) silently
         # degrading to the oracle would hide lost compression/kernel
         # coverage — warn. (Platform filtering stays silent.)
@@ -754,7 +867,8 @@ def table() -> str:
         bes = ", ".join(
             f"{b.name}(p{b.priority}{'' if b.auto else ',manual'}"
             f"{',grad' if b.differentiable else ''}"
-            f"{',mesh' if b.mesh_aware is not False else ''})"
+            f"{',mesh' if b.mesh_aware is not False else ''}"
+            f"{',packed' if 'packed' in b.payload else ''})"
             for b in sorted(spec.backends.values(), key=lambda b: -b.priority))
         lines.append(f"{op:14s} -> {bes}")
         pair = _hybrid_route_pair(spec) if op in HYBRID_OPS else None
@@ -845,13 +959,18 @@ register_op("lif_scan_occ", _lif_occ_example)
 @register("lif_scan_occ", REF, priority=0, differentiable=True,
           mesh_aware=True)
 def _lif_occ_ref(x, *, decay=0.5, v_th=1.0, soft_reset=True,
-                 surrogate_alpha=2.0):
+                 surrogate_alpha=2.0, packed=False):
     s = _lif_ref(x, decay=decay, v_th=v_th, soft_reset=soft_reset,
                  surrogate_alpha=surrogate_alpha)
     # One chunk-granular pre-pass; the tile map is its 16:1 aggregation
     # (identical to the fused kernel's emission, counts and all).
     chunks = jax.lax.stop_gradient(_ref_chunk_occupancy(s))
     occ = jnp.sum(chunks.reshape(-1, 16, chunks.shape[1]), axis=1)
+    if packed:
+        # Forward-only packed emission (oracle form: fire dense, then
+        # pack — value-identical to the fused kernel's in-VMEM packing).
+        from repro.core.spikes import pack_spikes_padded
+        return jax.lax.stop_gradient(pack_spikes_padded(s)), occ, chunks
     return s, occ, chunks
 
 
@@ -873,10 +992,10 @@ def _lif_occ_supports(x, **kwargs) -> Optional[str]:
 
 
 def _lif_occ_pallas(x, *, decay=0.5, v_th=1.0, soft_reset=True,
-                    surrogate_alpha=2.0):
+                    surrogate_alpha=2.0, packed=False):
     from repro.kernels import ops
     return ops.lif_occ(x, decay=decay, v_th=v_th, soft_reset=soft_reset,
-                       surrogate_alpha=surrogate_alpha)
+                       surrogate_alpha=surrogate_alpha, packed=packed)
 
 
 register("lif_scan_occ", "pallas-interpret", platforms=("cpu",), priority=1,
@@ -960,6 +1079,26 @@ register("spike_matmul", "pallas-csr", platforms=("tpu",), priority=25,
          mesh_aware=_csr_shard_gate)(_spike_matmul_csr)
 
 
+def _spike_matmul_packed(s, w, occupancy=None, packed_k=None):
+    # packed-csr: the spike operand stays uint32 words end to end; each
+    # occupied tile unpacks VMEM-resident inside the CSR grid step (see
+    # kernels/spike_matmul.spike_matmul_packed_csr_pallas). Dense input
+    # (packed_k=None) is packed at entry — parity-harness coverage.
+    from repro.kernels import ops
+    return ops.spike_matmul_packed(s, w, packed_k=packed_k,
+                                   occupancy=occupancy)
+
+
+register("spike_matmul", "packed-csr-interpret", platforms=("cpu",),
+         priority=3, auto=False, fallback="pallas-csr-interpret",
+         vjp=_matmul_bwd, mesh_aware=_csr_shard_gate,
+         payload=("packed",))(_spike_matmul_packed)
+register("spike_matmul", "packed-csr", platforms=("tpu",), priority=30,
+         fallback="pallas-csr", vjp=_matmul_bwd,
+         mesh_aware=_csr_shard_gate,
+         payload=("packed",))(_spike_matmul_packed)
+
+
 # ---------------------------------------------------------- apec_matmul
 def _apec_example(key):
     k1, k2 = jax.random.split(key)
@@ -1037,6 +1176,26 @@ register("apec_matmul", "pallas-csr-interpret", platforms=("cpu",),
 register("apec_matmul", "pallas-csr", platforms=("tpu",), priority=25,
          supports=_apec_csr_supports, fallback="pallas",
          vjp=_matmul_bwd, mesh_aware=_csr_shard_gate)(_apec_matmul_csr)
+
+
+def _apec_matmul_packed(s, w, *, g=2, occupancy=None, packed_k=None):
+    # packed-csr APEC: decomposition is already bitwise on uint32 words
+    # (apec_decompose_packed), so the payload never round-trips through
+    # f32 — union-CSR grid with in-VMEM unpack of both operands' tiles.
+    from repro.kernels import ops
+    return ops.apec_matmul_packed(s, w, g=g, packed_k=packed_k,
+                                  occupancy=occupancy)
+
+
+register("apec_matmul", "packed-csr-interpret", platforms=("cpu",),
+         priority=3, auto=False, supports=_apec_csr_supports,
+         fallback="pallas-csr-interpret", vjp=_matmul_bwd,
+         mesh_aware=_csr_shard_gate,
+         payload=("packed",))(_apec_matmul_packed)
+register("apec_matmul", "packed-csr", platforms=("tpu",), priority=30,
+         supports=_apec_csr_supports, fallback="pallas-csr",
+         vjp=_matmul_bwd, mesh_aware=_csr_shard_gate,
+         payload=("packed",))(_apec_matmul_packed)
 
 
 # ------------------------------------------------------------------ sdsa
@@ -1236,6 +1395,37 @@ register("econv", "pallas-csr", platforms=("tpu",), priority=25,
          fallback="pallas", vjp="ref", mesh_aware=_csr_shard_gate)(_econv_csr)
 
 
+def _econv_packed_supports(s, w, *, stride=1, padding="SAME", **kwargs):
+    del s, w, kwargs
+    if padding not in ("SAME", "VALID"):
+        return (f"packed im2col computes its own halos and supports "
+                f"SAME/VALID only, got {padding!r}")
+    if stride < 1:
+        return f"stride must be >= 1, got {stride}"
+    return None
+
+
+def _econv_packed_csr(s, w, *, stride=1, padding="SAME", occupancy=None,
+                      packed_k=None):
+    # packed-csr conv: im2col runs in the WORD domain (strided shifted
+    # slices of the padded word array — bit patterns are per-channel, so
+    # window extraction never repacks), then the packed CSR matmul. See
+    # ops.econv_packed for the weight relayout matching the word-aligned
+    # patch feature order.
+    from repro.kernels import ops
+    return ops.econv_packed(s, w, stride=stride, padding=padding,
+                            packed_k=packed_k, occupancy=occupancy)
+
+
+register("econv", "packed-csr-interpret", platforms=("cpu",), priority=3,
+         auto=False, supports=_econv_packed_supports,
+         fallback="pallas-csr-interpret", vjp="ref",
+         mesh_aware=_csr_shard_gate, payload=("packed",))(_econv_packed_csr)
+register("econv", "packed-csr", platforms=("tpu",), priority=30,
+         supports=_econv_packed_supports, fallback="pallas-csr", vjp="ref",
+         mesh_aware=_csr_shard_gate, payload=("packed",))(_econv_packed_csr)
+
+
 # ----------------------------------------------------------------- tconv
 # NOTE on naming: in this repo "TConv" (econv's ref backend) is the
 # traditional *forward* conv baseline of paper Fig. 1; the `tconv` op here
@@ -1315,7 +1505,15 @@ def _event_args(s, kw=None):
         occ = s.occupancy_for(128, 128)
         if occ is not None:
             kw["occupancy"] = occ
-        s = s.spikes
+        if s.is_packed:
+            # Packed payload: the words become the positional operand and
+            # the static packed_k marker routes resolution to backends
+            # declaring payload="packed" (non-declaring fallbacks get the
+            # explicit unpack shim, never a silent densify).
+            kw["packed_k"] = s.feature_size
+            s = s.packed
+        else:
+            s = s.spikes
     return s, kw
 
 
@@ -1325,12 +1523,16 @@ def lif_scan(x, *, decay=0.5, v_th=1.0, soft_reset=True, surrogate_alpha=2.0):
 
 
 def lif_scan_occ(x, *, decay=0.5, v_th=1.0, soft_reset=True,
-                 surrogate_alpha=2.0):
+                 surrogate_alpha=2.0, packed=False):
     """Fire + emit the occupancy maps: returns (spikes, (128,128) tile
     map, 8-row chunk map) — wrap in an EventTensor via
-    `models.layers.lif_fire_events`."""
+    `models.layers.lif_fire_events`. With ``packed=True`` the first
+    element is the uint32 word tensor instead (forward-only; the fused
+    kernel packs in-VMEM and takes the counts from word popcounts, so no
+    f32 spike tensor reaches HBM)."""
     return dispatch("lif_scan_occ", x, decay=decay, v_th=v_th,
-                    soft_reset=soft_reset, surrogate_alpha=surrogate_alpha)
+                    soft_reset=soft_reset, surrogate_alpha=surrogate_alpha,
+                    packed=packed)
 
 
 def spike_matmul(s, w):
@@ -1365,7 +1567,11 @@ def econv(s, w, *, stride=1, padding="SAME"):
         occ = conv_patch_occupancy(s, w.shape, stride, padding)
         if occ is not None:
             kw["occupancy"] = occ
-        s = s.spikes
+        if s.is_packed:
+            kw["packed_k"] = s.feature_size
+            s = s.packed
+        else:
+            s = s.spikes
     return dispatch("econv", s, w, **kw)
 
 

@@ -259,6 +259,80 @@ def _lif_occ_pallas(x, *, decay, v_th, soft_reset, block_m, block_n,
     )(x)
 
 
+def _lif_occ_packed_kernel(x_ref, p_ref, cnt_ref, v_ref, *, t_steps: int,
+                           decay: float, v_th: float, soft_reset: bool):
+    """Fire + PACK: while the spike tile is VMEM-resident for the scan,
+    emit it as uint32 words (bit i of word w = lane w*32+i, the
+    `core.spikes.pack_spikes` layout) and derive the per-tile event count
+    from the words' popcounts — occupancy becomes a free byproduct of
+    packing, and the f32 spike tile never reaches HBM at all (32x less
+    spike traffic out of the producer).
+
+    TPU layout note: the packed store's lane dim is block_n/32 (=4 at the
+    default 128); on real hardware a sublane-transposed store or an
+    8-word-wide block (block_n=256+) may lay out better — interpret mode
+    (all CI here) is layout-agnostic, so this keeps the canonical form.
+    """
+    v_ref[...] = jnp.zeros_like(v_ref)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+
+    def body(t, _):
+        v = v_ref[...] * decay + x_ref[t].astype(jnp.float32)
+        s = (v >= v_th).astype(jnp.float32)
+        if soft_reset:
+            v_ref[...] = v - s * v_th
+        else:
+            v_ref[...] = v * (1.0 - s)
+        bm, bn = s.shape
+        bits = s.reshape(bm, bn // 32, 32).astype(jnp.uint32)
+        words = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+        p_ref[t] = words
+        cnt_ref[t, 0, 0] = jnp.sum(
+            jax.lax.population_count(words).astype(jnp.int32))
+        return ()
+
+    jax.lax.fori_loop(0, t_steps, body, ())
+
+
+def lif_scan_occ_packed_pallas(x, *, decay: float = 0.5, v_th: float = 1.0,
+                               soft_reset: bool = True, block_m: int = 8,
+                               block_n: int = 128):
+    """Fused packed emission: x (T, M, N) -> (packed words
+    (T, M, N/32) uint32, counts (T, M/bm, N/bn) int32).
+
+    FORWARD-ONLY by contract (the packed payload is inference-mode event
+    transport; both outputs are integer-typed and the drive is
+    stop_gradient'ed — training paths run the differentiable dense
+    emission and pack nothing). N must tile by block_n (>= and a multiple
+    of 32), which the `ops.lif_occ` wrapper's 128-lane padding guarantees.
+    """
+    interpret = jax.default_backend() == "cpu"
+    x = jax.lax.stop_gradient(x)
+    t_steps, m, n = x.shape
+    if m % block_m or n % block_n or block_n % 32:
+        raise ValueError(f"(M,N)=({m},{n}) must tile by ({block_m},{block_n})"
+                         f" with block_n a multiple of 32")
+    kernel = functools.partial(
+        _lif_occ_packed_kernel, t_steps=t_steps, decay=decay, v_th=v_th,
+        soft_reset=soft_reset)
+    spec = pl.BlockSpec((t_steps, block_m, block_n), lambda i, j: (0, i, j))
+    p_spec = pl.BlockSpec((t_steps, block_m, block_n // 32),
+                          lambda i, j: (0, i, j))
+    cnt_spec = pl.BlockSpec((t_steps, 1, 1), lambda i, j: (0, i, j),
+                            memory_space=pltpu.SMEM)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[spec],
+        out_specs=(p_spec, cnt_spec),
+        out_shape=(jax.ShapeDtypeStruct((t_steps, m, n // 32), jnp.uint32),
+                   jax.ShapeDtypeStruct(
+                       (t_steps, m // block_m, n // block_n), jnp.int32)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
 def lif_scan_occ_pallas_sg(x, decay: float = 0.5, v_th: float = 1.0,
                            soft_reset: bool = True,

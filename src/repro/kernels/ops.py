@@ -14,11 +14,16 @@ import jax.numpy as jnp
 
 from repro.core.events import EventTensor
 from repro.core.spikes import (PACK, TileCSR, build_csr, pack_spikes,
-                               tile_occupancy, unpack_spikes)
-from .lif_scan import lif_scan_occ_pallas_sg, lif_scan_pallas_sg
+                               pack_spikes_padded, packed_tile_occupancy,
+                               packed_width, tile_occupancy, unpack_spikes)
+from .lif_scan import (lif_scan_occ_packed_pallas, lif_scan_occ_pallas_sg,
+                       lif_scan_pallas_sg)
 from .sdsa_kernel import (sdsa_causal_status_pallas, sdsa_packed,
                           sdsa_status_pallas)
-from .spike_matmul import (apec_matmul_csr_pallas, spike_matmul_csr_pallas,
+from .spike_matmul import (apec_matmul_csr_pallas,
+                           apec_matmul_packed_csr_pallas,
+                           spike_matmul_csr_pallas,
+                           spike_matmul_packed_csr_pallas,
                            spike_matmul_pallas)
 
 
@@ -55,9 +60,10 @@ def lif(x: jax.Array, decay: float = 0.5, v_th: float = 1.0,
 
 
 @functools.partial(jax.jit, static_argnames=("decay", "v_th", "soft_reset",
-                                              "surrogate_alpha"))
+                                              "surrogate_alpha", "packed"))
 def lif_occ(x: jax.Array, decay: float = 0.5, v_th: float = 1.0,
-            soft_reset: bool = True, surrogate_alpha: float = 2.0):
+            soft_reset: bool = True, surrogate_alpha: float = 2.0,
+            packed: bool = False):
     """Fused LIF that also emits the (128, 128)-tiled occupancy map of its
     own spike output — the full-event producer.
 
@@ -72,6 +78,15 @@ def lif_occ(x: jax.Array, decay: float = 0.5, v_th: float = 1.0,
     tiny count map, never a dense re-read of the spikes. Requires
     R % 8 == 0 (the kernel's row-chunk size; the dispatch `supports`
     gate falls back to ref otherwise).
+
+    ``packed=True`` switches to the FORWARD-ONLY fused pack emission:
+    the first return value is the uint32 word tensor
+    (T, ..., ceil(K/32)) instead of dense spikes — packed in-VMEM by the
+    same kernel pass that fires, with the counts taken from the words'
+    popcounts, so no f32 spike tensor ever reaches HBM. The K padding to
+    the lane tile never fires (zero drive keeps v below threshold), so
+    slicing the word axis to `packed_width(K)` leaves the exact words
+    `pack_spikes_padded` would produce, tail bits zero.
     """
     t = x.shape[0]
     k = x.shape[-1]
@@ -83,9 +98,15 @@ def lif_occ(x: jax.Array, decay: float = 0.5, v_th: float = 1.0,
         raise ValueError(f"middle axes {mid} (R={r}) must divide by 8")
     xr = x.reshape(t, r, k)
     xr, k_orig = _pad_to(xr, 2, 128)   # zero drive never fires: counts 0
-    s, cnt = lif_scan_occ_pallas_sg(xr, decay, v_th, soft_reset,
-                                    surrogate_alpha)
-    spikes = s[..., :k_orig].reshape(x.shape)
+    if packed:
+        p, cnt = lif_scan_occ_packed_pallas(xr, decay=decay, v_th=v_th,
+                                            soft_reset=soft_reset)
+        pw = packed_width(k_orig)
+        payload = p[..., :pw].reshape(x.shape[:-1] + (pw,))
+    else:
+        s, cnt = lif_scan_occ_pallas_sg(xr, decay, v_th, soft_reset,
+                                        surrogate_alpha)
+        payload = s[..., :k_orig].reshape(x.shape)
     # (T, R/8, KT) per-chunk counts -> (ceil(T*R/128), KT) matmul tiles:
     # flattened row chunk (t, a) sits at index t*(R/8)+a, so groups of 16
     # consecutive chunks are exactly the 128-row tiles (zero-padded tail
@@ -94,7 +115,7 @@ def lif_occ(x: jax.Array, decay: float = 0.5, v_th: float = 1.0,
     cnt2 = cnt.reshape(t * (r // 8), kt)
     cnt2, _ = _pad_to(cnt2, 0, 16)
     occ = jnp.sum(cnt2.reshape(-1, 16, kt), axis=1)
-    return (spikes, jax.lax.stop_gradient(occ),
+    return (payload, jax.lax.stop_gradient(occ),
             jax.lax.stop_gradient(cnt2))
 
 
@@ -463,3 +484,256 @@ def apec_matmul_csr(s, w: jax.Array, g: int = 2, *,
                                 block_n=block_n, block_k=block_k)
     out = out[:p_orig, :n_orig]
     return out.reshape(lead + (p, w.shape[-1])).astype(w.dtype)
+
+
+# -------------------------------------------------- packed-payload (PR 7)
+# The packed wrappers are the `packed-csr` backend family's entry points.
+# They accept EITHER a dense binary operand (packed_k=None — packed
+# internally, which is how the registry-enumerated parity harness covers
+# them with its dense f32 example inputs) OR pre-packed uint32 words with
+# `packed_k=` the logical channel count (how dispatch threads a packed
+# EventTensor's payload). Forward-only: gradients come from the dispatch
+# layer's ref-replay / `_matmul_bwd` contract, which unpacks first —
+# cotangents flow through the unpacked values, never through the words.
+
+
+def _packed_rows(s, packed_k, occupancy, block_m, block_k):
+    """Normalize the spike operand to flattened (R, KW) uint32 words.
+
+    Returns (words, logical_k, lead_shape, logical_rows, occupancy). The
+    dense entry stops gradients before packing (pack is forward-only
+    aux); pre-packed words are validated against `packed_width(packed_k)`
+    so a wrong-width payload is rejected loudly, never reinterpreted.
+    """
+    if isinstance(s, EventTensor):
+        if occupancy is None:
+            occupancy = s.occupancy_for(block_m, block_k)
+        if s.is_packed:
+            packed_k, s = s.feature_size, s.packed
+        else:
+            packed_k, s = None, s.spikes
+    lead = s.shape[:-2]
+    m = s.shape[-2]
+    if packed_k is None:
+        k = s.shape[-1]
+        p2 = pack_spikes_padded(jax.lax.stop_gradient(s).reshape(-1, k))
+        return p2, k, lead, m, occupancy
+    kw = s.shape[-1]
+    if kw != packed_width(packed_k):
+        raise ValueError(
+            f"packed operand {s.shape} carries {kw} words which does not "
+            f"cover packed_k={packed_k} (want {packed_width(packed_k)})")
+    return s.reshape(-1, kw), int(packed_k), lead, m, occupancy
+
+
+def _pad_packed_operands(p2, w, packed_k, block_m, block_n, block_k):
+    """Pad (R, KW) words and (K, N) weights to the packed tile grid.
+
+    Zero words never mark a tile occupied; weight rows pad to KW*32 so
+    the in-kernel unpack's phantom channels (always-zero bits) multiply
+    zero weights.
+    """
+    if w.shape[0] != packed_k:
+        raise ValueError(
+            f"weights have {w.shape[0]} rows, packed operand covers "
+            f"packed_k={packed_k} channels")
+    bkw = block_k // PACK
+    p2, m_orig = _pad_to(p2, 0, block_m)
+    p2, _ = _pad_to(p2, 1, bkw)
+    w2, _ = _pad_to(w, 0, p2.shape[1] * PACK)
+    w2, n_orig = _pad_to(w2, 1, block_n)
+    return p2, w2, m_orig, n_orig
+
+
+def _check_packed_map(occupancy, p2, block_m, bkw):
+    if occupancy.shape != (p2.shape[0] // block_m, p2.shape[1] // bkw):
+        raise ValueError(
+            f"occupancy map {occupancy.shape} does not match the padded "
+            f"({p2.shape[0] // block_m}, {p2.shape[1] // bkw}) packed tile "
+            f"grid — built for a different flattening or tiling")
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def _spike_matmul_packed_core(p2, w2, csr, *, block_m, block_n, block_k):
+    return spike_matmul_packed_csr_pallas(p2, w2, csr, block_m=block_m,
+                                          block_n=block_n, block_k=block_k)
+
+
+def spike_matmul_packed(s, w: jax.Array, *, packed_k: int | None = None,
+                        csr: TileCSR | None = None,
+                        occupancy: jax.Array | None = None,
+                        block_m: int = 128, block_n: int = 128,
+                        block_k: int = 128) -> jax.Array:
+    """Event-compacted spike matmul on the uint32-packed payload.
+
+    `s`: packed words (..., M, ceil(K/32)) with ``packed_k=K``, a packed
+    `EventTensor`, or a dense binary (..., M, K) operand (packed here).
+    Same CSR grid and work list as `spike_matmul_csr` — the tile indices
+    are payload-agnostic — but the spike-side HBM read is 1/32 the f32
+    route's, and each occupied tile unpacks VMEM-resident in-kernel.
+    A carried/explicit `occupancy` map skips the popcount pre-pass (its
+    (rows/128, ceil(K/128)) grid matches the packed word tiling exactly).
+    """
+    p2, packed_k, lead, m, occupancy = _packed_rows(
+        s, packed_k, occupancy, block_m, block_k)
+    n = w.shape[-1]
+    p2, w2, m_orig, n_orig = _pad_packed_operands(
+        p2, w, packed_k, block_m, block_n, block_k)
+    bkw = block_k // PACK
+    if csr is None:
+        if occupancy is None:
+            occupancy = packed_tile_occupancy(p2, block_m, block_k)
+        else:
+            _check_packed_map(occupancy, p2, block_m, bkw)
+        csr = _build_csr(occupancy, block_m, block_k)
+    csr.check_compatible(block_m, block_k,
+                         p2.shape[0] // block_m, p2.shape[1] // bkw)
+    out = _spike_matmul_packed_core(p2, w2, csr, block_m=block_m,
+                                    block_n=block_n, block_k=block_k)
+    out = out[:m_orig, :n_orig]
+    return out.reshape(lead + (m, n)) if lead else out
+
+
+@functools.partial(jax.jit, static_argnames=("g", "block_m", "block_n"))
+def _apec_decompose_packed_jit(p2, *, g, block_m, block_n):
+    from .apec_kernel import apec_decompose_packed
+    return apec_decompose_packed(p2, g, block_m=block_m, block_n=block_n)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("g", "block_m", "block_n", "block_k"))
+def _apec_matmul_packed_core(res2, ov2, w2, csr, occ_res, occ_ov, *, g,
+                             block_m, block_n, block_k):
+    return apec_matmul_packed_csr_pallas(res2, ov2, w2, g, csr, occ_res,
+                                         occ_ov, block_m=block_m,
+                                         block_n=block_n, block_k=block_k)
+
+
+def apec_matmul_packed(s, w: jax.Array, g: int = 2, *,
+                       packed_k: int | None = None,
+                       occupancy: jax.Array | None = None,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 128) -> jax.Array:
+    """Fused APEC matmul staying in the packed domain end to end.
+
+    The overlap/residual decomposition is already bitwise on uint32 words
+    (`apec_decompose_packed`), so a packed operand never round-trips
+    through f32: decompose packed -> popcount maps from the words ->
+    union-CSR kernel unpacking each occupied residual/overlap tile
+    in-VMEM. Contracts (union gate, carried-map semantics) mirror
+    `apec_matmul_csr`.
+    """
+    from .apec_kernel import apec_decompose_packed
+    p2, packed_k, lead, p_pos, occupancy = _packed_rows(
+        s, packed_k, occupancy, block_m, block_k)
+    if p2.shape[0] % g:
+        raise ValueError(f"positions {p2.shape[0]} not divisible by "
+                         f"group {g}")
+    if block_m % g:
+        raise ValueError(f"block_m {block_m} not divisible by group {g}")
+    wf = w.astype(jnp.float32)
+    p2, w2, p_orig, n_orig = _pad_packed_operands(
+        p2, wf, packed_k, block_m, block_n, block_k)
+    kw = p2.shape[1]
+    bkw = block_k // PACK
+    bn_dec = min(128, kw)
+    if kw % bn_dec:
+        bn_dec = bkw                      # bkw always divides the padding
+    # Largest tileable row block: the decompose grid shrinks accordingly,
+    # which is what keeps the per-step interpret overhead off the CPU
+    # wall clock (rows are padded to block_m, and g divides block_m, so
+    # the fallback chain always terminates). The jit wrapper caches the
+    # pallas trace — an eager interpret-mode pallas_call re-traces every
+    # call, which would put ~100ms of pure tracing on each APEC call.
+    bm_dec = next(b for b in (128, 64, 32, 16, 8)
+                  if p2.shape[0] % (g * b) == 0)
+    ov_p, res_p = _apec_decompose_packed_jit(p2, g=g, block_m=bm_dec,
+                                             block_n=bn_dec)
+    if occupancy is not None:
+        _check_packed_map(occupancy, p2, block_m, bkw)
+        csr = _build_csr(occupancy, block_m, block_k)
+        steps = (csr.tile_m_idx, csr.tile_k_idx)
+        gate = (occupancy[steps] * csr.valid).astype(jnp.int32)
+        occ_res_steps = occ_ov_steps = gate
+    else:
+        occ_res = packed_tile_occupancy(res_p, block_m, block_k)
+        occ_ov = packed_tile_occupancy(ov_p, block_m // g, block_k)
+        csr = _build_csr(occ_res + occ_ov, block_m, block_k)
+        steps = (csr.tile_m_idx, csr.tile_k_idx)
+        occ_res_steps = (occ_res[steps] * csr.valid).astype(jnp.int32)
+        occ_ov_steps = (occ_ov[steps] * csr.valid).astype(jnp.int32)
+    out = _apec_matmul_packed_core(res_p, ov_p, w2, csr, occ_res_steps,
+                                   occ_ov_steps, g=g, block_m=block_m,
+                                   block_n=block_n, block_k=block_k)
+    out = out[:p_orig, :n_orig]
+    return out.reshape(lead + (p_pos, w.shape[-1])).astype(w.dtype)
+
+
+def _conv_pads(size: int, k: int, stride: int, padding: str):
+    """(out_size, pad_lo, pad_hi) matching lax's SAME/VALID conventions."""
+    if padding == "SAME":
+        out = -(-size // stride)
+        total = max((out - 1) * stride + k - size, 0)
+        return out, total // 2, total - total // 2
+    out = (size - k) // stride + 1
+    return out, 0, 0
+
+
+def econv_packed(s, w: jax.Array, *, stride: int = 1,
+                 padding: str = "SAME", packed_k: int | None = None,
+                 occupancy: jax.Array | None = None) -> jax.Array:
+    """Event conv with the payload packed end to end.
+
+    im2col runs in the WORD domain: channels are the packed axis, so a
+    spatial window of the word array IS the packed patch — kh*kw strided
+    shifted slices of the zero-padded words concatenate into
+    (N*Ho*Wo, kh*kw*ciw) patch rows with feature order (kh, kw,
+    ci-words), and the weights are relaid to match: ci zero-padded to
+    ciw*32 (the phantom channels multiply zero weights), transposed to
+    (kh, kw, ci_pad, co). The packed CSR matmul consumes the patch words
+    directly.
+
+    A carried `occupancy` (the conv_patch_occupancy map of the DENSE
+    patch matrix) is honored only when ci % 32 == 0 — then the packed
+    patch k-tiling coincides with the dense one (the map is row-granular
+    across k-tiles, so feature order doesn't matter); otherwise the word
+    popcount pre-pass re-derives the map (32x cheaper than a dense scan).
+    """
+    if isinstance(s, EventTensor):
+        if s.is_packed:
+            packed_k, s = s.feature_size, s.packed
+        else:
+            s = s.spikes
+    if packed_k is None:
+        ci = s.shape[-1]
+        p = pack_spikes_padded(jax.lax.stop_gradient(s))
+    else:
+        ci = int(packed_k)
+        p = s
+        if p.shape[-1] != packed_width(ci):
+            raise ValueError(
+                f"packed conv input {p.shape} carries {p.shape[-1]} words "
+                f"which does not cover packed_k={ci}")
+    kh, kw_, ci_w, co = w.shape
+    if ci_w != ci:
+        raise ValueError(f"weights expect {ci_w} input channels, packed "
+                         f"operand covers {ci}")
+    n, h, wdt, ciw = p.shape
+    ho, pt, pb = _conv_pads(h, kh, stride, padding)
+    wo, pl_, pr = _conv_pads(wdt, kw_, stride, padding)
+    pp = jnp.pad(p, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+    slices = [
+        pp[:, dy:dy + (ho - 1) * stride + 1:stride,
+           dx:dx + (wo - 1) * stride + 1:stride, :]
+        for dy in range(kh) for dx in range(kw_)
+    ]
+    patches = jnp.concatenate(slices, axis=-1)      # (n, ho, wo, kh*kw*ciw)
+    k_eff = kh * kw_ * ciw * PACK
+    ci_pad = ciw * PACK
+    w2 = jnp.pad(w, ((0, 0), (0, 0), (0, ci_pad - ci), (0, 0)))
+    w2 = w2.reshape(kh * kw_ * ci_pad, co)
+    if occupancy is not None and ci % PACK:
+        occupancy = None               # dense-patch tiling doesn't align
+    out = spike_matmul_packed(patches.reshape(n * ho * wo, kh * kw_ * ciw),
+                              w2, packed_k=k_eff, occupancy=occupancy)
+    return out.reshape(n, ho, wo, co)

@@ -41,7 +41,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.spikes import TileCSR, occupancy_to_csr, tile_occupancy
+from repro.core.spikes import (PACK, TileCSR, occupancy_to_csr,
+                               packed_tile_occupancy, tile_occupancy)
 
 
 def _spike_matmul_kernel(occ_ref, s_ref, w_ref, out_ref, acc_ref, *,
@@ -188,6 +189,209 @@ def spike_matmul_csr_pallas(
         out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
         interpret=interpret,
     )(csr.tile_m_idx, csr.tile_k_idx, csr.occ, s, w)
+
+
+# ------------------------------------------------------- packed CSR grid
+# The `packed-csr` family: the spike operand arrives as uint32 words
+# (32 lanes per word — 1/32 the HBM read of the f32 operand) and each
+# occupied tile is unpacked VMEM-RESIDENT, inside the grid step that
+# already holds it for the dot: a broadcast-compare against the 32 bit
+# masks, never an HBM round-trip through f32. Weight traffic, grid
+# compaction, accumulate/flush logic are identical to the f32 CSR kernels
+# above — only the spike-side DMA shrinks.
+def _unpack_tile(words, block_k: int):
+    """(bm, bk/32) uint32 -> (bm, bk) f32 {0,1}: broadcast-compare each
+    word against the 32 single-bit masks (little-endian lane order,
+    matching `core.spikes.pack_spikes`)."""
+    bm = words.shape[0]
+    masks = jnp.uint32(1) << jnp.arange(PACK, dtype=jnp.uint32)
+    bits = (words[:, :, None] & masks[None, None, :]) != 0
+    return bits.reshape(bm, block_k).astype(jnp.float32)
+
+
+def _spike_matmul_packed_csr_kernel(row_ref, kidx_ref, occ_ref,
+                                    p_ref, w_ref, out_ref, acc_ref, *,
+                                    block_k: int):
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    row = row_ref[t]
+
+    @pl.when((t == 0) | (row != row_ref[jnp.maximum(t - 1, 0)]))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[t] > 0)
+    def _accumulate():
+        s_tile = _unpack_tile(p_ref[...], block_k)
+        acc_ref[...] += jnp.dot(
+            s_tile, w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when((t == n_t - 1) | (row_ref[jnp.minimum(t + 1, n_t - 1)] != row))
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def spike_matmul_packed_csr_pallas(
+    p: jax.Array,
+    w: jax.Array,
+    csr: TileCSR | None = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Event-compacted matmul on a PACKED spike operand.
+
+    p: (M, K/32) uint32 words of a binary (M, K) matrix; w: (K, N) ->
+    (M, N). The packed operand's k-tile blocks are (block_m, block_k/32)
+    words addressed by the same scalar-prefetched tile indices as the f32
+    kernel — the work list is payload-agnostic. `csr` built here from the
+    words' popcounts if not supplied (32x cheaper than the dense pre-pass,
+    same counts exactly).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, kw = p.shape
+    k2, n = w.shape
+    if block_k % PACK:
+        raise ValueError(f"block_k {block_k} not a multiple of {PACK}")
+    bkw = block_k // PACK
+    if kw * PACK != k2:
+        raise ValueError(
+            f"packed operand ({m},{kw}) words does not cover w rows {k2} "
+            f"(want {k2 // PACK} words — pad both to the tile boundary)")
+    if m % block_m or kw % bkw or n % block_n:
+        raise ValueError(
+            f"(M,KW,N)=({m},{kw},{n}) must tile by ({block_m},{bkw},{block_n})")
+    if csr is None:
+        csr = occupancy_to_csr(packed_tile_occupancy(p, block_m, block_k),
+                               tiling=(block_m, block_k))
+    csr.check_compatible(block_m, block_k, m // block_m, kw // bkw)
+    if csr.n_rows != m // block_m:
+        raise ValueError(
+            f"csr has {csr.n_rows} m-tile rows, input needs {m // block_m}")
+
+    kernel = functools.partial(_spike_matmul_packed_csr_kernel,
+                               block_k=block_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n // block_n, csr.n_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, bkw),
+                         lambda j, t, row, kidx, occ: (row[t], kidx[t])),
+            pl.BlockSpec((block_k, block_n),
+                         lambda j, t, row, kidx, occ: (kidx[t], j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda j, t, row, kidx, occ: (row[t], j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=interpret,
+    )(csr.tile_m_idx, csr.tile_k_idx, csr.occ, p, w)
+
+
+def _apec_matmul_packed_csr_kernel(row_ref, kidx_ref, occ_res_ref,
+                                   occ_ov_ref, res_ref, ov_ref, w_ref,
+                                   out_ref, acc_ref, acc_ov_ref, *, g: int,
+                                   block_k: int):
+    """Packed twin of `_apec_matmul_csr_kernel`: both spike operands
+    (residual and overlap) arrive as uint32 words and unpack in-VMEM per
+    occupied step; weight DMA, union gating, and the fused group-broadcast
+    epilogue are unchanged."""
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    row = row_ref[t]
+
+    @pl.when((t == 0) | (row != row_ref[jnp.maximum(t - 1, 0)]))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ov_ref[...] = jnp.zeros_like(acc_ov_ref)
+
+    @pl.when(occ_res_ref[t] > 0)
+    def _acc_res():
+        acc_ref[...] += jnp.dot(
+            _unpack_tile(res_ref[...], block_k), w_ref[...],
+            preferred_element_type=jnp.float32)
+
+    @pl.when(occ_ov_ref[t] > 0)
+    def _acc_ov():
+        acc_ov_ref[...] += jnp.dot(
+            _unpack_tile(ov_ref[...], block_k), w_ref[...],
+            preferred_element_type=jnp.float32)
+
+    @pl.when((t == n_t - 1) | (row_ref[jnp.minimum(t + 1, n_t - 1)] != row))
+    def _flush():
+        bmg, bn = acc_ov_ref.shape
+        ov_rep = jnp.broadcast_to(acc_ov_ref[...][:, None, :],
+                                  (bmg, g, bn)).reshape(bmg * g, bn)
+        out_ref[...] = (acc_ref[...] + ov_rep).astype(out_ref.dtype)
+
+
+def apec_matmul_packed_csr_pallas(
+    res: jax.Array,
+    ov: jax.Array,
+    w: jax.Array,
+    g: int,
+    csr: TileCSR,
+    occ_res: jax.Array,
+    occ_ov: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused APEC matmul over the event-compacted grid, packed operands.
+
+    res: (M, K/32) uint32 residual words; ov: (M/g, K/32) uint32 overlap
+    words; w: (K, N). Same union-CSR / per-step gating contract as
+    `apec_matmul_csr_pallas` — see there.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, kw = res.shape
+    mg, kwg = ov.shape
+    k2, n = w.shape
+    if block_k % PACK:
+        raise ValueError(f"block_k {block_k} not a multiple of {PACK}")
+    bkw = block_k // PACK
+    assert kw == kwg and kw * PACK == k2 and mg * g == m, \
+        (res.shape, ov.shape, w.shape, g)
+    if block_m % g:
+        raise ValueError(f"block_m {block_m} not divisible by group {g}")
+    if m % block_m or kw % bkw or n % block_n:
+        raise ValueError(
+            f"(M,KW,N)=({m},{kw},{n}) must tile by ({block_m},{bkw},{block_n})")
+
+    kernel = functools.partial(_apec_matmul_packed_csr_kernel, g=g,
+                               block_k=block_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(n // block_n, csr.n_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, bkw),
+                         lambda j, t, row, kidx, o1, o2: (row[t], kidx[t])),
+            pl.BlockSpec((block_m // g, bkw),
+                         lambda j, t, row, kidx, o1, o2: (row[t], kidx[t])),
+            pl.BlockSpec((block_k, block_n),
+                         lambda j, t, row, kidx, o1, o2: (kidx[t], j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda j, t, row, kidx, o1, o2: (row[t], j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
+                        pltpu.VMEM((block_m // g, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
+        interpret=interpret,
+    )(csr.tile_m_idx, csr.tile_k_idx, occ_res, occ_ov, res, ov, w)
 
 
 def _apec_matmul_csr_kernel(row_ref, kidx_ref, occ_res_ref, occ_ov_ref,

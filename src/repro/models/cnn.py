@@ -35,11 +35,14 @@ from .layers import hybrid_scope, lif_fire_events
 Params = Dict[str, Any]
 
 
-def _fire(drive: jax.Array, lif: LIFConfig) -> EventTensor:
+def _fire(drive: jax.Array, lif: LIFConfig,
+          packed: bool = False) -> EventTensor:
     """Fire stage with fused metadata emission: spikes + occupancy leave
     the LIF together (`lif_scan_occ`), so the next conv's event kernel
-    consumes the carried map instead of re-scanning the activation."""
-    return lif_fire_events(drive, lif)
+    consumes the carried map instead of re-scanning the activation.
+    `packed=True` emits uint32 words as the canonical payload (no f32
+    spike tensor between layers; inference-only)."""
+    return lif_fire_events(drive, lif, packed=packed)
 
 
 def _conv_seq(s, w: jax.Array, stride: int = 1) -> jax.Array:
@@ -114,19 +117,23 @@ def _vgg11_body(cfg, p, x, collect_stats):
     q, scale = quantize(x, cfg.direct_coding_bits)
     s = jnp.broadcast_to((q.astype(jnp.float32) * scale)[None],
                          (t,) + x.shape)   # direct-coded drive, each step
+    packed = getattr(cfg.spiking, "packed", False)
     stats: List[jax.Array] = []
     for layer, w in zip(VGG11_LAYERS, p["convs"]):
         if layer.kind == "maxpool":
-            # pooling keeps the carried map alive (tile-map dilation)
+            # pooling keeps the carried map alive (tile-map dilation);
+            # a packed payload pools its words bitwise-OR.
             s = max_pool_events(s, layer.pool)
             continue
         drive = _conv_seq(s, w)
-        s = _fire(drive, lif)             # binary spikes + occupancy map
+        s = _fire(drive, lif, packed)     # binary spikes + occupancy map
         if collect_stats:
-            stats.append(s.spikes)
+            stats.append(s.dense())
     # EAFC head (OPT3): event-driven avgpool+FC over every timestep.
+    # `.dense()` is the one explicit unpack point for a packed payload
+    # (eafc has no packed backend).
     logits = jnp.mean(jax.vmap(lambda st: eafc(st, p["fc"],
-                                               cfg.fc_pool))(s.spikes),
+                                               cfg.fc_pool))(s.dense()),
                       axis=0)
     return (logits, stats) if collect_stats else logits
 
@@ -168,22 +175,25 @@ def _resnet18_body(cfg, p, x, collect_stats):
     xin = jnp.broadcast_to((q.astype(jnp.float32) * scale)[None],
                            (t,) + x.shape)
     drive = _conv_seq(xin, p["stem"])
-    s = _fire(drive, lif)
-    stats: List[jax.Array] = [s.spikes] if collect_stats else []
+    packed = getattr(cfg.spiking, "packed", False)
+    s = _fire(drive, lif, packed)
+    stats: List[jax.Array] = [s.dense()] if collect_stats else []
     for blk in p["blocks"]:
         st0 = blk["stride"]
         h = _conv_seq(s, blk["conv1"], stride=st0)
-        h = _fire(h, lif)
+        h = _fire(h, lif, packed)
         h2 = _conv_seq(h, blk["conv2"])
         # Residual Spike SRAM path: shortcut drives added pre-fire (the
         # sum is membrane drive, not spikes — metadata re-emits at _fire).
+        # The identity shortcut is a drive-summand, so it goes through
+        # `.dense()` — an explicit unpack, never a silent densify.
         short = _conv_seq(s, blk["proj"], stride=st0) if "proj" in blk \
-            else s.spikes
-        s = _fire(h2 + short, lif)
+            else s.dense()
+        s = _fire(h2 + short, lif, packed)
         if collect_stats:
-            stats.append(s.spikes)
+            stats.append(s.dense())
     logits = jnp.mean(jax.vmap(lambda ss: eafc(ss, p["fc"],
-                                               cfg.fc_pool))(s.spikes),
+                                               cfg.fc_pool))(s.dense()),
                       axis=0)
     return (logits, stats) if collect_stats else logits
 
@@ -212,6 +222,7 @@ def _segnet_body(cfg, p, x, collect_stats):
     t = cfg.spiking.t_steps
     q, scale = quantize(x, cfg.direct_coding_bits)
     s = jnp.broadcast_to((q.astype(jnp.float32) * scale)[None], (t,) + x.shape)
+    packed = getattr(cfg.spiking, "packed", False)
     stats: List[jax.Array] = []
     mp_total = jnp.zeros(())
     for i, (layer, w) in enumerate(zip(SEGNET_LAYERS, p["convs"])):
@@ -223,7 +234,7 @@ def _segnet_body(cfg, p, x, collect_stats):
         if last:
             return (jnp.mean(drive, axis=0), stats) if collect_stats \
                 else jnp.mean(drive, axis=0)
-        s = _fire(drive, lif)
+        s = _fire(drive, lif, packed)
         if collect_stats:
-            stats.append(s.spikes)
+            stats.append(s.dense())
     raise AssertionError("unreachable")

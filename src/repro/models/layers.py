@@ -111,7 +111,8 @@ def lif_fire(x: jax.Array, lif_cfg: LIFConfig) -> jax.Array:
                     surrogate_alpha=lif_cfg.surrogate_alpha)
 
 
-def lif_fire_events(x: jax.Array, lif_cfg: LIFConfig) -> EventTensor:
+def lif_fire_events(x: jax.Array, lif_cfg: LIFConfig,
+                    packed: bool = False) -> EventTensor:
     """Fire AND carry the event metadata: the full-event producer.
 
     Routes through `lif_scan_occ`, whose Pallas backend emits the
@@ -120,12 +121,24 @@ def lif_fire_events(x: jax.Array, lif_cfg: LIFConfig) -> EventTensor:
     returned `EventTensor` flows to the next layer's event op, which
     skips its own dense occupancy pre-pass; the map is stop-gradient aux,
     so `jax.grad` matches the dense-spike forward exactly.
+
+    `packed=True` makes the uint32 spike words the canonical payload:
+    the fused kernel packs in the same VMEM pass that popcounts (the
+    occupancy map is a free byproduct of packing), the returned
+    EventTensor is packed-only (spikes=None — no f32 spike tensor ever
+    materializes between layers), and dispatch routes it to `packed-csr`
+    backends. Forward-only: the words are stop-gradient aux, so packed
+    mode is an inference path (training keeps dense spikes).
     """
     from repro.kernels.dispatch import dispatch
     s, occ, chunks = dispatch("lif_scan_occ", x, decay=lif_cfg.decay,
                               v_th=lif_cfg.v_th,
                               soft_reset=lif_cfg.soft_reset,
-                              surrogate_alpha=lif_cfg.surrogate_alpha)
+                              surrogate_alpha=lif_cfg.surrogate_alpha,
+                              packed=packed)
+    if packed:
+        return EventTensor(None, occ, chunks=chunks, packed=s,
+                           feature_size=x.shape[-1])
     return EventTensor(s, occ, chunks=chunks)
 
 
@@ -159,7 +172,9 @@ def mlp_apply(p: Params, x: jax.Array, spiking: bool,
     if isinstance(x, EventTensor):
         from repro.kernels import dispatch as _d
         h = _d.spike_matmul(x, p["w_gate"]) + _d.spike_matmul(x, p["w_up"])
-        h = lif_fire_events(h, lif_cfg)
+        # Packedness propagates: a packed input re-fires packed, so the
+        # hidden spikes also never materialize as f32.
+        h = lif_fire_events(h, lif_cfg, packed=x.is_packed)
         return _d.spike_matmul(h, p["w_down"])
     if spiking:
         h = x @ (p["w_gate"].astype(x.dtype))

@@ -71,21 +71,24 @@ def _spikingformer_body(p, x, n_heads, spiking_cfg, collect_stats):
     # pooling both carry it forward, and each econv consumes it instead
     # of re-deriving occupancy from the activation it was just handed.
     from repro.core.econv import econv, tconv
+    packed = getattr(spiking_cfg, "packed", False)
     for i, w in enumerate(p["sps"]):
         tb = s.shape[:2]
         flat = s.reshape((-1,) + s.shape[2:])
         drive = tconv(flat, w) if i == 0 else econv(flat, w)
         drive = drive.reshape(tb + drive.shape[1:])
-        s = lif_fire_events(drive, lif)
+        s = lif_fire_events(drive, lif, packed=packed)
         if i in (1, 2):
-            s = max_pool_events(s, 2)
+            s = max_pool_events(s, 2)    # packed payload pools bitwise-OR
         if collect_stats:
-            stats.append(s.spikes)
+            stats.append(s.dense())
 
     dim = s.shape[-1]
     n_tok = s.shape[2] * s.shape[3]
     tokens = s.reshape(t, b, n_tok, dim)         # (T,B,N,D), map survives
-    x_mp = tokens.spikes                          # membrane stream
+    # The membrane residual stream is continuous-valued from here on —
+    # `.dense()` is the explicit unpack at the SPS/transformer boundary.
+    x_mp = tokens.dense()
 
     for blk in p["blocks"]:
         # SSA: q/k/v spikes -> Attention Core (non-causal OR form). The
@@ -104,11 +107,14 @@ def _spikingformer_body(p, x, n_heads, spiking_cfg, collect_stats):
             stats.append(attn)
         x_mp = x_mp + attn @ blk["w_o"]
         # Spiking MLP (FFN): full-event — both fires carry their maps and
-        # both projections consume them through the registry matmul.
-        h = lif_fire_events(x_mp, lif)
-        h = lif_fire_events(dispatch.spike_matmul(h, blk["w_fc1"]), lif)
+        # both projections consume them through the registry matmul. In
+        # packed mode both fires emit uint32 words and the projections
+        # route to the packed-csr family (no f32 spikes in between).
+        h = lif_fire_events(x_mp, lif, packed=packed)
+        h = lif_fire_events(dispatch.spike_matmul(h, blk["w_fc1"]), lif,
+                            packed=packed)
         if collect_stats:
-            stats.append(h.spikes)
+            stats.append(h.dense())
         x_mp = x_mp + dispatch.spike_matmul(h, blk["w_fc2"])
 
     feats = jnp.mean(lif_fire(x_mp, lif), axis=(0, 2))      # rate + token avg

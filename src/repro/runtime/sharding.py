@@ -267,7 +267,8 @@ def event_rows_axes(mesh: Mesh, rows: int) -> Tuple[str, ...]:
 
 
 def per_shard_occupied_tiles(s, n_shards: int, block_m: int = 128,
-                             block_k: int = 128) -> list:
+                             block_k: int = 128, *,
+                             packed_k: int | None = None) -> list:
     """Occupied-tile count each row shard of `s` owns — the event-load
     signal `runtime.straggler.occupancy_imbalance` summarizes.
 
@@ -277,10 +278,24 @@ def per_shard_occupied_tiles(s, n_shards: int, block_m: int = 128,
     locally. Splitting the global occupancy map's tile rows instead would
     misattribute load whenever per-shard rows are not a block_m multiple
     (e.g. 512 rows over 8 shards: 4 tile rows split 8 ways reports half
-    the shards empty when all carry equal load)."""
+    the shards empty when all carry equal load).
+
+    `packed_k` marks `s` as uint32 spike words (trailing axis = words):
+    per-shard counts come from word popcounts (`packed_tile_occupancy`),
+    identical to the dense counts — no unpack."""
     import jax.numpy as jnp
     from repro.kernels import ops
     s2 = np.asarray(s).reshape(-1, s.shape[-1])
+    if packed_k is not None:
+        from repro.core.spikes import packed_tile_occupancy
+        out = []
+        for chunk in np.array_split(s2, n_shards, axis=0):
+            pad = (-chunk.shape[0]) % block_m
+            if pad:
+                chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            out.append(int((np.asarray(packed_tile_occupancy(
+                jnp.asarray(chunk), block_m, block_k)) > 0).sum()))
+        return out
     return [int((np.asarray(ops.padded_occupancy(
                 jnp.asarray(chunk), block_m, block_k)) > 0).sum())
             for chunk in np.array_split(s2, n_shards, axis=0)]
@@ -317,6 +332,15 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     the trimmed eager grid survives sharding without gathering any
     global occupancy map.
 
+    A packed `s` (packed-only `EventTensor`, or raw uint32 words with
+    `packed_k=` in kwargs) shards its WORDS over the same row axes — the
+    per-shard work lists from `shard_occupancy_to_csr` feed the
+    packed-csr kernels directly, because the carried (128, 128) map's
+    k-tiling coincides with the word tiling (ceil(ceil(K/32)/4) ==
+    ceil(K/128)) and the 128-row shard-tile gate counts logical rows
+    either way. Resolution routes by payload: packed shards land on the
+    `packed-csr` family or degrade through the explicit unpack shim.
+
     `with_report=True` additionally returns the routing/straggler report:
     resolved backend + attribution, occupancy provenance
     (``occupancy_source``: carried / csr_stack / rederived), and (for
@@ -331,7 +355,13 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     if isinstance(s, EventTensor):
         if occupancy is None:
             occupancy = s.occupancy_for(128, 128)
-        s = s.spikes
+        if s.is_packed:
+            kwargs = dict(kwargs)
+            kwargs["packed_k"] = s.feature_size
+            s = s.packed
+        else:
+            s = s.spikes
+    packed_k = kwargs.get("packed_k")
 
     axes = event_rows_axes(mesh, s.shape[0])
     n_shards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
@@ -365,7 +395,7 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
                "occupancy_source": occupancy_source}
         if n_shards > 1 and not isinstance(s, jax.core.Tracer):
             rep["occupancy"] = occupancy_imbalance(
-                per_shard_occupied_tiles(s, n_shards),
+                per_shard_occupied_tiles(s, n_shards, packed_k=packed_k),
                 routes=_per_shard_routes(attribution))
         return rep
 
@@ -412,8 +442,12 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     row_spec = P(lead, *([None] * (s.ndim - 1)))
     w_spec = P(*([None] * w.ndim))
 
+    # Which CSR family the resolved backend must belong to for pre-built
+    # work lists to feed it (word tiling == dense tiling, so the SAME
+    # `shard_occupancy_to_csr` compaction serves both payloads).
+    csr_family = "packed-csr" if packed_k is not None else "pallas-csr"
     if occupancy is not None and csr_stack is None \
-            and op == "spike_matmul" and be.name.startswith("pallas-csr") \
+            and op == "spike_matmul" and be.name.startswith(csr_family) \
             and not isinstance(occupancy, jax.core.Tracer):
         # Concrete carried map -> per-shard TRIMMED work lists, built from
         # the tiny map alone (the whole point: no dense pre-pass, no
@@ -429,7 +463,7 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     else:
         occupancy_source = "rederived"
 
-    if csr_stack is not None and not be.name.startswith("pallas-csr"):
+    if csr_stack is not None and not be.name.startswith(csr_family):
         # Degraded off the CSR family (mesh gate / capability): the
         # pre-built work lists can't feed the resolved kernel. Say so —
         # the caller paid for the eager pre-pass and would otherwise
@@ -450,6 +484,9 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
         def body(sl, wl, *carrs):
             local = TileCSR(*[a[0] for a in carrs],
                             csr_stack.tiling, csr_stack.map_shape)
+            if packed_k is not None:
+                return ops.spike_matmul_packed(sl, wl, packed_k=packed_k,
+                                               csr=local)
             return ops.spike_matmul_csr(sl, wl, local)
 
         fn = shard_map(body, mesh=mesh,
@@ -459,7 +496,10 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
         # The raw csr wrapper has no autodiff rule (the registry attaches
         # one per backend); give this pass-through the SAME gradient
         # contract the csr backends declare — the matmul transpose rule
-        # on the global operands.
+        # on the global operands (packed words get a float0 cotangent;
+        # dw replays through the unpacked view).
+        bwd_static = {"packed_k": packed_k} if packed_k is not None else {}
+
         @jax.custom_vjp
         def run(s_, w_):
             return fn(s_, w_, *csr_arrays)
@@ -468,7 +508,7 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
             return fn(s_, w_, *csr_arrays), (s_, w_)
 
         def run_bwd(res, g):
-            return tuple(dispatch._matmul_bwd(res, {}, g))
+            return tuple(dispatch._matmul_bwd(res, bwd_static, g))
 
         run.defvjp(run_fwd, run_bwd)
         out = run(s, w)
@@ -497,7 +537,14 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
                        out_specs=row_spec)
         out = fn(s, w, occupancy)
     else:
+        registered = be.name in dispatch.backend_names(op)
+
         def body(sl, wl):
+            if not registered:
+                # The unpack shim (packed payload degraded off the
+                # packed-csr family) is synthesized, never registered —
+                # pin its fn directly.
+                return be.fn(sl, wl, **kwargs)
             return dispatch.call_backend(op, be.name, sl, wl, **kwargs)
 
         fn = shard_map(body, mesh=mesh, in_specs=(row_spec, w_spec),

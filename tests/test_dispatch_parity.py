@@ -218,6 +218,24 @@ def test_grad_parity_lif_hard_reset_and_alpha(soft_reset, alpha):
                                atol=GRAD_ATOL)
 
 
+@pytest.mark.parametrize("dtype", [jnp.bool_, jnp.int8],
+                         ids=["bool", "int8"])
+@pytest.mark.parametrize("op", ["spike_matmul", "apec_matmul", "econv",
+                                "tconv"])
+def test_spike_ops_preserve_narrow_input_dtypes(op, dtype):
+    """Binary event maps arrive as bool/int8 from quantized producers;
+    dispatch entry must NOT silently upcast them (any promotion happens
+    inside the op that needs it) and the activation output must come
+    back in the weight dtype regardless of the spike storage dtype."""
+    args, kwargs = dispatch.example_inputs(op, jax.random.PRNGKey(0))
+    s, w = args[0], args[1]
+    expect = dispatch.dispatch(op, *args, **kwargs)
+    got = dispatch.dispatch(op, s.astype(dtype), *args[1:], **kwargs)
+    assert got.dtype == w.dtype
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=ATOL)
+
+
 def test_sdsa_ops_handle_non_tile_multiple_token_counts():
     """Token counts whose sublane padding is not a block_n multiple
     (e.g. 384 > 256) must still run on the packed kernels — the wrappers
