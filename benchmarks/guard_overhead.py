@@ -1,0 +1,130 @@
+"""Guard-policy overhead: audit/repair vs off across the paper sparsities.
+
+Rows ``guard/<payload>/<mode>/s<pct>`` time the same jitted
+``spike_matmul`` dispatch (carried occupancy map) traced under each
+EXSPIKE_GUARD mode, dense-f32 and uint32-packed payloads, at the
+sparsity_sweep levels on its clustered generator. Each row's fields
+carry the mode-vs-off ratio judged against the self-measured clone
+noise band (`common.time_interleaved` protocol — separately-jitted
+clones of the OFF program time 2-7% apart on this host, which is what
+"within x%" has to mean here).
+
+The audit-cost contract this pins (kernels/README.md "Guarded
+execution"): on the packed path the audit is a per-word popcount
+against the map (~1/32 of the dense payload bytes) plus a scalar-gated
+NaN-poison epilogue, and must stay within 5% of guard-off at the
+paper's 90% sparsity point — the ``headline`` row records that verdict
+(``contract=0.05``). Dense-payload audit reads the full payload once
+(any-nonzero per tile) and is reported, not bounded. Traces here are
+UNWATCHED: no `watch_guard_events` at trace time, so the jitted
+programs are effect-free — exactly the production configuration (an
+attached host callback would cost ~2x per call; see the guard-policy
+notes in kernels/dispatch.py).
+
+Committed as BENCH_PR8.json by the CI guard job.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spikes import pack_spikes
+from repro.kernels import dispatch, ops
+from .common import NOISE_BAND_FLOOR, csv_row, noise_band, time_interleaved
+from .sparsity_sweep import K, M, N, SPARSITIES, clustered_spikes
+
+HEADLINE_SPARSITY = 0.90
+CONTRACT = 0.05              # packed-path audit overhead bound at headline
+
+
+def _traced(mode: str, packed: bool, x, occ, w):
+    """One jitted dispatch traced under `mode` (the guard binds at
+    resolution = trace time), warmed on the given operands."""
+    kw = {"packed_k": K} if packed else {}
+
+    def f(x_, o_, w_):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            return dispatch.dispatch("spike_matmul", x_, w_,
+                                     occupancy=o_, **kw)
+    fn = jax.jit(f)
+    with dispatch.use_guard(mode):
+        jax.block_until_ready(fn(x, occ, w))
+    return fn
+
+
+def run() -> list[str]:
+    rows = []
+    platform = jax.default_backend()
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    headline: dict[str, str] = {}
+    for payload in ("dense", "packed"):
+        for sparsity in SPARSITIES:
+            key = jax.random.PRNGKey(int(sparsity * 1000))
+            s = clustered_spikes(key, M, K, sparsity)
+            x = pack_spikes(s) if payload == "packed" else s
+            occ = ops.padded_occupancy(s)
+            fns = {
+                name: (lambda fn=_traced(mode, payload == "packed",
+                                         x, occ, w): fn(x, occ, w))
+                for name, mode in (("off", "off"), ("audit", "audit"),
+                                   ("repair", "repair"), ("off2", "off"),
+                                   ("audit2", "audit"))
+            }
+            best, samples = time_interleaved(fns, iters=24)
+            band = noise_band(samples, (("off2", "off"),
+                                        ("audit2", "audit")))
+            pct = int(sparsity * 100)
+            for mode in ("audit", "repair"):
+                ratio = best[mode] / best["off"]
+                fields = (f"platform={platform};"
+                          f"off_us={best['off'] * 1e6:.1f};"
+                          f"{mode}_vs_off={ratio:.3f};"
+                          f"overhead={ratio - 1.0:+.3f};"
+                          f"noise_band={band:.3f}")
+                if payload == "packed" and mode == "audit" \
+                        and sparsity == HEADLINE_SPARSITY:
+                    met = int(ratio - 1.0
+                              <= CONTRACT + max(band, NOISE_BAND_FLOOR))
+                    fields += f";contract={CONTRACT};contract_met={met}"
+                    headline = {"ratio": f"{ratio:.3f}",
+                                "band": f"{band:.3f}", "met": str(met)}
+                rows.append(csv_row(f"guard/{payload}/{mode}/s{pct}",
+                                    best[mode] * 1e6, fields))
+    rows.append(csv_row(
+        "guard/headline/packed_audit_s90", 0.0,
+        f"audit_vs_off={headline.get('ratio', 'nan')};"
+        f"noise_band={headline.get('band', 'nan')};contract={CONTRACT};"
+        f"contract_met={headline.get('met', '0')};platform={platform}"))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_PR8-schema JSON: the guard "
+                         "modes, audited ops, contract verdict, and rows")
+    args = ap.parse_args()
+    rows = run()
+    print("\n".join(rows))
+    if args.json:
+        head = next(r for r in rows if r.startswith("guard/headline"))
+        with open(args.json, "w") as f:
+            json.dump({"platform": jax.default_backend(),
+                       "guard_modes": list(dispatch.GUARD_MODES),
+                       "guarded_ops": list(dispatch.GUARDED_OPS),
+                       "support_audited_ops":
+                           list(dispatch._SUPPORT_AUDITED_OPS),
+                       "contract":
+                           {"packed_audit_max_overhead": CONTRACT,
+                            "at_sparsity": HEADLINE_SPARSITY,
+                            "headline_row": head},
+                       "rows": rows}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,8 +41,9 @@ import traceback
 
 def _suites():
     from . import (e2e_event, fig2_econv_vs_tconv, fig7_apec, fig8_breakdown,
-                   fig9_cpu, hybrid_sweep, kernel_backends, roofline,
-                   sparsity_sweep, table1_resources, table2_throughput)
+                   fig9_cpu, guard_overhead, hybrid_sweep, kernel_backends,
+                   roofline, sparsity_sweep, table1_resources,
+                   table2_throughput)
     return [
         ("fig2", fig2_econv_vs_tconv.run),
         ("fig7", fig7_apec.run),
@@ -66,6 +67,8 @@ def _suites():
         # (single-device model stacks + 8-way mesh rows)
         ("hybrid", hybrid_sweep.run),
         ("hybrid_mesh", hybrid_sweep.run_mesh_rows),
+        # EXSPIKE_GUARD audit/repair vs off (dense + packed payloads)
+        ("guard", guard_overhead.run),
     ]
 
 

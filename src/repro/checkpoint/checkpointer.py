@@ -30,6 +30,14 @@ import numpy as np
 
 _COMMIT = "_COMMITTED"
 
+# Everything a corrupt/truncated/vanished checkpoint can raise out of
+# `restore`: short reads surface as IOError (size/CRC checks below), but
+# np.load on a mangled header can also throw EOFError / KeyError /
+# pickle errors, and a malformed manifest ValueError. `restore_latest`
+# catches THIS tuple so any corruption walks back to an older snapshot
+# instead of crashing the resume.
+CORRUPTION_ERRORS = (OSError, ValueError, KeyError, EOFError)
+
 # numpy can't serialize ml_dtypes (bf16, fp8...) natively: store a same-width
 # integer view plus the logical dtype name in the manifest.
 _VIEW_FOR = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
@@ -67,21 +75,42 @@ def save(directory: str, step: int, tree: Any,
         manifest = {"step": step, "treedef": str(treedef), "leaves": []}
         for i, arr in enumerate(host_leaves):
             fname = f"leaf_{i:05d}.npy"
+            path = os.path.join(tmp_dir, fname)
             enc, dtype_name = _encode(arr)
-            np.save(os.path.join(tmp_dir, fname), enc)
+            # fsync each leaf before the commit marker exists: a crash
+            # between rename and writeback must never leave a COMMITTED
+            # checkpoint with half-flushed payload bytes.
+            with open(path, "wb") as f:
+                np.save(f, enc)
+                f.flush()
+                os.fsync(f.fileno())
             manifest["leaves"].append({
                 "file": fname,
                 "shape": list(arr.shape),
                 "dtype": dtype_name,
+                "nbytes": os.path.getsize(path),
                 "crc32": zlib.crc32(np.ascontiguousarray(enc).tobytes()),
             })
         with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
         with open(os.path.join(tmp_dir, _COMMIT), "w") as f:
             f.write("ok")
+            f.flush()
+            os.fsync(f.fileno())
         if os.path.exists(ckpt_dir):
             shutil.rmtree(ckpt_dir)
         os.rename(tmp_dir, ckpt_dir)
+        # Durable rename: fsync the parent directory entry too.
+        try:
+            dfd = os.open(directory, os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
 
     t = threading.Thread(target=_write, daemon=True)
     t.start()
@@ -99,7 +128,9 @@ def restore(ckpt_dir: str, target_tree: Any,
     """Load into the structure of `target_tree`, applying `shardings`
     (a matching tree of jax.sharding.Sharding, or None for host arrays).
 
-    Raises on checksum mismatch or structural drift.
+    Raises on checksum mismatch, truncation, or structural drift — every
+    corruption mode surfaces as one of `CORRUPTION_ERRORS`, never a
+    silently short or garbage tree.
     """
     with open(os.path.join(ckpt_dir, "manifest.json")) as f:
         manifest = json.load(f)
@@ -113,7 +144,21 @@ def restore(ckpt_dir: str, target_tree: Any,
     out = []
     for i, (meta, tgt, shd) in enumerate(
             zip(manifest["leaves"], leaves, shard_leaves)):
-        arr = np.load(os.path.join(ckpt_dir, meta["file"]))
+        path = os.path.join(ckpt_dir, meta["file"])
+        expected_bytes = meta.get("nbytes")
+        if expected_bytes is not None \
+                and os.path.getsize(path) != expected_bytes:
+            raise IOError(
+                f"leaf {i} is {os.path.getsize(path)} bytes, manifest "
+                f"promises {expected_bytes} — truncated checkpoint")
+        try:
+            arr = np.load(path)
+        except Exception as e:
+            # np.load on a mangled file raises a zoo of types (EOFError,
+            # ValueError, pickle errors...); normalize so callers handle
+            # one corruption surface.
+            raise IOError(f"leaf {i} unreadable ({type(e).__name__}: {e}) "
+                          f"— corrupt checkpoint") from e
         crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
         if crc != meta["crc32"]:
             raise IOError(f"leaf {i} checksum mismatch — corrupt checkpoint")

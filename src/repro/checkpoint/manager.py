@@ -67,12 +67,15 @@ class CheckpointManager:
     # ------------------------------------------------------------ restore
     def restore_latest(self, target_tree: Any, shardings: Any = None,
                        ) -> tuple[Optional[int], Any]:
-        """Try newest-first; skip corrupt checkpoints (logged, not fatal)."""
+        """Walk newest-first to the newest VALID snapshot; any corruption
+        (truncated/byte-flipped/vanished leaf, mangled manifest — the
+        full `checkpointer.CORRUPTION_ERRORS` surface) skips to an older
+        checkpoint, logged, never fatal."""
         for step in reversed(self.steps()):
             path = os.path.join(self.dir, f"step_{step:09d}")
             try:
                 tree = checkpointer.restore(path, target_tree, shardings)
                 return step, tree
-            except (IOError, ValueError) as e:   # corrupt -> try older
+            except checkpointer.CORRUPTION_ERRORS as e:  # corrupt -> older
                 print(f"[ckpt] skipping step {step}: {e}")
         return None, target_tree

@@ -519,6 +519,272 @@ def watch_resolutions():
         _RESOLUTION_WATCHERS.remove(rec)
 
 
+# ------------------------------------------------------------ guard policy
+# The event stack rides on trusted metadata: carried occupancy maps gate
+# which tiles the CSR kernels visit, and packed uint32 words ARE the
+# payload. An under-counting or stale map silently drops spike
+# contributions — wrong numerics with no exception. EXSPIKE_GUARD (or the
+# `use_guard` context) threads a trust policy through every matmul-form
+# dispatch that carries a map:
+#
+#   off    — (default) trust the metadata, zero added work, attribution
+#            strings unchanged;
+#   audit  — verify the carried map is a TRUE UPPER BOUND of the payload
+#            support before running the backend. Packed payloads: a
+#            per-word popcount against the map (~1/32 of the dense
+#            bytes). Dense payloads: an exact per-tile any-nonzero check.
+#            A concrete violation raises GuardViolationError; a traced
+#            one (under jit) NaN-poisons the float outputs — a loud
+#            sentinel downstream NaN guards catch (data-dependent raises
+#            can't cross the jit boundary, and host callbacks are too
+#            expensive for the hot path; traces built under an active
+#            `watch_guard_events` additionally record the violation);
+#   repair — a violated invariant stops trusting the metadata: the call
+#            recomputes on the trusted-payload route (words unpacked, map
+#            dropped, ref oracle) with warn-once `<be>+repaired`
+#            attribution — never a silent wrong answer.
+#
+# Upper bound, not equality: propagated maps (conv windows, pooling)
+# legitimately over-count, so only "support where the map claims empty"
+# is a violation — over-counts are a performance fault, not a
+# correctness fault, and never flag. See "Guarded execution" in
+# kernels/README.md for the per-op audit-cost contract.
+GUARD_ENV_VAR = "EXSPIKE_GUARD"
+GUARD_MODES = ("off", "audit", "repair")
+# Ops the guard wraps (the matmul-form consumers of a carried map). The
+# payload-support audit runs where the first operand IS the matrix the
+# map tiles; econv's map covers the im2col patch matrix (different
+# rows/K from the raw input), so its audit is the static grid check —
+# materializing patches just to audit would cost kh*kw payload reads.
+GUARDED_OPS = HYBRID_OPS
+_SUPPORT_AUDITED_OPS = ("spike_matmul", "apec_matmul")
+_GUARD: list = []            # stack pushed by use_guard()
+
+
+class GuardViolationError(ValueError):
+    """A carried occupancy map failed the upper-bound invariant (payload
+    support in a tile the map claims empty) or arrived on the wrong tile
+    grid for its payload (stale / wrong tiling)."""
+
+
+def guard_mode() -> str:
+    """Active guard policy: innermost `use_guard` frame, else the
+    EXSPIKE_GUARD env var, else "off". Consulted at RESOLUTION time
+    (trace time under jit) — like EXSPIKE_BACKEND, flipping it does not
+    re-trace already-compiled functions."""
+    if _GUARD:
+        return _GUARD[-1]
+    env = os.environ.get(GUARD_ENV_VAR, "").strip().lower()
+    if not env:
+        return "off"
+    if env not in GUARD_MODES:
+        raise ValueError(
+            f"{GUARD_ENV_VAR}={env!r}: expected one of {GUARD_MODES}")
+    return env
+
+
+@contextlib.contextmanager
+def use_guard(mode: str):
+    """Scoped guard policy (see the "guard policy" block above)."""
+    if mode not in GUARD_MODES:
+        raise ValueError(
+            f"guard mode {mode!r}: expected one of {GUARD_MODES}")
+    _GUARD.append(mode)
+    try:
+        yield
+    finally:
+        _GUARD.pop()
+
+
+# Observers appended by `watch_guard_events`: one record per detected
+# violation — {"op", "backend", "kind", "mode", "action", "attribution",
+# "detail"}. Concrete violations append at call time; traced ones append
+# at RUN time through `jax.debug.callback` (block on the result before
+# asserting on the list).
+_GUARD_WATCHERS: list = []
+
+
+@contextlib.contextmanager
+def watch_guard_events():
+    rec: list = []
+    _GUARD_WATCHERS.append(rec)
+    try:
+        yield rec
+    finally:
+        _GUARD_WATCHERS.remove(rec)
+
+
+def _guard_record(event: dict) -> None:
+    for rec in _GUARD_WATCHERS:
+        rec.append(dict(event))
+
+
+def _guard_grid(op: str, args: tuple, packed_k,
+                kwargs: dict) -> Optional[Tuple[int, int]]:
+    """Expected (MT, KT) 128x128 tile grid of the carried map for this
+    payload — the same flattening `ops.padded_occupancy` and the fused
+    emission use (rows = prod(leading dims), K = logical features). For
+    econv the map tiles the im2col patch matrix, so the grid comes from
+    the conv geometry. None: geometry unknown, skip the static check."""
+    s = args[0]
+    if op == "econv":
+        if len(args) < 2 or getattr(s, "ndim", 0) < 4:
+            return None
+        kh, kw_, ci, _ = (int(d) for d in args[1].shape)
+        h, w_ = int(s.shape[-3]), int(s.shape[-2])
+        stride = int(kwargs.get("stride", 1))
+        padding = kwargs.get("padding", "SAME")
+        if padding == "SAME":
+            ho, wo = -(-h // stride), -(-w_ // stride)
+        elif padding == "VALID":
+            ho, wo = (h - kh) // stride + 1, (w_ - kw_) // stride + 1
+        else:
+            return None
+        rows = int(np.prod(s.shape[:-3])) * ho * wo
+        k = ci * kh * kw_
+    else:
+        rows = int(np.prod(s.shape[:-1]))
+        k = int(packed_k) if packed_k is not None else int(s.shape[-1])
+    return (-(-rows // 128), -(-k // 128))
+
+
+def _support_violation(s, occupancy, packed_k):
+    """Scalar bool: the payload has support in a tile the carried map
+    claims empty. Exact, not sampled — detection must be total for the
+    guard's contract; the packed form reads ~1/32 of the dense bytes
+    (popcount per word), the dense form one comparison pass."""
+    mt, kt = (int(d) for d in occupancy.shape)
+    empty = occupancy == 0
+    if packed_k is not None:
+        from repro.core.spikes import PACK, popcount
+        words = s.reshape(-1, s.shape[-1])
+        r, nw = (int(d) for d in words.shape)
+        wpt = 128 // PACK               # uint32 words per 128-col k-tile
+        words = jnp.pad(words, ((0, mt * 128 - r), (0, kt * wpt - nw)))
+        counts = popcount(words).astype(jnp.int32) \
+            .reshape(mt, 128, kt, wpt).sum(axis=(1, 3))
+        support = counts > 0
+    else:
+        x = s.reshape(-1, s.shape[-1])
+        r, k = (int(d) for d in x.shape)
+        nz = jnp.pad(x != 0, ((0, mt * 128 - r), (0, kt * 128 - k)))
+        support = jnp.any(nz.reshape(mt, 128, kt, 128), axis=(1, 3))
+    return jnp.any(support & empty)
+
+
+def _repair_route(op: str, args: tuple, kwargs: dict):
+    """The guard's safe route: trust only the payload — unpack words,
+    drop the map / work list, run the ref oracle (dense math, the
+    gradient oracle — a repaired call keeps the op's grad contract)."""
+    kw = {k: v for k, v in kwargs.items()
+          if k not in ("occupancy", "packed_k", "csr")}
+    s = args[0]
+    pk = kwargs.get("packed_k")
+    if pk is not None:
+        from repro.core.spikes import unpack_spikes
+        s = unpack_spikes(s, axis=-1, dtype=jnp.float32)[..., :pk]
+    return _REGISTRY[op].backends[REF].fn(s, *args[1:], **kw)
+
+
+def _guard_shim(be: Backend, op: str, mode: str) -> Backend:
+    """Wrap a resolved backend in the active guard policy. The backend
+    name/attribution are unchanged (the guard is policy, not routing);
+    detections surface through GuardViolationError / `watch_guard_events`
+    records / the warn-once `<be>+repaired` repair attribution."""
+    inner = be.fn
+    repaired = f"{be.name}+repaired"
+
+    @functools.wraps(inner)
+    def fn(*args, **kwargs):
+        occ = kwargs.get("occupancy")
+        pk = kwargs.get("packed_k")
+        if occ is None or getattr(occ, "ndim", 0) != 2:
+            return inner(*args, **kwargs)
+        expected = _guard_grid(op, args, pk, kwargs)
+        if expected is not None and tuple(occ.shape) != expected:
+            # Shapes are static: this check is free and may raise even
+            # under jit.
+            detail = (f"carried map grid {tuple(occ.shape)} != expected "
+                      f"{expected} for the payload (stale/wrong tiling)")
+            if mode == "audit":
+                _guard_record({"op": op, "backend": be.name, "kind": "grid",
+                               "mode": mode, "action": "raise",
+                               "attribution": be.name, "detail": detail})
+                raise GuardViolationError(f"guard[{op}/{be.name}]: {detail}")
+            _guard_record({"op": op, "backend": be.name, "kind": "grid",
+                           "mode": mode, "action": "repair",
+                           "attribution": repaired, "detail": detail})
+            _warn_once(op, be.name, repaired,
+                       f"exspike guard: {detail}; repairing op {op!r} on "
+                       f"the trusted-payload route ({repaired!r})",
+                       route="guard")
+            return _repair_route(op, args, kwargs)
+        if op not in _SUPPORT_AUDITED_OPS:
+            return inner(*args, **kwargs)
+        violated = _support_violation(args[0], occ, pk)
+        detail = ("carried map claims empty tiles that hold payload "
+                  "support (occupancy undercount / corrupted payload)")
+        event = {"op": op, "backend": be.name, "kind": "undercount",
+                 "mode": mode, "detail": detail}
+        if not isinstance(violated, jax.core.Tracer):
+            if not bool(violated):
+                return inner(*args, **kwargs)
+            if mode == "audit":
+                _guard_record({**event, "action": "raise",
+                               "attribution": be.name})
+                raise GuardViolationError(f"guard[{op}/{be.name}]: {detail}")
+            _guard_record({**event, "action": "repair",
+                           "attribution": repaired})
+            _warn_once(op, be.name, repaired,
+                       f"exspike guard: {detail}; repairing op {op!r} on "
+                       f"the trusted-payload route ({repaired!r})",
+                       route="guard")
+            return _repair_route(op, args, kwargs)
+        # Traced map/payload: a data-dependent raise can't cross the jit
+        # boundary, and a host callback can't ride in the hot path — the
+        # mere PRESENCE of the callback effect in the jitted program
+        # costs ~700us/call on CPU (measured: it serializes dispatch),
+        # voiding the audit-cost contract even when the branch never
+        # fires. So the traced path stays effect-free:
+        #   audit  — NaN-poison the (float) outputs when violated. The
+        #            wrong answer the undercount would cause becomes a
+        #            loud sentinel the downstream NaN guards catch (the
+        #            serve loop quarantines non-finite logits; loss
+        #            checks trip) instead of a plausible wrong number.
+        #   repair — lax.cond branches to the trusted-payload route
+        #            on-device; the answer is correct either way.
+        # The watcher record (attribution for tests/CI) is attached only
+        # when `watch_guard_events` is active AT TRACE TIME — a cached
+        # trace keeps whatever observability it was built with.
+        action = "record" if mode == "audit" else "repair"
+        attribution = be.name if mode == "audit" else repaired
+
+        def _on_violation():
+            _guard_record({**event, "action": action, "traced": True,
+                           "attribution": attribution})
+            _warn_once(op, be.name, attribution,
+                       f"exspike guard: {detail} (op {op!r}, detected "
+                       f"at run time under jit"
+                       + ("; repaired on the trusted-payload route"
+                          if mode == "repair" else "") + ")",
+                       route="guard")
+        if _GUARD_WATCHERS:          # trace-time binding, see above
+            jax.lax.cond(violated,
+                         lambda: jax.debug.callback(_on_violation),
+                         lambda: None)
+        if mode == "audit":
+            out = inner(*args, **kwargs)
+            poison = jnp.where(violated, jnp.nan, 1.0)  # *1.0 is exact,
+            return jax.tree.map(                        # fuses into the
+                lambda x: x * poison.astype(x.dtype)    # matmul epilogue
+                if jnp.issubdtype(x.dtype, jnp.inexact) else x, out)
+        return jax.lax.cond(
+            violated,
+            lambda: _repair_route(op, args, kwargs),
+            lambda: inner(*args, **kwargs))
+    return dataclasses.replace(be, fn=fn)
+
+
 def _fallback(op: str, wanted: str, reason: str) -> Backend:
     _warn_once(
         op, wanted, REF,
@@ -701,7 +967,15 @@ def _resolve_impl(op: str, *args, mesh=None,
             f"packed-csr family; unpacking to dense for {be.name!r} "
             f"(explicit unpack shim)", stacklevel=5, route="payload")
         shim = _unpack_shim(be, packed_k)
-        return shim, shim.name + attribution[len(be.name):]
+        attribution = shim.name + attribution[len(be.name):]
+        be = shim
+    # Guard policy (audit/repair) wraps OUTERMOST so the audit sees the
+    # payload exactly as carried (packed words before any unpack shim).
+    # Off (the default) adds nothing — attributions stay byte-identical.
+    mode = guard_mode()
+    if mode != "off" and op in GUARDED_OPS \
+            and kwargs.get("occupancy") is not None:
+        be = _guard_shim(be, op, mode)
     return be, attribution
 
 

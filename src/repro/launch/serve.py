@@ -31,16 +31,34 @@ from repro.models import lm
 
 @dataclasses.dataclass
 class Request:
+    """One generation request with an explicit lifecycle.
+
+    `state` walks pending -> running -> done|failed; every exit path
+    (completion, deadline, decode fault, retry exhaustion) records a
+    terminal state and releases the slot — a request is never silently
+    lost. `failure_cause` keeps the LAST fault even when a retry later
+    succeeds (observability of flaky slots); terminal failure iff
+    ``state == "failed"``.
+    """
     rid: int
     prompt: List[int]
     max_new: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # --- guarded-execution fields ---
+    deadline_s: Optional[float] = None   # wall-clock budget from submit()
+    max_retries: int = 2                 # quarantine re-enqueue budget
+    state: str = "pending"               # pending|running|done|failed
+    failure_cause: Optional[str] = None  # last fault seen (terminal or not)
+    retries: int = 0
+    submitted_at: Optional[float] = None
+    not_before: float = 0.0              # backoff gate (monotonic clock)
 
 
 class Server:
     def __init__(self, cfg: LMConfig, n_slots: int = 4, max_seq: int = 256,
-                 spiking: Optional[bool] = None, seed: int = 0, mesh=None):
+                 spiking: Optional[bool] = None, seed: int = 0, mesh=None,
+                 clock=time.monotonic, backoff_s: float = 0.05):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -51,6 +69,9 @@ class Server:
         self.pos = np.zeros(n_slots, np.int32)       # per-slot position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.pending: List[Request] = []
+        self.finished: List[Request] = []            # done AND failed
+        self._clock = clock                          # injectable for tests
+        self.backoff_s = backoff_s                   # retry backoff base
         # The continuous-batching decode step traces under the mesh, so
         # spike matmuls inside resolve mesh-aware (per-shard capability
         # checks on the slot batch — the axis a deployment shards over
@@ -62,20 +83,94 @@ class Server:
         self.steps_executed = 0
 
     def submit(self, req: Request):
+        if req.submitted_at is None:
+            req.submitted_at = self._clock()
+        req.state = "pending"
         self.pending.append(req)
 
-    def _assign_slots(self):
+    # ------------------------------------------------------ slot lifecycle
+    def _reset_slot_state(self, i: int):
+        """Zero slot i's decode state (leaves are stacked
+        ``(n_groups, n_slots, ...)`` — slot batch = axis 1). In spiking
+        mode this is O(d) per layer (the SDSA status vectors), the cheap
+        turnover the serve docstring advertises; the dense KV cache pays
+        its size. Re-prefilling the prompt rebuilds the state."""
+        def zero(x):
+            if hasattr(x, "ndim") and x.ndim >= 2 \
+                    and x.shape[1] == self.n_slots:
+                return x.at[:, i].set(jnp.zeros_like(x[:, i]))
+            return x
+        self.state = jax.tree.map(zero, self.state)
+        self.pos[i] = 0
+
+    def _finish(self, i: int, req: Request, state: str,
+                cause: Optional[str] = None):
+        """Terminal exit: record the outcome and release the slot."""
+        req.state = state
+        req.done = state == "done"
+        if cause is not None:
+            req.failure_cause = cause
+        self.finished.append(req)
+        if i >= 0:
+            self.slot_req[i] = None
+
+    def _quarantine(self, i: int, cause: str):
+        """Non-terminal fault on slot i: reset the slot, re-enqueue the
+        request with bounded retries + exponential backoff, or fail it
+        terminally when the retry budget is spent. Partial output is
+        discarded — a retried request regenerates from its prompt."""
+        req = self.slot_req[i]
+        self.slot_req[i] = None
+        self._reset_slot_state(i)
+        if req is None:
+            return
+        req.failure_cause = cause
+        if req.retries >= req.max_retries:
+            self._finish(-1, req, "failed", cause)
+            return
+        req.retries += 1
+        req.generated = []
+        req.state = "pending"
+        req.not_before = self._clock() + self.backoff_s * (2 ** (req.retries - 1))
+        self.pending.append(req)
+
+    def _expire_deadlines(self, now: float):
+        """Deadline is terminal on every path: active slots are released,
+        queued requests never admitted."""
+        for i, req in enumerate(self.slot_req):
+            if req is not None and req.deadline_s is not None \
+                    and now - req.submitted_at > req.deadline_s:
+                self._finish(i, req, "failed", "deadline")
+        kept = []
+        for req in self.pending:
+            if req.deadline_s is not None \
+                    and now - req.submitted_at > req.deadline_s:
+                self._finish(-1, req, "failed", "deadline")
+            else:
+                kept.append(req)
+        self.pending = kept
+
+    def _assign_slots(self, now: float):
+        admissible = [r for r in self.pending if r.not_before <= now]
         for i in range(self.n_slots):
-            if self.slot_req[i] is None and self.pending:
-                req = self.pending.pop(0)
+            if self.slot_req[i] is None and admissible:
+                req = admissible.pop(0)
+                self.pending.remove(req)
                 self.slot_req[i] = req
+                req.state = "running"
                 self.pos[i] = 0
                 # Reset this slot's state by feeding prompt tokens below.
                 req._feed = list(req.prompt)   # tokens still to prefill
 
     def step(self):
-        """One batched decode step across all active slots."""
-        self._assign_slots()
+        """One batched decode step across all active slots. Every fault
+        has an exit path: a raising decode step quarantines the batch
+        (bounded retries), non-finite logits quarantine their slot, and
+        deadline overruns fail terminally — no slot leaks, no request is
+        dropped without a recorded cause."""
+        now = self._clock()
+        self._expire_deadlines(now)
+        self._assign_slots(now)
         tokens = np.zeros(self.n_slots, np.int32)
         active = np.zeros(self.n_slots, bool)
         for i, req in enumerate(self.slot_req):
@@ -90,28 +185,47 @@ class Server:
         if not active.any():
             return False
         pos = jnp.int32(int(self.pos.max()))    # aligned stepping
-        logits, self.state = self._step(self.params, self.state,
-                                        jnp.asarray(tokens), pos)
+        try:
+            logits, new_state = self._step(self.params, self.state,
+                                           jnp.asarray(tokens), pos)
+            logits_np = np.asarray(logits)
+        except Exception as e:   # decode fault: the batch can't attribute
+            # a raising step to one slot, so every active slot quarantines
+            # (healthy requests spend one retry and regenerate).
+            for i, req in enumerate(self.slot_req):
+                if req is not None:
+                    self._quarantine(i, f"decode_error:{type(e).__name__}")
+            return True
+        self.state = new_state
         self.steps_executed += 1
-        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        finite = np.isfinite(logits_np).all(axis=-1)
+        next_tokens = np.argmax(logits_np, axis=-1)
         for i, req in enumerate(self.slot_req):
             if req is None:
+                continue
+            if not finite[i]:
+                # NaN/inf logits: poisoned slot state or params. Reset
+                # the slot and re-enqueue — never emit a poisoned token.
+                self._quarantine(i, "nan_logits")
                 continue
             self.pos[i] += 1
             if not req._feed:                   # generating phase
                 req.generated.append(int(next_tokens[i]))
                 if len(req.generated) >= req.max_new \
                         or self.pos[i] >= self.max_seq - 1:
-                    req.done = True
-                    self.slot_req[i] = None     # release slot
+                    self._finish(i, req, "done")
         return True
 
     def run_until_drained(self, max_steps: int = 10_000):
-        done: List[Request] = []
+        """Drive until no request is active or pending (or `max_steps`).
+        Returns the finished requests — done and terminally failed."""
         for _ in range(max_steps):
-            if not self.step() and not self.pending:
-                break
-        return done
+            stepped = self.step()
+            if not stepped:
+                if not self.pending:
+                    break
+                time.sleep(0.005)      # everyone backing off: let it lapse
+        return self.finished
 
 
 def main():

@@ -1,0 +1,210 @@
+"""Deterministic, seedable fault injectors for the guarded-execution layer.
+
+Every injector is pure numpy over host copies (never in-place on device
+arrays), keyed by an integer seed, and returns the corrupted value plus
+the injected coordinates — so a test can assert the guard detected
+EXACTLY the fault it planted. The taxonomy mirrors what the stack trusts:
+
+  occupancy_undercount   carried map claims occupied tiles empty — the
+                         CSR kernels would silently skip live work
+  occupancy_overcount    map claims empty tiles occupied — LEGAL (maps
+                         are upper bounds): wasted tile visits, not
+                         wrong numerics; the audit must NOT flag it
+  packed_bitflip         uint32 spike words gain set bits (0->1 only:
+                         a 1->0 flip keeps the map a valid upper bound
+                         and is invisible to bound checking — documented
+                         detection asymmetry)
+  stale_csr              TileCSR with wrong tiling / map-grid tags — the
+                         consumers' `check_compatible` rejects it loudly
+  nan_params             NaN'd parameter leaves (training/serve poison)
+  nan_decode_state       NaN'd per-slot decode state (serve quarantine)
+  truncated_checkpoint   a leaf file truncated mid-write (crashed/dropped
+                         writer) — restore must detect and walk back
+  dropped_shard          a data-shard group disappears mid-training —
+                         recovered via `elastic.shrunk_mesh` +
+                         `reshard_restore` (exercised by the elastic
+                         drill in the multi-device suite)
+
+`FAULT_CLASSES` names the full set; the CI fault-injection smoke iterates
+it so a new class can't land without detection coverage.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _is_float_leaf(x) -> bool:
+    # jnp.issubdtype, not np: ml_dtypes (bfloat16, fp8) are inexact to
+    # jax but not np.floating subtypes.
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.inexact)
+
+# Detection home of each class (CI smoke asserts coverage by name).
+FAULT_CLASSES = (
+    "occupancy_undercount",    # kernels: guard audit/repair
+    "occupancy_overcount",     # kernels: guard no-flag (upper bound)
+    "packed_bitflip",          # kernels: guard audit/repair (popcount)
+    "stale_csr",               # kernels: TileCSR.check_compatible
+    "nan_params",              # serve: NaN/inf logit quarantine
+    "nan_decode_state",        # serve: NaN/inf logit quarantine
+    "truncated_checkpoint",    # checkpoint: CRC/size check + walk-back
+    "dropped_shard",           # runtime: shrunk_mesh + reshard_restore
+)
+
+# Re-export: the guard's violation type lives with the policy.
+from repro.kernels.dispatch import GuardViolationError  # noqa: E402,F401
+
+
+# ------------------------------------------------------------- occupancy
+def undercount_occupancy(occ, n_tiles: int = 1, seed: int = 0
+                         ) -> Tuple[np.ndarray, List[Tuple[int, int]]]:
+    """Zero `n_tiles` occupied entries of a carried map: the classic
+    silent-drop fault (kernels skip tiles that hold live events).
+    Returns (bad_map, [(mt, kt) coords zeroed])."""
+    bad = np.array(occ, copy=True)
+    occupied = np.argwhere(bad > 0)
+    if occupied.shape[0] == 0:
+        raise ValueError("map has no occupied tiles to undercount")
+    rng = np.random.default_rng(seed)
+    pick = rng.choice(occupied.shape[0],
+                      size=min(n_tiles, occupied.shape[0]), replace=False)
+    coords = [tuple(int(c) for c in occupied[i]) for i in pick]
+    for c in coords:
+        bad[c] = 0
+    return bad, coords
+
+
+def overcount_occupancy(occ, n_tiles: int = 1, seed: int = 0,
+                        count: int = 7
+                        ) -> Tuple[np.ndarray, List[Tuple[int, int]]]:
+    """Claim `n_tiles` empty entries occupied (or inflate occupied counts
+    when no tile is empty). LEGAL under the upper-bound contract: the
+    guard must pass it and the numerics must be unchanged — this is the
+    audit's false-positive control."""
+    bad = np.array(occ, copy=True)
+    empty = np.argwhere(bad == 0)
+    rng = np.random.default_rng(seed)
+    if empty.shape[0] == 0:
+        coords = []
+        bad += count                     # inflate: still an upper bound
+    else:
+        pick = rng.choice(empty.shape[0],
+                          size=min(n_tiles, empty.shape[0]), replace=False)
+        coords = [tuple(int(c) for c in empty[i]) for i in pick]
+        for c in coords:
+            bad[c] = count
+    return bad, coords
+
+
+# ---------------------------------------------------------------- packed
+def flip_packed_bits(words, n_bits: int = 4, seed: int = 0
+                     ) -> Tuple[np.ndarray, List[Tuple[int, ...]]]:
+    """SET `n_bits` random zero bits of a uint32 word tensor (0->1 only).
+    Sets create payload support the carried map never counted, which the
+    guard's popcount audit detects; 1->0 clears keep the map a valid
+    upper bound and are deliberately not injected (bound checking cannot
+    see them — a paired exact-count map would be needed).
+    Returns (corrupted_words, [(word_idx..., bit) flipped])."""
+    w = np.array(words, copy=True)
+    if w.dtype != np.uint32:
+        raise ValueError(f"expected uint32 words, got {w.dtype}")
+    bits = (w[..., None] >> np.arange(32, dtype=np.uint32)) & 1
+    zero_coords = np.argwhere(bits == 0)
+    if zero_coords.shape[0] == 0:
+        raise ValueError("no zero bits to flip")
+    rng = np.random.default_rng(seed)
+    pick = rng.choice(zero_coords.shape[0],
+                      size=min(n_bits, zero_coords.shape[0]), replace=False)
+    flipped = []
+    for i in pick:
+        *idx, bit = (int(c) for c in zero_coords[i])
+        w[tuple(idx)] |= np.uint32(1) << np.uint32(bit)
+        flipped.append(tuple(idx) + (bit,))
+    return w, flipped
+
+
+# ------------------------------------------------------------------- CSR
+def stale_csr(csr, tiling: Optional[Tuple[int, int]] = (64, 64),
+              map_shape: Optional[Tuple[int, int]] = None):
+    """A TileCSR whose compatibility tags no longer match the call site
+    (built for another tiling / another map grid). Consumers reject it
+    via `TileCSR.check_compatible` — the loud path this injector pins."""
+    kw = {}
+    if tiling is not None:
+        kw["tiling"] = tuple(tiling)
+    if map_shape is not None:
+        kw["map_shape"] = tuple(map_shape)
+    return csr._replace(**kw)
+
+
+# ------------------------------------------------------------- NaN poison
+def nan_params(tree: Any, n_leaves: int = 1, seed: int = 0) -> Any:
+    """NaN the first element of `n_leaves` float leaves (deterministic
+    leaf choice). Models a poisoned optimizer step / corrupt weight load;
+    serve's logit quarantine is the detector."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    float_idx = [i for i, l in enumerate(leaves) if _is_float_leaf(l)]
+    if not float_idx:
+        raise ValueError("tree has no float leaves")
+    rng = np.random.default_rng(seed)
+    pick = rng.choice(len(float_idx),
+                      size=min(n_leaves, len(float_idx)), replace=False)
+    for i in (float_idx[p] for p in pick):
+        host = np.array(leaves[i], dtype=np.float32)
+        host.reshape(-1)[0] = np.nan
+        leaves[i] = jnp.asarray(host).astype(leaves[i].dtype)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def nan_decode_state(state: Any, slot: int, seed: int = 0) -> Any:
+    """NaN one slot's decode state (leaves are stacked
+    ``(n_groups, n_slots, ...)`` — slot = index on axis 1). Every float
+    leaf gets the poison so the next decode step's logits for that slot
+    are non-finite, triggering the serve loop's quarantine."""
+    del seed   # slot choice is the caller's; the poison is total per slot
+
+    def poison(x):
+        if not _is_float_leaf(x) or getattr(x, "ndim", 0) < 2:
+            return x
+        host = np.array(x, dtype=np.float32)
+        host[:, slot] = np.nan
+        return jnp.asarray(host).astype(x.dtype)
+    return jax.tree_util.tree_map(poison, state)
+
+
+# ------------------------------------------------------------ checkpoints
+def truncate_checkpoint(ckpt_dir: str, keep_bytes: int = 64,
+                        seed: int = 0) -> str:
+    """Truncate one leaf file of a committed checkpoint to `keep_bytes`
+    (a writer that died mid-flush / lost its shard before the data hit
+    disk). The manifest still promises the full payload, so restore must
+    detect the short read loudly and `restore_latest` walk back.
+    Returns the truncated file's path."""
+    leaf_files = sorted(f for f in os.listdir(ckpt_dir)
+                        if f.startswith("leaf_") and f.endswith(".npy"))
+    if not leaf_files:
+        raise ValueError(f"no leaf files under {ckpt_dir}")
+    rng = np.random.default_rng(seed)
+    target = os.path.join(ckpt_dir, leaf_files[int(rng.integers(
+        len(leaf_files)))])
+    with open(target, "r+b") as f:
+        f.truncate(keep_bytes)
+    return target
+
+
+def drop_checkpoint_file(ckpt_dir: str, seed: int = 0) -> str:
+    """Delete one leaf file of a committed checkpoint (a lost shard whose
+    host never wrote). Returns the removed file's path."""
+    leaf_files = sorted(f for f in os.listdir(ckpt_dir)
+                        if f.startswith("leaf_") and f.endswith(".npy"))
+    if not leaf_files:
+        raise ValueError(f"no leaf files under {ckpt_dir}")
+    rng = np.random.default_rng(seed)
+    target = os.path.join(ckpt_dir, leaf_files[int(rng.integers(
+        len(leaf_files)))])
+    os.remove(target)
+    return target

@@ -93,6 +93,128 @@ MULTIDEVICE_SCRIPT = textwrap.dedent("""
             assert len(out2["losses"]) == 4            # resumed at step 6
             assert np.isfinite(out2["final_loss"])
 
+    # One jitted train step per (cfg, mesh, spiking): the drill sections
+    # replay the same step across healthy/failure/resumed phases, so the
+    # jit wrapper must be shared or every phase pays a recompile.
+    _DRILL_STEPS = {}
+
+    def _drill_step_fn(cfg, mesh, spiking):
+        import functools
+        from repro.launch import steps as steps_mod
+        from repro.optim import adamw, schedule as sched
+        key = (cfg.name, id(mesh), spiking)
+        if key not in _DRILL_STEPS:
+            schedule_fn = functools.partial(
+                sched.warmup_cosine, warmup_steps=2, total_steps=10)
+            _DRILL_STEPS[key] = jax.jit(steps_mod.make_train_step(
+                cfg, adamw.AdamWConfig(lr=1e-2), schedule_fn,
+                spiking=spiking, mesh=mesh))
+        return _DRILL_STEPS[key]
+
+    def _drill_loop(cfg, mesh, params, opt_state, batches, start, stop,
+                    mgr=None, spiking=False):
+        # Feed IDENTICAL global batches regardless of mesh shape (unlike
+        # train_loop, which feeds shard 0 local rows — that would give the
+        # shrunk mesh different data and no comparable loss trajectory).
+        from repro.optim import adamw
+        from repro.runtime import sharding
+        p_sh = sharding.named(mesh, sharding.param_specs(cfg, params, mesh))
+        o_sh = adamw.AdamWState(step=NamedSharding(mesh, P()),
+                                mu=p_sh, nu=p_sh)
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+        step_fn = _drill_step_fn(cfg, mesh, spiking)
+        losses = []
+        for t in range(start, stop):
+            dev = {k: jnp.asarray(v) for k, v in batches[t].items()}
+            params, opt_state, metrics = step_fn(params, opt_state, dev)
+            losses.append(float(metrics["loss"]))
+            if mgr and mgr.should_save(t + 1):
+                mgr.save(t + 1, (params, opt_state))
+        if mgr:
+            mgr.wait()
+        return params, opt_state, losses
+
+    def elastic_drill():
+        # Recovery drill: mid-training shard loss AND a torn newest
+        # checkpoint. restore_latest must walk back to the newest VALID
+        # snapshot, reshard_restore must load it onto the shrunk mesh, and
+        # the resumed loss trajectory must track the healthy run (same
+        # global batches; only fp reduction order differs across meshes).
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.configs.base import LMConfig, SpikingConfig
+        from repro.data import synthetic
+        from repro.models import lm
+        from repro.optim import adamw
+        from repro.runtime import faults
+        from repro.runtime.elastic import shrunk_mesh, reshard_restore
+        cfg = LMConfig(name="drill", family="dense", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                       vocab=64, spiking=SpikingConfig(t_steps=1),
+                       remat="none", loss_chunk=16)
+        batches = [synthetic.lm_batch(0, 0, t, 8, 16, cfg.vocab)
+                   for t in range(10)]
+        params0 = lm.init_params(cfg, jax.random.PRNGKey(0))
+        opt0 = adamw.init(params0, adamw.AdamWConfig(lr=1e-2))
+        mesh_a = make_mesh((4, 2), ("data", "model"))
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, save_every=3)
+            *_, healthy = _drill_loop(cfg, mesh_a, params0, opt0, batches,
+                                      0, 10, mgr=mgr)     # saves 3, 6, 9
+            # 2 of 4 data groups die; the newest checkpoint is also torn
+            # (writer died with the shard) — recovery must not trust it.
+            faults.truncate_checkpoint(os.path.join(d, "step_000000009"))
+            plan = shrunk_mesh((4, 2), ("data", "model"),
+                               n_failed_data_groups=2)
+            assert plan.mesh_shape == (2, 2)
+            mesh_b = make_mesh(plan.mesh_shape, plan.axis_names,
+                               devices=jax.devices()[:4])
+            step, (p, o) = reshard_restore(cfg, mgr, (params0, opt0),
+                                           mesh_b)
+            assert step == 6, step   # walked back past the torn snapshot
+            *_, resumed = _drill_loop(cfg, mesh_b, p, o, batches, 6, 10)
+        assert all(np.isfinite(resumed))
+        np.testing.assert_allclose(resumed, healthy[6:10],
+                                   rtol=0.05, atol=0.05)
+
+    def elastic_packed():
+        # The packed-payload config must survive the same elastic
+        # roundtrip: checkpoint a SpikingConfig(packed=True) run, restore
+        # onto the shrunk mesh, and replay one step — under guard audit —
+        # with loss parity vs the pre-failure trajectory.
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.configs.base import LMConfig, SpikingConfig
+        from repro.data import synthetic
+        from repro.kernels import dispatch
+        from repro.models import lm
+        from repro.optim import adamw
+        from repro.runtime.elastic import shrunk_mesh, reshard_restore
+        cfg = LMConfig(name="drill-packed", family="dense", n_layers=2,
+                       d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                       vocab=64,
+                       spiking=SpikingConfig(t_steps=1, packed=True),
+                       remat="none", loss_chunk=16)
+        batches = [synthetic.lm_batch(1, 0, t, 8, 16, cfg.vocab)
+                   for t in range(5)]
+        params0 = lm.init_params(cfg, jax.random.PRNGKey(1))
+        opt0 = adamw.init(params0, adamw.AdamWConfig(lr=1e-2))
+        mesh_a = make_mesh((4, 2), ("data", "model"))
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, save_every=4)
+            *_, pre = _drill_loop(cfg, mesh_a, params0, opt0, batches,
+                                  0, 5, mgr=mgr, spiking=True)  # saves @4
+            plan = shrunk_mesh((4, 2), ("data", "model"),
+                               n_failed_data_groups=2)
+            mesh_b = make_mesh(plan.mesh_shape, plan.axis_names,
+                               devices=jax.devices()[:4])
+            step, (p, o) = reshard_restore(cfg, mgr, (params0, opt0),
+                                           mesh_b)
+            assert step == 4, step
+            with dispatch.use_guard("audit"):   # no false positives under
+                *_, replay = _drill_loop(cfg, mesh_b, p, o, batches,  # jit
+                                         4, 5, spiking=True)
+        np.testing.assert_allclose(replay[0], pre[4], rtol=0.05, atol=0.05)
+
     def shard_map_moe():
         from repro.models import moe
         mesh = make_mesh((2, 4), ("data", "model"))
@@ -213,6 +335,8 @@ MULTIDEVICE_SCRIPT = textwrap.dedent("""
 
     section("CKPT_ELASTIC", ckpt_elastic)
     section("ELASTIC_E2E", elastic_e2e)
+    section("ELASTIC_DRILL", elastic_drill)
+    section("ELASTIC_PACKED", elastic_packed)
     section("SHARD_MAP", shard_map_moe)
     section("MESH_DISPATCH", mesh_dispatch)
     section("EVENT_TENSOR", event_tensor)

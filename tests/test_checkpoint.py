@@ -72,6 +72,65 @@ def test_restore_latest_skips_corrupt(tmp_path):
     assert step == 1                          # fell back past corruption
 
 
+def test_truncated_leaf_detected_before_load(tmp_path):
+    """A leaf shorter than its manifest `nbytes` (writer died mid-flush)
+    is rejected by the size check — before np.load ever parses it."""
+    from repro.runtime import faults
+    tree = _tree()
+    checkpointer.save(str(tmp_path), 3, tree)
+    faults.truncate_checkpoint(str(tmp_path / "step_000000003"),
+                               keep_bytes=16)
+    with pytest.raises(IOError, match="truncated"):
+        checkpointer.restore(str(tmp_path / "step_000000003"), tree)
+
+
+def test_restore_latest_walks_back_past_truncation(tmp_path):
+    from repro.runtime import faults
+    tree = _tree()
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    faults.truncate_checkpoint(str(tmp_path / "step_000000002"))
+    step, out = mgr.restore_latest(tree)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_restore_latest_walks_back_past_dropped_leaf(tmp_path):
+    """A vanished leaf file (lost shard) raises OSError inside restore;
+    restore_latest treats it as corruption, not a crash."""
+    from repro.runtime import faults
+    tree = _tree()
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    faults.drop_checkpoint_file(str(tmp_path / "step_000000002"))
+    step, _ = mgr.restore_latest(tree)
+    assert step == 1
+
+
+def test_all_checkpoints_corrupt_returns_none(tmp_path):
+    from repro.runtime import faults
+    tree = _tree()
+    mgr = CheckpointManager(str(tmp_path), keep=5, async_save=False)
+    mgr.save(1, tree)
+    faults.truncate_checkpoint(str(tmp_path / "step_000000001"))
+    step, out = mgr.restore_latest(tree)
+    assert step is None                       # caller starts fresh
+    assert out is tree
+
+
+def test_manifest_promises_leaf_sizes(tmp_path):
+    tree = _tree()
+    checkpointer.save(str(tmp_path), 1, tree)
+    with open(tmp_path / "step_000000001" / "manifest.json") as f:
+        manifest = json.load(f)
+    for meta in manifest["leaves"]:
+        path = tmp_path / "step_000000001" / meta["file"]
+        assert meta["nbytes"] == path.stat().st_size > 0
+
+
 def test_async_save_then_wait(tmp_path):
     tree = _tree()
     mgr = CheckpointManager(str(tmp_path), async_save=True)

@@ -7,3 +7,18 @@ import pytest
 @pytest.mark.slow
 def test_elastic_train_restart_smaller_mesh(multidevice_run):
     multidevice_run.check("ELASTIC_E2E")
+
+
+@pytest.mark.slow
+def test_elastic_recovery_drill(multidevice_run):
+    """Mid-training shard loss + torn newest checkpoint: restore walks
+    back to the newest valid snapshot, reshards onto the shrunk mesh, and
+    the resumed loss trajectory tracks the healthy run at tolerance."""
+    multidevice_run.check("ELASTIC_DRILL")
+
+
+@pytest.mark.slow
+def test_elastic_packed_roundtrip(multidevice_run):
+    """A SpikingConfig(packed=True) run restores onto a shrunk mesh and
+    replays one step (under guard audit) with pre-failure loss parity."""
+    multidevice_run.check("ELASTIC_PACKED")

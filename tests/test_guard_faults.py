@@ -1,0 +1,429 @@
+"""Guarded execution under injected faults (PR8).
+
+The guard's contract, tested as properties:
+  * audit flags 100% of injected occupancy UNDERCOUNTS — dense and
+    packed payloads, eager (GuardViolationError) and under jit (watcher
+    record via debug callback);
+  * zero false positives: valid maps and OVERCOUNTED maps (legal upper
+    bounds) pass with numerics identical to the unguarded call;
+  * repair never returns a silent wrong answer: with a violated map the
+    result matches the trusted-payload oracle at 1e-5, eager and jit;
+  * stale CSR tags are rejected loudly; wrong map grids raise even
+    under jit (shape check is static);
+  * the serve loop quarantines NaN logits / raising decode steps with
+    bounded retries, and deadlines are terminal on every path.
+
+Property tests use hypothesis when installed and skip (per
+hypothesis_compat) offline; the deterministic tests below cover the same
+invariants either way.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import HAVE_HYPOTHESIS, given, st  # noqa: F401
+from repro.core import spikes as spk
+from repro.kernels import dispatch, ops
+from repro.runtime import faults
+
+M, K, N = 256, 256, 64
+
+
+@pytest.fixture(autouse=True)
+def _rearm_warnings():
+    dispatch.reset_fallback_warnings()
+    yield
+    dispatch.reset_fallback_warnings()
+
+
+def _spikes(seed=0, density=0.05, m=M, k=K):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.random((m, k)) < density).astype(np.float32))
+
+
+def _weights(seed=1, k=K, n=N):
+    return jax.random.normal(jax.random.PRNGKey(seed), (k, n), jnp.float32)
+
+
+def _quiet_dispatch(*args, **kwargs):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        return dispatch.dispatch(*args, **kwargs)
+
+
+# Traced-mode callables, traced ONCE under the mode they test (the guard
+# binds at resolution = trace time) and reused across examples.
+_JITTED = {}
+
+
+def _jitted(mode):
+    if mode not in _JITTED:
+        def f(s, occ, w, packed_k=None):
+            kw = {} if packed_k is None else {"packed_k": packed_k}
+            return _quiet_dispatch("spike_matmul", s, w, occupancy=occ, **kw)
+        fn = jax.jit(f, static_argnames=("packed_k",))
+        with dispatch.use_guard(mode):
+            # trace BOTH signatures now so the mode is captured (packed_k
+            # is static -> its own trace; later calls are cache hits and
+            # keep the guarded behavior)
+            s = _spikes()
+            w = _weights()
+            fn(s, ops.padded_occupancy(s), w).block_until_ready()
+            sp, occp, wordsp = _packed_case()
+            fn(jnp.asarray(wordsp), occp, w, packed_k=K).block_until_ready()
+        _JITTED[mode] = fn
+    return _JITTED[mode]
+
+
+# --------------------------------------------------------- undercount: dense
+@pytest.mark.parametrize("seed,n_tiles", [(0, 1), (1, 2), (2, 4)])
+def test_audit_flags_undercount_eager(seed, n_tiles):
+    s, w = _spikes(seed), _weights()
+    bad, coords = faults.undercount_occupancy(
+        ops.padded_occupancy(s), n_tiles=n_tiles, seed=seed)
+    assert coords
+    with dispatch.use_guard("audit"):
+        with pytest.raises(faults.GuardViolationError):
+            _quiet_dispatch("spike_matmul", s, w, occupancy=jnp.asarray(bad))
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_audit_flags_undercount_jit(seed):
+    """Traced audit can't raise: a violation NaN-poisons the output — a
+    loud sentinel for downstream NaN guards, never a plausible wrong
+    number."""
+    s, w = _spikes(seed), _weights()
+    bad, _ = faults.undercount_occupancy(ops.padded_occupancy(s), seed=seed)
+    fn = _jitted("audit")
+    out = np.asarray(fn(s, jnp.asarray(bad), w))
+    assert np.isnan(out).all(), "violation must poison, not pass through"
+
+
+def test_audit_jit_records_when_watched_at_trace_time():
+    """Traces built under an active watcher carry the violation record
+    (cond-gated host callback — attached at trace time only, so the hot
+    path of unwatched production traces stays effect-free)."""
+    s, w = _spikes(11), _weights()
+    occ = ops.padded_occupancy(s)
+    bad = jnp.asarray(faults.undercount_occupancy(occ, 2, seed=11)[0])
+    with dispatch.watch_guard_events() as events:
+        fn = jax.jit(lambda o: _quiet_dispatch(
+            "spike_matmul", s, w, occupancy=o))
+        with dispatch.use_guard("audit"):
+            fn(occ).block_until_ready()          # trace (clean): no record
+            assert events == []
+            fn(bad).block_until_ready()
+    assert [e["kind"] for e in events] == ["undercount"], events
+    assert events[0]["action"] == "record" and events[0]["traced"]
+
+
+def test_audit_no_false_positives_eager():
+    s, w = _spikes(0), _weights()
+    occ = ops.padded_occupancy(s)
+    ref = np.asarray(s @ w)
+    for m in (occ, jnp.asarray(faults.overcount_occupancy(occ, 2)[0])):
+        with dispatch.use_guard("audit"):
+            out = _quiet_dispatch("spike_matmul", s, w, occupancy=m)
+        np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+
+
+def test_audit_no_false_positives_jit():
+    s, w = _spikes(4), _weights()
+    occ = ops.padded_occupancy(s)
+    over = jnp.asarray(faults.overcount_occupancy(occ, 3)[0])
+    fn = _jitted("audit")
+    out1, out2 = fn(s, occ, w), fn(s, over, w)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(s @ w),
+                               atol=1e-5)       # no NaN poison, exact pass
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(s @ w),
+                               atol=1e-5)
+
+
+# -------------------------------------------------------- undercount: packed
+def _packed_case(seed=0):
+    """Spikes with the upper half of K structurally empty: bit flips
+    injected there land in map-empty tiles, which is the detectable
+    corruption class (a flip inside an occupied tile is absorbed by the
+    upper-bound contract — the documented asymmetry)."""
+    s = np.array(_spikes(seed))
+    s[:, K // 2:] = 0.0
+    s = jnp.asarray(s)
+    occ = ops.padded_occupancy(s)
+    words = np.asarray(spk.pack_spikes(s))
+    return s, occ, words
+
+
+def test_audit_flags_packed_bitflip_eager():
+    s, occ, words = _packed_case(0)
+    w = _weights()
+    half = words.shape[-1] // 2
+    sub, flips = faults.flip_packed_bits(words[:, half:], n_bits=3, seed=0)
+    assert flips
+    bad = words.copy()
+    bad[:, half:] = sub
+    with dispatch.use_guard("audit"):
+        # clean packed payload: no false positive, parity with dense
+        out = _quiet_dispatch("spike_matmul", jnp.asarray(words), w,
+                              occupancy=occ, packed_k=K)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w),
+                                   atol=1e-4)
+        with pytest.raises(faults.GuardViolationError):
+            _quiet_dispatch("spike_matmul", jnp.asarray(bad), w,
+                            occupancy=occ, packed_k=K)
+
+
+def test_audit_flags_packed_bitflip_jit():
+    s, occ, words = _packed_case(1)
+    w = _weights()
+    half = words.shape[-1] // 2
+    sub, _ = faults.flip_packed_bits(words[:, half:], n_bits=2, seed=1)
+    bad = words.copy()
+    bad[:, half:] = sub
+    fn = _jitted("audit")
+    clean = np.asarray(fn(jnp.asarray(words), occ, w, packed_k=K))
+    np.testing.assert_allclose(clean, np.asarray(s @ w), atol=1e-4)
+    poisoned = np.asarray(fn(jnp.asarray(bad), occ, w, packed_k=K))
+    assert np.isnan(poisoned).all()
+
+
+# ----------------------------------------------------------------- repair
+def test_repair_parity_eager():
+    s, w = _spikes(5), _weights()
+    bad, _ = faults.undercount_occupancy(ops.padded_occupancy(s), 3, seed=5)
+    with dispatch.use_guard("repair"):
+        with dispatch.watch_guard_events() as events:
+            out = _quiet_dispatch("spike_matmul", s, w,
+                                  occupancy=jnp.asarray(bad))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w),
+                               atol=1e-5)
+    assert events and events[0]["action"] == "repair"
+    assert events[0]["attribution"].endswith("+repaired")
+
+
+def test_repair_parity_jit_and_grad():
+    s, w = _spikes(6), _weights()
+    bad = jnp.asarray(faults.undercount_occupancy(
+        ops.padded_occupancy(s), 2, seed=6)[0])
+    fn = _jitted("repair")
+    np.testing.assert_allclose(np.asarray(fn(s, bad, w)),
+                               np.asarray(s @ w), atol=1e-5)
+    # the repair branch (lax.cond) keeps the op differentiable
+    with dispatch.use_guard("repair"):
+        g = jax.grad(lambda ww: jnp.sum(_quiet_dispatch(
+            "spike_matmul", s, ww, occupancy=bad)))(w)
+    g_ref = jax.grad(lambda ww: jnp.sum(s @ ww))(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_ref), atol=1e-5)
+
+
+def test_repair_packed_parity():
+    s, occ, words = _packed_case(2)
+    w = _weights()
+    half = words.shape[-1] // 2
+    sub, _ = faults.flip_packed_bits(words[:, half:], n_bits=2, seed=2)
+    bad = words.copy()
+    bad[:, half:] = sub
+    with dispatch.use_guard("repair"):
+        out = _quiet_dispatch("spike_matmul", jnp.asarray(bad), w,
+                              occupancy=occ, packed_k=K)
+    # repair trusts the payload: result = CORRUPTED payload @ w (the map
+    # is dropped, nothing silently zeroed) — compare to that oracle.
+    s_bad = spk.unpack_spikes(jnp.asarray(bad), dtype=jnp.float32)[:, :K]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(s_bad @ w),
+                               atol=1e-5)
+
+
+# ------------------------------------------------- stale metadata (static)
+def test_wrong_grid_raises_even_under_jit():
+    s, w = _spikes(7), _weights()
+    stale = jnp.zeros((1, 1), jnp.int32)      # wrong grid for 256x256
+    with dispatch.use_guard("audit"):
+        with pytest.raises(faults.GuardViolationError, match="grid"):
+            _quiet_dispatch("spike_matmul", s, w, occupancy=stale)
+        with pytest.raises(faults.GuardViolationError, match="grid"):
+            jax.jit(lambda ss, ww: _quiet_dispatch(
+                "spike_matmul", ss, ww, occupancy=stale))(s, w)
+
+
+def test_stale_csr_rejected_loudly():
+    occ = ops.padded_occupancy(_spikes(8))
+    csr = spk.occupancy_to_csr(occ, tiling=(128, 128))
+    bad = faults.stale_csr(csr, tiling=(64, 64))
+    with pytest.raises(ValueError, match="tiling"):
+        bad.check_compatible(128, 128, *(int(d) for d in occ.shape))
+    wrong_grid = faults.stale_csr(csr, tiling=None, map_shape=(9, 9))
+    with pytest.raises(ValueError, match="tile grid"):
+        wrong_grid.check_compatible(128, 128, *(int(d) for d in occ.shape))
+
+
+def test_guard_off_is_exact_passthrough():
+    """Default mode adds nothing: same numerics, same attribution."""
+    s, w = _spikes(9), _weights()
+    occ = ops.padded_occupancy(s)
+    base = _quiet_dispatch("spike_matmul", s, w, occupancy=occ)
+    assert dispatch.guard_mode() == "off"
+    _, attr = dispatch.resolve_with_attribution(
+        "spike_matmul", s, w, occupancy=occ)
+    with dispatch.use_guard("audit"):
+        _, attr_audit = dispatch.resolve_with_attribution(
+            "spike_matmul", s, w, occupancy=occ)
+        audited = _quiet_dispatch("spike_matmul", s, w, occupancy=occ)
+    assert attr_audit == attr                  # guard is policy, not routing
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(audited))
+
+
+def test_guard_mode_env_and_validation(monkeypatch):
+    monkeypatch.setenv(dispatch.GUARD_ENV_VAR, "audit")
+    assert dispatch.guard_mode() == "audit"
+    monkeypatch.setenv(dispatch.GUARD_ENV_VAR, "bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        dispatch.guard_mode()
+    with pytest.raises(ValueError, match="bogus"):
+        with dispatch.use_guard("bogus"):
+            pass
+
+
+# ------------------------------------------------------ hypothesis properties
+@given(seed=st.integers(0, 10_000), n_tiles=st.integers(1, 6),
+       density=st.floats(0.02, 0.3))
+def test_property_every_undercount_detected(seed, n_tiles, density):
+    s, w = _spikes(seed, density, m=128, k=256), _weights(k=256)
+    bad, coords = faults.undercount_occupancy(
+        ops.padded_occupancy(s), n_tiles=n_tiles, seed=seed)
+    assert coords
+    with dispatch.use_guard("audit"):
+        with pytest.raises(faults.GuardViolationError):
+            _quiet_dispatch("spike_matmul", s, w, occupancy=jnp.asarray(bad))
+
+
+@given(seed=st.integers(0, 10_000), density=st.floats(0.0, 0.3),
+       overcount=st.booleans())
+def test_property_valid_maps_never_flag(seed, density, overcount):
+    s, w = _spikes(seed, density, m=128, k=256), _weights(k=256)
+    occ = ops.padded_occupancy(s)
+    if overcount:
+        occ = jnp.asarray(faults.overcount_occupancy(occ, 2, seed=seed)[0])
+    with dispatch.use_guard("audit"):
+        out = _quiet_dispatch("spike_matmul", s, w, occupancy=occ)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w),
+                               atol=1e-5)
+
+
+@given(seed=st.integers(0, 10_000))
+def test_property_repair_matches_oracle(seed):
+    s, w = _spikes(seed, 0.1, m=128, k=256), _weights(k=256)
+    bad = jnp.asarray(faults.undercount_occupancy(
+        ops.padded_occupancy(s), 2, seed=seed)[0])
+    with dispatch.use_guard("repair"):
+        out = _quiet_dispatch("spike_matmul", s, w, occupancy=bad)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(s @ w),
+                               atol=1e-5)
+
+
+# ------------------------------------------------------------- serve loop
+from repro.configs.base import LMConfig, SpikingConfig  # noqa: E402
+from repro.launch import serve  # noqa: E402
+
+SERVE_CFG = LMConfig(name="guard-serve", family="dense", n_layers=2,
+                     d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+                     vocab=64, spiking=SpikingConfig(t_steps=1),
+                     remat="none", loss_chunk=16)
+
+
+def test_serve_nan_quarantine_retries_then_succeeds():
+    server = serve.Server(SERVE_CFG, n_slots=2, max_seq=32, backoff_s=0.0)
+    req = serve.Request(rid=0, prompt=[1, 2, 3], max_new=4)
+    server.submit(req)
+    server.step()
+    server.step()
+    assert req.state == "running"
+    # poison slot 0's decode state (KV cache / SDSA status NaN'd)
+    server.state = faults.nan_decode_state(server.state, slot=0)
+    finished = server.run_until_drained(max_steps=200)
+    assert req in finished
+    assert req.state == "done" and req.done
+    assert req.retries >= 1                  # quarantined then recovered
+    assert req.failure_cause == "nan_logits"
+    assert len(req.generated) == 4           # full regeneration, no
+    assert all(s is None for s in server.slot_req)  # poisoned tokens
+
+
+def test_serve_decode_error_releases_all_slots_and_recovers():
+    server = serve.Server(SERVE_CFG, n_slots=2, max_seq=32, backoff_s=0.0)
+    reqs = [serve.Request(rid=i, prompt=[i + 1], max_new=2)
+            for i in range(2)]
+    for r in reqs:
+        server.submit(r)
+    server.step()
+    orig = server._step
+
+    def boom(*a, **k):
+        raise RuntimeError("kernel fault")
+    server._step = boom
+    server.step()
+    # the batch can't attribute the raise: every active slot quarantines
+    assert all(s is None for s in server.slot_req)
+    for r in reqs:
+        assert r.retries == 1
+        assert r.failure_cause == "decode_error:RuntimeError"
+    server._step = orig
+    server.run_until_drained(max_steps=200)
+    assert all(r.state == "done" for r in reqs)
+
+
+def test_serve_retry_exhaustion_is_terminal_failed():
+    server = serve.Server(SERVE_CFG, n_slots=1, max_seq=32, backoff_s=0.0)
+    server._step = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("dead kernel"))
+    req = serve.Request(rid=0, prompt=[1], max_new=2, max_retries=1)
+    server.submit(req)
+    finished = server.run_until_drained(max_steps=50)
+    assert req in finished
+    assert req.state == "failed" and not req.done
+    assert req.retries == 1                  # budget spent, then terminal
+    assert req.failure_cause == "decode_error:RuntimeError"
+    assert server.slot_req[0] is None        # slot released on every path
+
+
+def test_serve_deadline_terminal_for_active_and_queued():
+    t = [0.0]
+    server = serve.Server(SERVE_CFG, n_slots=1, max_seq=32,
+                          clock=lambda: t[0])
+    n_slots, vocab = 1, SERVE_CFG.vocab
+    server._step = lambda p, st_, tok, pos: (
+        jnp.ones((n_slots, vocab)), st_)     # scheduling-only test
+    active = serve.Request(rid=0, prompt=[1, 2], max_new=64, deadline_s=0.5)
+    queued = serve.Request(rid=1, prompt=[3], max_new=64, deadline_s=0.5)
+    fresh = serve.Request(rid=2, prompt=[4], max_new=2)
+    server.submit(active)
+    server.submit(queued)
+    server.step()                            # active takes the only slot
+    assert active.state == "running" and queued.state == "pending"
+    t[0] = 1.0                               # both overrun their budget
+    server.submit(fresh)
+    server.step()
+    assert active.state == "failed"
+    assert active.failure_cause == "deadline"
+    assert queued.state == "failed"          # never admitted, still failed
+    assert queued.failure_cause == "deadline"
+    server.run_until_drained(max_steps=50)
+    assert fresh.state == "done"             # server keeps serving
+
+
+def test_serve_backoff_gates_readmission():
+    t = [0.0]
+    server = serve.Server(SERVE_CFG, n_slots=1, max_seq=32,
+                          clock=lambda: t[0], backoff_s=10.0)
+    server._step = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("flaky"))
+    req = serve.Request(rid=0, prompt=[1], max_new=2, max_retries=2)
+    server.submit(req)
+    server.step()                            # assign + fault -> retry 1
+    assert req.retries == 1 and req.not_before == 10.0
+    assert not server.step()                 # backing off: nothing active
+    assert req.retries == 1                  # NOT readmitted early
+    t[0] = 11.0
+    server.step()                            # gate open -> retry 2
+    assert req.retries == 2 and req.not_before == 11.0 + 20.0
