@@ -42,7 +42,7 @@ import traceback
 def _suites():
     from . import (e2e_event, fig2_econv_vs_tconv, fig7_apec, fig8_breakdown,
                    fig9_cpu, guard_overhead, hybrid_sweep, kernel_backends,
-                   roofline, sparsity_sweep, table1_resources,
+                   roofline, serve_bench, sparsity_sweep, table1_resources,
                    table2_throughput)
     return [
         ("fig2", fig2_econv_vs_tconv.run),
@@ -69,6 +69,9 @@ def _suites():
         ("hybrid_mesh", hybrid_sweep.run_mesh_rows),
         # EXSPIKE_GUARD audit/repair vs off (dense + packed payloads)
         ("guard", guard_overhead.run),
+        # continuous-batching scheduler: trace-replay p50/p99 latency +
+        # tokens/sec, spiking vs dense, single vs 2-replica pool
+        ("serve", serve_bench.run),
     ]
 
 

@@ -1,0 +1,122 @@
+"""Serve-scheduler latency/throughput bench — the first serving rows on
+the perf ledger (BENCH_PR9.json).
+
+Replays the synthetic traces from `serve_traces` through the
+continuous-batching scheduler on the REAL clock and reports per-request
+latency (arrival -> terminal) and aggregate tokens/sec:
+
+- traces: poisson (steady) and bursty (staggered admission — the shape
+  that exercises non-aligned per-slot positions);
+- spiking vs dense (O(d) SDSA slot state vs KV cache);
+- single replica vs a 2-replica pool with kernels resolved mesh-aware
+  against the host mesh and admission steered by the occupancy load
+  signal.
+
+Rows: serve/<trace>/<spiking|dense>/<single|mesh2>, value = p50 latency
+in us, derived fields carry p99/tok_s/request count. Latency on CPU is
+dominated by the decode-step wall time, so absolute numbers are only
+comparable within one platform — the ledger point is the RATIOS
+(spiking vs dense, pooled vs single) and the regression baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from benchmarks.serve_traces import make_trace
+from repro.configs.base import LMConfig, SpikingConfig
+from repro.launch.serve import ReplicaPool, Request, Server
+
+# Small but real config: 2-layer GQA transformer, both spiking (SDSA
+# status decode) and dense (KV cache) paths exercised.
+BENCH_CFG = LMConfig(
+    name="serve-bench", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=2, d_ff=128, vocab=128, spiking=SpikingConfig(t_steps=1),
+    remat="none", loss_chunk=16)
+
+TRACE_KW = dict(n_requests=12, vocab=BENCH_CFG.vocab,
+                prompt_len=(4, 12), max_new=(4, 8))
+TRACES = ("poisson", "bursty")
+N_SLOTS = 4
+MAX_SEQ = 64
+
+
+def _build(topo: str, spiking: bool, mesh):
+    kw = dict(n_slots=N_SLOTS, max_seq=MAX_SEQ, spiking=spiking)
+    if topo == "single":
+        return Server(BENCH_CFG, **kw)
+    return ReplicaPool(BENCH_CFG, n_replicas=2, mesh=mesh, **kw)
+
+
+def _replay(server, trace):
+    reqs = []
+    for t in trace:
+        r = Request(rid=t.rid, prompt=list(t.prompt), max_new=t.max_new)
+        server.submit_at(r, t.arrival_s)
+        reqs.append(r)
+    t0 = time.monotonic()
+    server.run_until_drained()
+    wall = time.monotonic() - t0
+    epoch = server.epoch
+    lat = np.array([r.finished_at - (epoch + r.arrival_s) for r in reqs])
+    toks = sum(len(r.generated) for r in reqs)
+    bad = [r.rid for r in reqs if r.state != "done"]
+    return lat, toks, wall, bad
+
+
+def run() -> list:
+    from repro.launch.mesh import make_host_mesh
+    platform = jax.default_backend()
+    mesh = make_host_mesh()
+    rows = []
+    for trace_name in TRACES:
+        trace = make_trace(trace_name, seed=0, **TRACE_KW)
+        for spiking in (True, False):
+            mode = "spiking" if spiking else "dense"
+            for topo in ("single", "mesh2"):
+                # Warmup replay populates the shared jit caches (decode
+                # step + per-bucket prefills) so the timed replay
+                # measures steady-state serving, not compiles.
+                _replay(_build(topo, spiking, mesh), trace)
+                lat, toks, wall, bad = _replay(
+                    _build(topo, spiking, mesh), trace)
+                p50, p99 = np.percentile(lat, [50, 99])
+                fields = (f"p99_ms={p99 * 1e3:.2f};"
+                          f"tok_s={toks / wall:.1f};"
+                          f"requests={len(lat)};failed={len(bad)};"
+                          f"platform={platform}")
+                rows.append(csv_row(
+                    f"serve/{trace_name}/{mode}/{topo}",
+                    p50 * 1e6, fields))
+    return rows
+
+
+def main() -> None:
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write BENCH_PR9-schema JSON: traces, "
+                         "modes, topologies, and the serve rows")
+    args = ap.parse_args()
+    rows = run()
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"platform": jax.default_backend(),
+                       "traces": list(TRACES),
+                       "modes": ["spiking", "dense"],
+                       "topologies": ["single", "mesh2"],
+                       "trace_kw": {k: list(v) if isinstance(v, tuple)
+                                    else v for k, v in TRACE_KW.items()},
+                       "n_slots": N_SLOTS,
+                       "metric": "p50 latency us (arrival->terminal); "
+                                 "derived: p99_ms, tok_s",
+                       "rows": rows}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Synthetic arrival traces for the serve scheduler.
+
+Two canonical shapes, both fully deterministic for a given seed:
+
+- ``poisson``: memoryless arrivals (exponential inter-arrival gaps at a
+  target rate) — the steady-traffic baseline every queueing result is
+  stated against.
+- ``bursty``: arrivals grouped into bursts with long quiet gaps between
+  them — the staggered-admission stressor. A burst lands while earlier
+  requests are mid-generation, so slots join a busy pool at non-aligned
+  positions; this is the trace shape that exposed the shared
+  ``pos.max()`` decode bug.
+
+Trace format (the scheduler contract, see kernels README "Serving"):
+each entry is a `TraceRequest(rid, arrival_s, prompt, max_new)` with
+`arrival_s` relative to replay epoch and monotonically non-decreasing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    rid: int
+    arrival_s: float
+    prompt: Tuple[int, ...]
+    max_new: int
+
+
+def _prompts(rng: np.random.Generator, n: int, vocab: int,
+             prompt_len: Tuple[int, int],
+             max_new: Tuple[int, int]) -> List[Tuple[Tuple[int, ...], int]]:
+    lens = rng.integers(prompt_len[0], prompt_len[1] + 1, n)
+    news = rng.integers(max_new[0], max_new[1] + 1, n)
+    return [(tuple(int(t) for t in rng.integers(0, vocab, int(L))), int(m))
+            for L, m in zip(lens, news)]
+
+
+def poisson_trace(seed: int = 0, n_requests: int = 16, rate_hz: float = 50.0,
+                  vocab: int = 64, prompt_len: Tuple[int, int] = (4, 12),
+                  max_new: Tuple[int, int] = (4, 12)) -> List[TraceRequest]:
+    """Memoryless arrivals: exponential gaps at `rate_hz` requests/sec."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, n_requests)
+    arrivals = np.cumsum(gaps)
+    arrivals -= arrivals[0]                       # first request at t=0
+    bodies = _prompts(rng, n_requests, vocab, prompt_len, max_new)
+    return [TraceRequest(rid=i, arrival_s=float(t), prompt=p, max_new=m)
+            for i, (t, (p, m)) in enumerate(zip(arrivals, bodies))]
+
+
+def bursty_trace(seed: int = 0, n_requests: int = 16, burst_size: int = 4,
+                 burst_gap_s: float = 0.05, intra_gap_s: float = 0.001,
+                 vocab: int = 64, prompt_len: Tuple[int, int] = (4, 12),
+                 max_new: Tuple[int, int] = (4, 12)) -> List[TraceRequest]:
+    """Bursts of `burst_size` near-simultaneous arrivals separated by
+    `burst_gap_s` quiet gaps — later bursts land mid-generation, forcing
+    non-aligned slot admission."""
+    rng = np.random.default_rng(seed)
+    arrivals = []
+    t = 0.0
+    for i in range(n_requests):
+        if i and i % burst_size == 0:
+            t += burst_gap_s
+        arrivals.append(t)
+        t += intra_gap_s
+    bodies = _prompts(rng, n_requests, vocab, prompt_len, max_new)
+    return [TraceRequest(rid=i, arrival_s=float(t), prompt=p, max_new=m)
+            for i, (t, (p, m)) in enumerate(zip(arrivals, bodies))]
+
+
+TRACES = {"poisson": poisson_trace, "bursty": bursty_trace}
+
+
+def make_trace(name: str, **kw) -> List[TraceRequest]:
+    try:
+        return TRACES[name](**kw)
+    except KeyError:
+        raise ValueError(
+            f"unknown trace {name!r}; known: {sorted(TRACES)}") from None

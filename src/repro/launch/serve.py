@@ -1,22 +1,41 @@
-"""Serving launcher: continuous-batching decode over slot-based state.
+"""Serving launcher: a continuous-batching scheduler over slot-based state.
 
-A fixed pool of batch slots shares one decode state (the SDSA/SSM states
-and KV caches are per-slot along the batch axis). Requests queue in, get
-assigned a free slot, decode until their token budget, then release the
-slot — the standard continuous-batching pattern, with the twist that in
-spiking mode the per-slot state is O(d) (SDSA status vectors), so slot
-turnover costs no cache re-prefill, only a state reset.
+A pool of batch slots shares one decode state (the SDSA/SSM states and
+KV caches are per-slot along the batch axis). Requests arrive on a
+trace clock, queue in, get assigned a free slot, are PREFILLED in one
+bucketed chunked call (prefill/decode disaggregation — not streamed
+token-at-a-time through the decode step), then decode at their OWN
+per-slot position until their token budget, and release the slot.
+
+The per-slot position vector is the load-bearing fix: the pool steps
+with ``pos: (n_slots,)`` so a slot admitted while others are
+mid-generation writes its KV rows / RoPE angles / causal mask at ITS
+position — decoding a request in a busy pool is bitwise the same as
+decoding it alone (tests/test_serve_scheduler.py pins this). The old
+loop stepped everyone at ``pos.max()``, a latent correctness bug masked
+only by aligned-wave admission.
+
+The spiking payoff this cashes in: per-slot SDSA state is O(d), so slot
+turnover costs no cache re-prefill — exactly what makes large
+continuous-batching pools cheap (`reset_slot_state` / `merge_slot_state`
+in models/lm.py are the structural slot surgery). `ReplicaPool` layers
+multi-replica dispatch on top, steering admission toward event-light
+replicas with `runtime/straggler.occupancy_imbalance` as the load
+signal (event skew IS the load).
 
 CLI: python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
         --requests 6 --max-new 16
+     python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+        --trace bursty --requests 24 --slots 8 --replicas 2
 """
 from __future__ import annotations
 
 import argparse
+import bisect
 import dataclasses
 import os
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +46,24 @@ from repro.configs.base import LMConfig
 from repro.kernels import dispatch
 from repro.launch import steps as steps_mod
 from repro.models import lm
+from repro.runtime.straggler import OccupancyImbalance, occupancy_imbalance
+
+
+class FakeClock:
+    """Deterministic injectable clock for scheduler tests: ``clock()``
+    reads, ``clock.advance(dt)`` moves time. `run_until_drained` advances
+    an advanceable injected clock across backoff/arrival waits instead of
+    real-sleeping (a real ``time.sleep`` under a fake clock spins the
+    drain loop to its step cap without ever opening a gate)."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += float(dt)
 
 
 @dataclasses.dataclass
@@ -34,11 +71,11 @@ class Request:
     """One generation request with an explicit lifecycle.
 
     `state` walks pending -> running -> done|failed; every exit path
-    (completion, deadline, decode fault, retry exhaustion) records a
-    terminal state and releases the slot — a request is never silently
-    lost. `failure_cause` keeps the LAST fault even when a retry later
-    succeeds (observability of flaky slots); terminal failure iff
-    ``state == "failed"``.
+    (completion, deadline, prefill/decode fault, retry exhaustion)
+    records a terminal state and releases the slot — a request is never
+    silently lost. `failure_cause` keeps the LAST fault even when a
+    retry later succeeds (observability of flaky slots); terminal
+    failure iff ``state == "failed"``.
     """
     rid: int
     prompt: List[int]
@@ -53,12 +90,56 @@ class Request:
     retries: int = 0
     submitted_at: Optional[float] = None
     not_before: float = 0.0              # backoff gate (monotonic clock)
+    # --- trace / latency fields ---
+    arrival_s: Optional[float] = None    # trace arrival, relative to epoch
+    finished_at: Optional[float] = None  # terminal timestamp (clock domain)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaLoad:
+    """One replica's admission-time load: slot pressure plus event load.
+
+    `event_occ` is the mean nonzero fraction of the busy slots' SDSA
+    status vectors — accumulated spike traffic, the O(d)-cheap per-slot
+    proxy for the occupied-tile counts the kernels will walk. Event skew
+    is the load (NEURAL): two replicas with equal busy counts can carry
+    very different event work, and `score` folds that in so admission
+    steers toward the event-light replica."""
+    busy: int
+    queued: int
+    event_occ: float
+
+    @property
+    def score(self) -> float:
+        return self.busy + self.queued + self.event_occ * max(self.busy, 1)
+
+
+# Shared jit caches: Servers with the same (hashable, frozen) LMConfig
+# reuse one compiled decode step / prefill family instead of retracing
+# per instance — slot parity tests and replica pools construct many
+# Servers over one config.
+_STEP_CACHE: dict = {}
+
+
+def _cached_jit(kind: str, cfg: LMConfig, spiking: bool, mesh, max_seq: int):
+    key = (kind, cfg, spiking, id(mesh) if mesh is not None else None,
+           max_seq)
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        if kind == "step":
+            fn = jax.jit(steps_mod.make_serve_step(cfg, spiking, mesh=mesh))
+        else:
+            fn = jax.jit(steps_mod.make_prefill_state(
+                cfg, spiking, mesh=mesh, max_seq=max_seq))
+        _STEP_CACHE[key] = fn
+    return fn
 
 
 class Server:
     def __init__(self, cfg: LMConfig, n_slots: int = 4, max_seq: int = 256,
                  spiking: Optional[bool] = None, seed: int = 0, mesh=None,
-                 clock=time.monotonic, backoff_s: float = 0.05):
+                 clock=time.monotonic, backoff_s: float = 0.05,
+                 prefill_bucket_min: int = 8):
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_seq = max_seq
@@ -69,38 +150,57 @@ class Server:
         self.pos = np.zeros(n_slots, np.int32)       # per-slot position
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.pending: List[Request] = []
+        self.arrivals: List[Request] = []            # trace queue, by arrival_s
+        self.epoch: Optional[float] = None           # t0 for arrival offsets
         self.finished: List[Request] = []            # done AND failed
         self._clock = clock                          # injectable for tests
         self.backoff_s = backoff_s                   # retry backoff base
+        self.prefill_bucket_min = prefill_bucket_min
         # The continuous-batching decode step traces under the mesh, so
         # spike matmuls inside resolve mesh-aware (per-shard capability
         # checks on the slot batch — the axis a deployment shards over
         # 'data') and distributed decode keeps the event kernels. The
         # mesh steers RESOLUTION only; placing params/state on it is the
         # deployment's in_shardings.
-        self._step = jax.jit(
-            steps_mod.make_serve_step(cfg, self.spiking, mesh=mesh))
+        self._step = _cached_jit("step", cfg, self.spiking, mesh, max_seq)
+        # Bucketed chunked prefill (admission): one compile per pow2
+        # prompt-length bucket, shared across Servers of this config.
+        self._prefill = _cached_jit("prefill", cfg, self.spiking, mesh,
+                                    max_seq)
         self.steps_executed = 0
+        self.prefills_executed = 0
 
+    # --------------------------------------------------------- submission
     def submit(self, req: Request):
         if req.submitted_at is None:
             req.submitted_at = self._clock()
         req.state = "pending"
         self.pending.append(req)
 
+    def submit_at(self, req: Request, arrival_s: float):
+        """Queue `req` to arrive `arrival_s` seconds after the server's
+        epoch (set at the first step) — the async-admission entry point
+        for trace replay. The request is not visible to the scheduler (and
+        its deadline clock does not start) until it arrives."""
+        req.arrival_s = float(arrival_s)
+        keys = [r.arrival_s for r in self.arrivals]
+        self.arrivals.insert(bisect.bisect_right(keys, req.arrival_s), req)
+
+    def _admit_arrivals(self, now: float):
+        if self.epoch is None:
+            self.epoch = now
+        while self.arrivals \
+                and self.epoch + self.arrivals[0].arrival_s <= now:
+            self.submit(self.arrivals.pop(0))
+
     # ------------------------------------------------------ slot lifecycle
     def _reset_slot_state(self, i: int):
-        """Zero slot i's decode state (leaves are stacked
-        ``(n_groups, n_slots, ...)`` — slot batch = axis 1). In spiking
-        mode this is O(d) per layer (the SDSA status vectors), the cheap
-        turnover the serve docstring advertises; the dense KV cache pays
-        its size. Re-prefilling the prompt rebuilds the state."""
-        def zero(x):
-            if hasattr(x, "ndim") and x.ndim >= 2 \
-                    and x.shape[1] == self.n_slots:
-                return x.at[:, i].set(jnp.zeros_like(x[:, i]))
-            return x
-        self.state = jax.tree.map(zero, self.state)
+        """Zero slot i's decode state structurally (models/lm.py
+        `reset_slot_state`: every leaf is (n_groups, n_slots, ...), slot
+        batch = axis 1 — validated loudly, never shape-guessed). In
+        spiking mode this is O(d) per layer (the SDSA status vectors);
+        the dense KV cache pays its size."""
+        self.state = lm.reset_slot_state(self.state, i, self.n_slots)
         self.pos[i] = 0
 
     def _finish(self, i: int, req: Request, state: str,
@@ -108,11 +208,13 @@ class Server:
         """Terminal exit: record the outcome and release the slot."""
         req.state = state
         req.done = state == "done"
+        req.finished_at = self._clock()
         if cause is not None:
             req.failure_cause = cause
         self.finished.append(req)
         if i >= 0:
             self.slot_req[i] = None
+            self.pos[i] = 0
 
     def _quarantine(self, i: int, cause: str):
         """Non-terminal fault on slot i: reset the slot, re-enqueue the
@@ -136,13 +238,22 @@ class Server:
 
     def _expire_deadlines(self, now: float):
         """Deadline is terminal on every path: active slots are released,
-        queued requests never admitted."""
+        queued requests never admitted. A request that reached the
+        scheduler without going through submit() (direct pending append,
+        replica handoff) is stamped here at first observation — the
+        deadline clock never dereferences a missing timestamp."""
         for i, req in enumerate(self.slot_req):
-            if req is not None and req.deadline_s is not None \
+            if req is None:
+                continue
+            if req.submitted_at is None:
+                req.submitted_at = now
+            if req.deadline_s is not None \
                     and now - req.submitted_at > req.deadline_s:
                 self._finish(i, req, "failed", "deadline")
         kept = []
         for req in self.pending:
+            if req.submitted_at is None:
+                req.submitted_at = now
             if req.deadline_s is not None \
                     and now - req.submitted_at > req.deadline_s:
                 self._finish(-1, req, "failed", "deadline")
@@ -150,25 +261,93 @@ class Server:
                 kept.append(req)
         self.pending = kept
 
-    def _assign_slots(self, now: float):
-        admissible = [r for r in self.pending if r.not_before <= now]
-        for i in range(self.n_slots):
-            if self.slot_req[i] is None and admissible:
-                req = admissible.pop(0)
-                self.pending.remove(req)
-                self.slot_req[i] = req
-                req.state = "running"
-                self.pos[i] = 0
-                # Reset this slot's state by feeding prompt tokens below.
-                req._feed = list(req.prompt)   # tokens still to prefill
+    # ---------------------------------------------------------- admission
+    def _bucket(self, n: int) -> int:
+        b = self.prefill_bucket_min
+        while b < n:
+            b *= 2
+        return b
 
+    def _admit(self, i: int, req: Request):
+        """Assign slot i and chunk-prefill the prompt in one bucketed
+        call: the fresh single-request state is scattered into the pool
+        (merge overwrites EVERY leaf of the slot — admission never
+        inherits a previous occupant's KV rows or SDSA status) and the
+        slot's position starts at len(prompt). The first generated token
+        comes from the prefill's last-position logits."""
+        req.state = "running"
+        self.slot_req[i] = req
+        prompt = list(req.prompt) if req.prompt else [0]
+        n = len(prompt)
+        toks = np.zeros((1, self._bucket(n)), np.int32)
+        toks[0, :n] = prompt
+        try:
+            logits, single = self._prefill(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([n], jnp.int32))
+            logits_np = np.asarray(logits)[0]
+        except Exception as e:
+            self._quarantine(i, f"prefill_error:{type(e).__name__}")
+            return
+        if not np.isfinite(logits_np).all():
+            self._quarantine(i, "nan_logits")
+            return
+        self.state = lm.merge_slot_state(self.state, single, jnp.int32(i))
+        self.pos[i] = n
+        self.prefills_executed += 1
+        req.generated.append(int(logits_np.argmax()))
+        self._maybe_complete(i, req)
+
+    def _maybe_complete(self, i: int, req: Request):
+        if len(req.generated) >= req.max_new \
+                or self.pos[i] >= self.max_seq - 1:
+            self._finish(i, req, "done")
+
+    def _assign_slots(self, now: float):
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        kept, admitted = [], []
+        for req in self.pending:
+            if len(req.prompt) >= self.max_seq:
+                self._finish(-1, req, "failed", "prompt_too_long")
+            elif free and req.not_before <= now:
+                admitted.append((free.pop(0), req))
+            else:
+                kept.append(req)
+        self.pending = kept
+        for i, req in admitted:
+            self._admit(i, req)
+
+    # --------------------------------------------------------- load signal
+    def occupancy_load(self) -> ReplicaLoad:
+        """Admission-time load: busy slots, queue depth, and the event
+        occupancy of the busy slots' SDSA statuses (spiking mode; 0.0
+        dense — a dense replica's event load is its slot count)."""
+        busy = [i for i, r in enumerate(self.slot_req) if r is not None]
+        ev = 0.0
+        if busy and self.spiking:
+            nz = tot = 0
+            for layer in self.state:
+                if layer.sdsa is None:
+                    continue
+                status = np.asarray(
+                    layer.sdsa.status[:, busy].astype(jnp.float32))
+                nz += int(np.count_nonzero(status))
+                tot += status.size
+            if tot:
+                ev = nz / tot
+        return ReplicaLoad(busy=len(busy),
+                           queued=len(self.pending) + len(self.arrivals),
+                           event_occ=ev)
+
+    # -------------------------------------------------------------- stepping
     def step(self):
-        """One batched decode step across all active slots. Every fault
-        has an exit path: a raising decode step quarantines the batch
-        (bounded retries), non-finite logits quarantine their slot, and
-        deadline overruns fail terminally — no slot leaks, no request is
-        dropped without a recorded cause."""
+        """One batched decode step across all active slots, at their
+        per-slot positions. Every fault has an exit path: a raising
+        prefill/decode quarantines (bounded retries), non-finite logits
+        quarantine their slot, and deadline overruns fail terminally —
+        no slot leaks, no request is dropped without a recorded cause."""
         now = self._clock()
+        self._admit_arrivals(now)
         self._expire_deadlines(now)
         self._assign_slots(now)
         tokens = np.zeros(self.n_slots, np.int32)
@@ -177,14 +356,11 @@ class Server:
             if req is None:
                 continue
             active[i] = True
-            if req._feed:                       # prompt prefill (streaming)
-                tokens[i] = req._feed.pop(0)
-            else:
-                tokens[i] = req.generated[-1] if req.generated \
-                    else (req.prompt[-1] if req.prompt else 0)
+            tokens[i] = req.generated[-1] if req.generated \
+                else (req.prompt[-1] if req.prompt else 0)
         if not active.any():
             return False
-        pos = jnp.int32(int(self.pos.max()))    # aligned stepping
+        pos = jnp.asarray(self.pos)          # per-slot positions (n_slots,)
         try:
             logits, new_state = self._step(self.params, self.state,
                                            jnp.asarray(tokens), pos)
@@ -209,22 +385,138 @@ class Server:
                 self._quarantine(i, "nan_logits")
                 continue
             self.pos[i] += 1
-            if not req._feed:                   # generating phase
-                req.generated.append(int(next_tokens[i]))
-                if len(req.generated) >= req.max_new \
-                        or self.pos[i] >= self.max_seq - 1:
-                    self._finish(i, req, "done")
+            req.generated.append(int(next_tokens[i]))
+            self._maybe_complete(i, req)
         return True
 
+    # ------------------------------------------------------------- draining
+    def _next_gate(self, now: float) -> Optional[float]:
+        """Earliest future instant anything becomes actionable: a backoff
+        gate opening or a trace arrival. None when nothing is queued."""
+        gates = [r.not_before for r in self.pending]
+        if self.arrivals:
+            gates.append((self.epoch if self.epoch is not None else now)
+                         + self.arrivals[0].arrival_s)
+        return min(gates) if gates else None
+
+    def _idle_wait(self):
+        """Nothing active but work queued: wait for the next gate. An
+        advanceable injected clock (FakeClock) is advanced directly —
+        deterministic tests never real-sleep; the real clock sleeps in
+        small increments."""
+        now = self._clock()
+        gate = self._next_gate(now)
+        delay = max((gate - now) if gate is not None else 0.0, 1e-4)
+        advance = getattr(self._clock, "advance", None)
+        if advance is not None:
+            advance(delay)
+        elif self._clock is time.monotonic:
+            time.sleep(min(delay, 0.005))
+        # else: a bare injected callable can't be advanced — do NOT
+        # real-sleep against fake time; the drain loop spends a step.
+
     def run_until_drained(self, max_steps: int = 10_000):
-        """Drive until no request is active or pending (or `max_steps`).
-        Returns the finished requests — done and terminally failed."""
+        """Drive until no request is active, pending, or still arriving
+        (or `max_steps`). Returns the finished requests — done and
+        terminally failed."""
         for _ in range(max_steps):
             stepped = self.step()
             if not stepped:
-                if not self.pending:
+                if not self.pending and not self.arrivals:
                     break
-                time.sleep(0.005)      # everyone backing off: let it lapse
+                self._idle_wait()
+        return self.finished
+
+
+class ReplicaPool:
+    """Multi-replica dispatch: N Servers over one model, admission
+    steered by the occupancy-imbalance load signal.
+
+    Each arriving request is routed to the replica with the lowest
+    `ReplicaLoad.score` (busy slots + queue depth + event occupancy of
+    the busy slots — event skew is the load, so two equally-busy
+    replicas are told apart by the spike traffic their slots carry).
+    Every routing decision records a
+    `runtime.straggler.occupancy_imbalance` over the per-replica scores
+    in `imbalance_log` — the same max/mean skew signal the sharded
+    training path monitors, here driving admission instead of
+    rebalancing. ``balancer="round_robin"`` is the load-blind baseline.
+    """
+
+    def __init__(self, cfg: LMConfig, n_replicas: int = 2,
+                 balancer: str = "occupancy", clock=time.monotonic,
+                 **server_kw):
+        if balancer not in ("occupancy", "round_robin"):
+            raise ValueError(f"unknown balancer {balancer!r}")
+        # Same seed per replica: true replicas of one model.
+        self.replicas = [Server(cfg, clock=clock, **server_kw)
+                         for _ in range(n_replicas)]
+        self.balancer = balancer
+        self._clock = clock
+        self._rr = 0
+        self.arrivals: List[Request] = []
+        self.epoch: Optional[float] = None
+        self.imbalance_log: List[OccupancyImbalance] = []
+
+    def _dispatch(self, req: Request):
+        loads = [r.occupancy_load() for r in self.replicas]
+        # Integer-scaled scores feed the same skew summary the training
+        # straggler monitor uses; imbalance 1.0 = perfectly balanced.
+        self.imbalance_log.append(occupancy_imbalance(
+            [int(round(100 * ld.score)) for ld in loads]))
+        if self.balancer == "round_robin":
+            idx = self._rr
+            self._rr = (self._rr + 1) % len(self.replicas)
+        else:
+            idx = min(range(len(loads)), key=lambda j: loads[j].score)
+        self.replicas[idx].submit(req)
+        return idx
+
+    def submit(self, req: Request):
+        return self._dispatch(req)
+
+    def submit_at(self, req: Request, arrival_s: float):
+        """Route at ARRIVAL, not submission — load is only current when
+        the request actually shows up."""
+        req.arrival_s = float(arrival_s)
+        keys = [r.arrival_s for r in self.arrivals]
+        self.arrivals.insert(bisect.bisect_right(keys, req.arrival_s), req)
+
+    def step(self) -> bool:
+        now = self._clock()
+        if self.epoch is None:
+            self.epoch = now
+        while self.arrivals and self.epoch + self.arrivals[0].arrival_s <= now:
+            self._dispatch(self.arrivals.pop(0))
+        stepped = [r.step() for r in self.replicas]
+        return any(stepped)
+
+    @property
+    def finished(self) -> List[Request]:
+        return [req for r in self.replicas for req in r.finished]
+
+    def _idle_wait(self):
+        now = self._clock()
+        gates = [g for g in (r._next_gate(now) for r in self.replicas)
+                 if g is not None]
+        if self.arrivals:
+            gates.append((self.epoch if self.epoch is not None else now)
+                         + self.arrivals[0].arrival_s)
+        delay = max((min(gates) - now) if gates else 0.0, 1e-4)
+        advance = getattr(self._clock, "advance", None)
+        if advance is not None:
+            advance(delay)
+        elif self._clock is time.monotonic:
+            time.sleep(min(delay, 0.005))
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            stepped = self.step()
+            if not stepped:
+                if not self.arrivals and not any(
+                        r.pending or r.arrivals for r in self.replicas):
+                    break
+                self._idle_wait()
         return self.finished
 
 
@@ -236,6 +528,14 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="multi-replica dispatch: >1 runs a ReplicaPool "
+                         "with occupancy-steered admission")
+    ap.add_argument("--trace", default=None,
+                    choices=("poisson", "bursty"),
+                    help="replay a synthetic arrival trace "
+                         "(benchmarks/serve_traces.py) instead of "
+                         "submitting everything at t=0")
     ap.add_argument("--backend", default=None,
                     help="kernel backend override, same grammar as "
                          "EXSPIKE_BACKEND (e.g. 'ref' or 'sdsa=pallas,ref')")
@@ -257,22 +557,42 @@ def main():
     print(f"[serve] kernel backends"
           f"{' (mesh-aware)' if mesh is not None else ''}: "
           f"{dispatch.resolved_backends(mesh=mesh)}")
-    server = Server(cfg, n_slots=args.slots,
-                    spiking=False if args.dense else None, mesh=mesh)
+    kw = dict(n_slots=args.slots,
+              spiking=False if args.dense else None, mesh=mesh)
+    server = (ReplicaPool(cfg, n_replicas=args.replicas, **kw)
+              if args.replicas > 1 else Server(cfg, **kw))
     rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=list(rng.integers(0, cfg.vocab, 8)),
-                    max_new=args.max_new)
-            for i in range(args.requests)]
+    if args.trace:
+        from benchmarks.serve_traces import make_trace
+        trace = make_trace(args.trace, seed=0, n_requests=args.requests,
+                           vocab=cfg.vocab, max_new=(args.max_new,
+                                                     args.max_new))
+        reqs = []
+        for t in trace:
+            r = Request(rid=t.rid, prompt=list(t.prompt), max_new=t.max_new)
+            server.submit_at(r, t.arrival_s)
+            reqs.append(r)
+    else:
+        reqs = [Request(rid=i,
+                        prompt=[int(t) for t in rng.integers(0, cfg.vocab, 8)],
+                        max_new=args.max_new)
+                for i in range(args.requests)]
+        for r in reqs:
+            server.submit(r)
     t0 = time.time()
-    for r in reqs:
-        server.submit(r)
     server.run_until_drained()
     dt = time.time() - t0
     total_new = sum(len(r.generated) for r in reqs)
+    servers = server.replicas if isinstance(server, ReplicaPool) \
+        else [server]
+    steps = sum(s.steps_executed for s in servers)
+    prefills = sum(s.prefills_executed for s in servers)
     print(f"[serve] {len(reqs)} requests, {total_new} tokens, "
-          f"{server.steps_executed} steps, {dt:.1f}s "
+          f"{steps} decode steps + {prefills} prefills, {dt:.1f}s "
           f"({total_new / dt:.1f} tok/s)")
+    if isinstance(server, ReplicaPool) and server.imbalance_log:
+        last = server.imbalance_log[-1]
+        print(f"[serve] admission load signal: {last.as_fields()}")
     for r in reqs[:3]:
         print(f"  req {r.rid}: prompt {r.prompt[:4]}... -> "
               f"{r.generated[:8]}...")

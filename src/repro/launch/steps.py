@@ -111,6 +111,27 @@ def make_prefill(cfg: LMConfig, spiking: bool, mesh=None) -> Callable:
 
 
 def make_serve_step(cfg: LMConfig, spiking: bool, mesh=None) -> Callable:
+    """serve_step(params, state, token (B,), pos) -> (logits, state).
+
+    `pos` is a scalar (aligned stepping: streaming prefill, dry-run
+    shapes) or a per-slot (B,) vector — the continuous-batching serve
+    loop passes its per-slot position vector so every slot decodes at
+    its own position (see lm.decode_step)."""
     def serve_step(params, state, token, pos):
         return lm.decode_step(cfg, params, state, token, pos, spiking)
     return _under_mesh(serve_step, mesh)
+
+
+def make_prefill_state(cfg: LMConfig, spiking: bool, mesh=None,
+                       max_seq: int = 256) -> Callable:
+    """prefill_state(params, tokens (B, L), length (B,)) ->
+    (last logits (B, vocab), decode state at per-slot pos = length).
+
+    The bucketed masked prefill the serve scheduler admits requests
+    with (prefill/decode disaggregation): one jit trace per (B, L)
+    bucket, pad steps masked out of every state write. `max_seq` sizes
+    the dense KV cache (ignored by O(d) spiking state)."""
+    def prefill_state(params, tokens, length):
+        return lm.prefill_chunked(cfg, params, tokens, length, spiking,
+                                  max_seq)
+    return _under_mesh(prefill_state, mesh)

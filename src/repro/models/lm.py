@@ -467,6 +467,11 @@ def init_state(cfg: LMConfig, spec: BlockSpec, b: int, s: int, spiking: bool,
 
 
 def init_decode_state(cfg: LMConfig, b: int, s: int, spiking: bool):
+    """Decode-state layout contract (load-bearing for the serve loop):
+    the state is a list of LayerState, one per pattern position, and
+    EVERY array leaf is stacked ``(n_groups, b, ...)`` — the slot batch
+    is axis 1 of every leaf. `reset_slot_state` / `merge_slot_state`
+    index that axis structurally; nothing shape-guesses."""
     pattern, n_groups = layer_pattern(cfg)
     return [init_state(cfg, spec, b, s, spiking, n_groups)
             for spec in pattern]
@@ -474,14 +479,23 @@ def init_decode_state(cfg: LMConfig, b: int, s: int, spiking: bool):
 
 def decode_step(cfg: LMConfig, params: Params, state: list,
                 token: jax.Array, pos: jax.Array, spiking: bool):
-    """One serving step. token: (B,) int32; pos: scalar int32 position.
+    """One serving step. token: (B,) int32; pos: scalar int32 OR per-slot
+    (B,) int32 positions.
+
+    Per-slot positions are the continuous-batching contract: each batch
+    slot decodes at ITS OWN position (KV-cache write index, RoPE angle,
+    causal mask), so a request admitted while others are mid-generation
+    is bitwise-identical to decoding it alone. A scalar pos broadcasts to
+    every slot — the aligned special case (streaming prefill, dry-run
+    shapes) — never the other way around.
 
     Returns (logits (B, vocab), new_state). Dense mode appends to the KV
-    cache; spiking mode updates O(d) SDSA statuses; SSM kinds update their
-    recurrent states.
+    cache; spiking mode updates O(d) SDSA statuses (position-free — the
+    paper's serving payoff); SSM kinds update their recurrent states.
     """
     pattern, n_groups = layer_pattern(cfg)
     lif = lif_cfg_of(cfg)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), token.shape)
     x = jnp.take(params["embed"], token, axis=0)            # (B, D)
     if spiking:
         x = jnp.broadcast_to(x[None], (cfg.spiking.t_steps,) + x.shape)
@@ -607,6 +621,97 @@ def prefill_with_state(cfg: LMConfig, params: Params, tokens: jax.Array,
 
     state, logits_seq = jax.lax.scan(body, state, jnp.arange(n))
     return logits_seq[-1], state
+
+
+def prefill_chunked(cfg: LMConfig, params: Params, tokens: jax.Array,
+                    length: jax.Array, spiking: bool, max_seq: int):
+    """Bucketed streaming prefill for continuous-batching admission.
+
+    tokens: (B, L) prompts right-padded to a shared bucket length L;
+    length: (B,) true prompt lengths (0 < length <= L). Scans decode_step
+    over the L positions but masks every state write (and the last-logit
+    capture) to steps ``i < length`` per slot, so pad tokens never touch
+    the KV cache, the SDSA status, or the SSM recurrences — the padded
+    run's state is bitwise what the unpadded run of each prompt alone
+    would produce. One jit trace serves every prompt in the (L, B)
+    bucket; the serve scheduler pads prompt lengths to pow2 buckets so
+    admission cost is O(log max_prompt) compiles, not one per length.
+
+    Returns (last-position logits (B, vocab), decode state positioned at
+    ``pos = length`` per slot — ready for `decode_step` with a per-slot
+    position vector).
+    """
+    b, pad_len = tokens.shape
+    state = init_decode_state(cfg, b, max_seq, spiking)
+    length = jnp.asarray(length, jnp.int32)
+
+    def body(carry, i):
+        st, last = carry
+        logits, new_st = decode_step(
+            cfg, params, st, tokens[:, i],
+            jnp.broadcast_to(i.astype(jnp.int32), (b,)), spiking)
+        live = i < length                                   # (B,)
+
+        def sel(new, old):
+            # leaves are (n_groups, B, ...): mask on the slot axis (1)
+            m = live.reshape((1, b) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+        st = jax.tree.map(sel, new_st, st)
+        last = jnp.where(live[:, None], logits, last)
+        return (st, last), None
+
+    init_last = jnp.zeros((b, cfg.vocab), jnp.float32)
+    (state, last), _ = jax.lax.scan(
+        body, (state, init_last), jnp.arange(pad_len))
+    return last, state
+
+
+# ----------------------------------------------- slot-state surgery (serve)
+def _check_slot_leaf(path, leaf, n_slots: int):
+    if leaf is None:
+        return
+    if getattr(leaf, "ndim", 0) < 2 or leaf.shape[1] != n_slots:
+        raise ValueError(
+            f"decode-state leaf at {jax.tree_util.keystr(path)} has shape "
+            f"{getattr(leaf, 'shape', None)} — not slot-batched "
+            f"(expected (n_groups, {n_slots}, ...)). The decode-state "
+            f"contract (init_decode_state) puts the slot batch at axis 1 "
+            f"of every leaf; refusing to shape-guess.")
+
+
+def reset_slot_state(state: list, slot: int, n_slots: int) -> list:
+    """Zero slot `slot` of every decode-state leaf, STRUCTURALLY.
+
+    Uses the documented layout (every leaf is ``(n_groups, n_slots,
+    ...)``; see `init_decode_state`) instead of matching any pytree leaf
+    whose shape[1] happens to equal n_slots — a coincidental dimension
+    (e.g. 4 heads in a 4-slot pool on an unstacked aux leaf) must not be
+    silently zeroed, and a non-conforming leaf must not be silently
+    skipped (stale state leaking into the slot's next occupant). Any
+    leaf that violates the contract raises loudly.
+
+    In spiking mode this is O(d) per layer (the SDSA status vectors) —
+    the cheap slot turnover the serve loop's docstring advertises; the
+    dense KV cache pays its size.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(state)
+    for path, leaf in flat:
+        _check_slot_leaf(path, leaf, n_slots)
+    return jax.tree.map(
+        lambda x: x.at[:, slot].set(jnp.zeros_like(x[:, slot])), state)
+
+
+def merge_slot_state(pool_state: list, single_state: list,
+                     slot: jax.Array) -> list:
+    """Scatter a freshly-prefilled single-request state (leaves
+    ``(n_groups, 1, ...)``) into slot `slot` of the pool state (leaves
+    ``(n_groups, n_slots, ...)``). Overwrites EVERY leaf of the slot, so
+    admission never inherits a previous occupant's KV rows or SDSA
+    status — merge IS the reset. Jit this with donate_argnums=(0,) to
+    update the pool in place."""
+    return jax.tree.map(
+        lambda pool, one: pool.at[:, slot].set(one[:, 0].astype(pool.dtype)),
+        pool_state, single_state)
 
 
 def param_count(cfg: LMConfig) -> int:

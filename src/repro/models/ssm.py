@@ -7,6 +7,15 @@ in spiking mode their block outputs are fired through LIF so downstream
 matmuls stay event-driven (DESIGN.md §4). Sequence recurrences use
 `jax.lax.scan` (single compiled loop body; analytic FLOP accounting in the
 roofline handles trip counts).
+
+Decode states here are POSITION-FREE: the recurrences fold each token
+into fixed-shape carries, so the serve scheduler's per-slot position
+vector never indexes into them (only the dense KV cache consumes
+positions). Under the slot-pool layout (models/lm.py
+`init_decode_state`) every state leaf is stacked `(n_groups, n_slots,
+...)` with the slot batch at axis 1 — `*_state_init(b, ...)` is called
+with b = n_slots, and slot surgery (`reset_slot_state` /
+`merge_slot_state`) addresses leaves structurally by that contract.
 """
 from __future__ import annotations
 

@@ -159,7 +159,13 @@ def attention_dense_decode(
     qk_norm: bool = False, rope_theta: float = 1e4,
     masked_cache_update: bool = True,
 ) -> tuple[jax.Array, KVCache]:
-    """One-token GQA decode. x_t: (B, D); pos: scalar current position.
+    """One-token GQA decode. x_t: (B, D); pos: scalar or per-batch (B,)
+    current positions.
+
+    Per-batch positions are what continuous batching needs: a slot
+    admitted mid-stream decodes at ITS position (RoPE angle, cache write
+    index, causal mask), not the pool maximum. A scalar pos broadcasts —
+    aligned callers (streaming prefill, dry-run shapes) are unchanged.
 
     masked_cache_update=True writes the new K/V via an arithmetic one-hot
     merge instead of dynamic_update_slice: elementwise on the (possibly
@@ -169,22 +175,23 @@ def attention_dense_decode(
     """
     b, _ = x_t.shape
     s_len = cache.k.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     q, k, v = _project_qkv(p, x_t[:, None, :], n_heads, n_kv, d_head)
     if qk_norm:
         q = rmsnorm(p["q_norm"], q)
         k = rmsnorm(p["k_norm"], k)
-    sin, cos = rope_angles(pos[None], d_head, rope_theta)
+    sin, cos = rope_angles(pos[:, None], d_head, rope_theta)   # (B,1,dh/2)
     q = apply_rope(q, sin, cos)
     k = apply_rope(k, sin, cos)
     if masked_cache_update:
-        hit = (jnp.arange(s_len) == pos)[None, :, None, None]
+        hit = (jnp.arange(s_len)[None, :] == pos[:, None])[..., None, None]
         new_k = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
         new_v = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
     else:
-        new_k = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cache.k.dtype), (0, pos, 0, 0))
-        new_v = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0))
+        new_k = jax.vmap(lambda c, u, p_: jax.lax.dynamic_update_slice(
+            c, u, (p_, 0, 0)))(cache.k, k.astype(cache.k.dtype), pos)
+        new_v = jax.vmap(lambda c, u, p_: jax.lax.dynamic_update_slice(
+            c, u, (p_, 0, 0)))(cache.v, v.astype(cache.v.dtype), pos)
     # Grouped-query scores WITHOUT materializing the repeated cache:
     # repeating KV to H heads broadcasts a (B,S,H,dh) tensor whose head dim
     # must align with the model-sharded Q — SPMD then replicates the whole
@@ -196,9 +203,10 @@ def attention_dense_decode(
     scores = jnp.einsum("bgrd,bsgd->bgrs", qg, new_k).astype(jnp.float32)
     scores = scores * (d_head ** -0.5)
     kpos = jnp.arange(s_len)[None, None, None, :]
-    valid = kpos <= pos
+    pos_b = pos[:, None, None, None]
+    valid = kpos <= pos_b
     if window is not None:
-        valid = valid & (kpos > pos - window)
+        valid = valid & (kpos > pos_b - window)
     scores = jnp.where(valid, scores, -jnp.inf)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bgrs,bsgd->bgrd", probs, new_v)        # (B,KV,rep,dh)

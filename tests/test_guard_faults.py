@@ -352,7 +352,10 @@ def test_serve_nan_quarantine_retries_then_succeeds():
 
 def test_serve_decode_error_releases_all_slots_and_recovers():
     server = serve.Server(SERVE_CFG, n_slots=2, max_seq=32, backoff_s=0.0)
-    reqs = [serve.Request(rid=i, prompt=[i + 1], max_new=2)
+    # max_new=3: admission prefill emits the first token, so 2-token
+    # requests would finish before the fault lands — leave one decode
+    # step of runway.
+    reqs = [serve.Request(rid=i, prompt=[i + 1], max_new=3)
             for i in range(2)]
     for r in reqs:
         server.submit(r)

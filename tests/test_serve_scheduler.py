@@ -1,0 +1,324 @@
+"""Continuous-batching scheduler tests.
+
+The load-bearing one is staggered-admission decode parity: a request
+admitted into a busy pool (slots at mixed positions) must generate the
+SAME tokens as the same prompt decoded alone. The old serve loop
+stepped the whole pool at ``pos.max()``, so a mid-stream admit wrote
+KV rows / RoPE angles / causal masks at the pool-max position —
+`test_shared_pos_max_is_wrong` pins that this was a REAL bug (the old
+scheme demonstrably diverges), and the parity tests pin that per-slot
+position vectors fix it, dense and spiking.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.serve_traces import bursty_trace, make_trace, poisson_trace
+from repro.configs.base import LMConfig, SpikingConfig
+from repro.launch.serve import FakeClock, ReplicaPool, Request, Server
+from repro.models import lm
+from repro.runtime import faults
+
+CFG = LMConfig(name="sched-test", family="dense", n_layers=2, d_model=32,
+               n_heads=4, n_kv_heads=2, d_ff=64, vocab=64,
+               spiking=SpikingConfig(t_steps=1), remat="none", loss_chunk=16)
+
+# n_heads == n_slots == 4: the dimension collision that fooled the old
+# shape-guessing slot reset.
+N_SLOTS = 4
+
+
+def _prompts(n, lens=(5, 9, 7, 4)):
+    rng = np.random.default_rng(0)
+    return [list(map(int, rng.integers(0, CFG.vocab, lens[i % len(lens)])))
+            for i in range(n)]
+
+
+def _solo(prompt, max_new, spiking):
+    s = Server(CFG, n_slots=1, max_seq=64, spiking=spiking,
+               clock=FakeClock())
+    r = Request(rid=0, prompt=prompt, max_new=max_new)
+    s.submit(r)
+    s.run_until_drained()
+    assert r.state == "done"
+    return r.generated
+
+
+# ------------------------------------------------- staggered-admission parity
+@pytest.mark.parametrize("spiking", [False, True],
+                         ids=["dense", "spiking"])
+def test_staggered_admission_matches_solo(spiking):
+    """Requests admitted at different steps into a busy pool each decode
+    exactly the tokens they'd produce alone — the per-slot position fix
+    end to end, greedy tokens being the bitwise-visible surface."""
+    prompts = _prompts(3)
+    solo = [_solo(p, 6, spiking) for p in prompts]
+    srv = Server(CFG, n_slots=N_SLOTS, max_seq=64, spiking=spiking,
+                 clock=FakeClock())
+    reqs = [Request(rid=i, prompt=p, max_new=6)
+            for i, p in enumerate(prompts)]
+    srv.submit(reqs[0])
+    srv.step()
+    srv.step()                       # req0 is now mid-generation
+    srv.submit(reqs[1])              # admitted at a non-aligned position
+    srv.step()
+    srv.submit(reqs[2])              # and another offset again
+    srv.run_until_drained()
+    for i, r in enumerate(reqs):
+        assert r.state == "done", (i, r.state, r.failure_cause)
+        assert r.generated == solo[i], i
+    assert all(s is None for s in srv.slot_req)     # no leaked slots
+
+
+def test_shared_pos_max_is_wrong_vector_pos_is_right():
+    """Regression at the decode_step level: stepping a staggered pool at
+    the shared ``pos.max()`` (the old serve loop) diverges from solo
+    decode, while the per-slot vector matches to 1e-5. Dense mode — the
+    KV write index, RoPE angle, and causal mask are what consume pos."""
+    prompt = _prompts(1)[0]
+    b1 = len(prompt)
+
+    # Solo reference: prefill then one decode step at pos=b1.
+    toks = jnp.asarray([prompt], jnp.int32)
+    logits_solo, st_solo = lm.prefill_chunked(
+        CFG, lm.init_params(CFG, __import__("jax").random.PRNGKey(0)),
+        toks, jnp.asarray([b1], jnp.int32), False, 64)
+    params = lm.init_params(CFG, __import__("jax").random.PRNGKey(0))
+    next_tok = jnp.argmax(logits_solo, -1).astype(jnp.int32)
+    ref_logits, _ = lm.decode_step(
+        CFG, params, st_solo, next_tok, jnp.int32(b1), False)
+
+    # Pool: slot 0 parked at a LARGER position, slot 1 holds our prompt.
+    pool = lm.init_decode_state(CFG, 2, 64, False)
+    pool = lm.merge_slot_state(pool, st_solo, jnp.int32(1))
+    pos = np.array([b1 + 5, b1], np.int32)          # staggered
+    tok = jnp.asarray([0, int(next_tok[0])], jnp.int32)
+
+    good, _ = lm.decode_step(CFG, params, pool, tok,
+                             jnp.asarray(pos), False)
+    np.testing.assert_allclose(np.asarray(good[1]),
+                               np.asarray(ref_logits[0]),
+                               rtol=1e-5, atol=1e-5)
+
+    # The old scheme: one shared scalar position = pos.max().
+    bad, _ = lm.decode_step(CFG, params, pool, tok,
+                            jnp.int32(int(pos.max())), False)
+    assert not np.allclose(np.asarray(bad[1]), np.asarray(ref_logits[0]),
+                           rtol=1e-3, atol=1e-3)
+
+
+def test_chunked_prefill_matches_streaming_prefill():
+    """Bucketed masked prefill (admission path) produces the same last
+    logits and decode state as the unpadded streaming prefill."""
+    import jax
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    prompt = _prompts(1)[0]
+    toks = jnp.asarray([prompt], jnp.int32)
+    for spiking in (False, True):
+        ref_logits, ref_st = lm.prefill_with_state(
+            CFG, params, toks, spiking, max_seq=64)
+        pad = jnp.zeros((1, 16), jnp.int32).at[0, :len(prompt)].set(
+            jnp.asarray(prompt))
+        got_logits, got_st = lm.prefill_chunked(
+            CFG, params, pad, jnp.asarray([len(prompt)], jnp.int32),
+            spiking, 64)
+        np.testing.assert_allclose(np.asarray(got_logits),
+                                   np.asarray(ref_logits),
+                                   rtol=1e-5, atol=1e-5)
+        for a, b in zip(jax.tree.leaves(got_st), jax.tree.leaves(ref_st)):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=1e-5, atol=1e-5)
+
+
+def test_quarantine_then_retry_at_non_aligned_position():
+    """A slot poisoned mid-stream while the pool is staggered retries
+    from its prompt and still converges to the solo tokens."""
+    prompts = _prompts(2)
+    solo = [_solo(p, 5, True) for p in prompts]
+    srv = Server(CFG, n_slots=N_SLOTS, max_seq=64, spiking=True,
+                 clock=FakeClock(), backoff_s=0.01)
+    reqs = [Request(rid=i, prompt=p, max_new=5)
+            for i, p in enumerate(prompts)]
+    srv.submit(reqs[0])
+    srv.step()
+    srv.step()
+    srv.submit(reqs[1])              # non-aligned admit
+    srv.step()
+    slot_b = srv.slot_req.index(reqs[1])
+    srv.state = faults.nan_decode_state(srv.state, slot=slot_b)
+    srv.step()                       # -> nan_logits -> quarantine both?
+    srv.run_until_drained()
+    assert reqs[1].retries >= 1
+    assert reqs[1].failure_cause == "nan_logits"
+    assert reqs[1].state == "done"
+    assert reqs[1].generated == solo[1]
+    assert all(s is None for s in srv.slot_req)
+
+
+# -------------------------------------------------------- structural reset
+def test_reset_slot_state_is_structural_under_dim_collision():
+    """With n_heads == n_slots, the head axis collides with the slot
+    axis under shape-guessing (`shape[1] == n_slots` matched BOTH and
+    the old reset zeroed whatever it hit). The structural reset
+    addresses axis 1 by contract: slot 0 zeroed, slot 1 untouched."""
+    import jax
+    state = lm.init_decode_state(CFG, N_SLOTS, 16, True)
+    poke = jax.tree.map(
+        lambda x: jnp.full_like(x, 3.0) if jnp.issubdtype(
+            x.dtype, jnp.floating) else x, state)
+    out = lm.reset_slot_state(poke, 1, N_SLOTS)
+    for leaf in jax.tree.leaves(out):
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        assert np.all(np.asarray(leaf[:, 1], np.float32) == 0.0)
+        assert np.all(np.asarray(leaf[:, 0], np.float32) == 3.0)
+        assert np.all(np.asarray(leaf[:, 2], np.float32) == 3.0)
+
+
+def test_reset_slot_state_rejects_nonconforming_leaf():
+    """A leaf violating the (n_groups, n_slots, ...) contract fails
+    LOUDLY with its path named — never silently skipped or zeroed."""
+    state = lm.init_decode_state(CFG, N_SLOTS, 16, True)
+    bad = [state[0]._replace(sdsa=state[0].sdsa._replace(
+        status=jnp.zeros((2, N_SLOTS + 1, 4, 8))))] + list(state[1:])
+    with pytest.raises(ValueError, match="slot"):
+        lm.reset_slot_state(bad, 0, N_SLOTS)
+
+
+# ------------------------------------------------------------- clock/deadline
+def test_fake_clock_drain_never_real_sleeps():
+    """Backed-off retries drain under a FakeClock by advancing fake
+    time — bounded wall-clock, no real sleep (the old loop slept 5 ms of
+    REAL time per idle iteration even with an injected clock)."""
+    clk = FakeClock()
+    srv = Server(CFG, n_slots=2, max_seq=64, spiking=True, clock=clk,
+                 backoff_s=10.0)      # would be minutes of real sleeping
+    req = Request(rid=0, prompt=_prompts(1)[0], max_new=3)
+    srv.submit(req)
+    srv.step()
+    srv.state = faults.nan_decode_state(srv.state, slot=0)
+    t0 = time.monotonic()
+    srv.run_until_drained()
+    assert time.monotonic() - t0 < 30.0     # fake backoff, real seconds
+    assert clk() >= 10.0                    # waited in FAKE time
+    assert req.state == "done"
+
+
+def test_trace_arrivals_fire_on_fake_clock():
+    clk = FakeClock()
+    srv = Server(CFG, n_slots=2, max_seq=64, spiking=True, clock=clk)
+    reqs = [Request(rid=i, prompt=_prompts(1)[0], max_new=2)
+            for i in range(3)]
+    srv.submit_at(reqs[0], 0.0)
+    srv.submit_at(reqs[2], 50.0)            # far-future arrival
+    srv.submit_at(reqs[1], 0.01)            # inserts in arrival order
+    assert [r.rid for r in srv.arrivals] == [0, 1, 2]
+    fin = srv.run_until_drained()
+    assert len(fin) == 3 and all(r.state == "done" for r in reqs)
+    assert clk() >= 50.0
+
+
+def test_deadline_request_that_skipped_submit_fails_loud():
+    """A request pushed straight into `pending` (skipping submit()) has
+    no submitted_at; the old `_expire_deadlines` crashed on the None
+    arithmetic. Now it's stamped at first observation and the deadline
+    runs from there."""
+    clk = FakeClock()
+    srv = Server(CFG, n_slots=1, max_seq=64, spiking=True, clock=clk)
+    busy = Request(rid=0, prompt=_prompts(1)[0], max_new=4)
+    srv.submit(busy)
+    srv.step()
+    ghost = Request(rid=1, prompt=_prompts(1)[0], max_new=4,
+                    deadline_s=0.5)
+    srv.pending.append(ghost)               # bypasses submit()
+    srv.step()                              # must not raise
+    assert ghost.submitted_at is not None
+    clk.advance(1.0)                        # past the ghost's deadline
+    srv.run_until_drained()
+    assert ghost.state == "failed" and ghost.failure_cause == "deadline"
+    assert busy.state == "done"
+
+
+# ------------------------------------------------------------------- traces
+def test_trace_generators_deterministic_and_ordered():
+    for name, fn in (("poisson", poisson_trace), ("bursty", bursty_trace)):
+        a = fn(seed=3, n_requests=10)
+        b = fn(seed=3, n_requests=10)
+        assert a == b, name
+        ts = [t.arrival_s for t in a]
+        assert ts == sorted(ts) and ts[0] == 0.0
+        assert fn(seed=4, n_requests=10) != a
+    with pytest.raises(ValueError, match="unknown trace"):
+        make_trace("sinusoidal")
+
+
+def test_bursty_trace_replay_terminal_with_causes_no_leaks():
+    """The CI smoke contract: replay a short bursty trace; every request
+    reaches a terminal state with a recorded cause on failure, and no
+    slot is leaked."""
+    clk = FakeClock()
+    srv = Server(CFG, n_slots=2, max_seq=64, spiking=True, clock=clk)
+    trace = make_trace("bursty", seed=0, n_requests=8, vocab=CFG.vocab,
+                       max_new=(2, 4))
+    reqs = []
+    for t in trace:
+        r = Request(rid=t.rid, prompt=list(t.prompt), max_new=t.max_new)
+        srv.submit_at(r, t.arrival_s)
+        reqs.append(r)
+    fin = srv.run_until_drained()
+    assert len(fin) == len(reqs)
+    for r in reqs:
+        assert r.state in ("done", "failed")
+        if r.state == "failed":
+            assert r.failure_cause
+    assert all(s is None for s in srv.slot_req)
+    assert not srv.pending and not srv.arrivals
+
+
+# ------------------------------------------------------------ replica pool
+def test_replica_pool_steers_admission_to_light_replica():
+    clk = FakeClock()
+    pool = ReplicaPool(CFG, n_replicas=2, clock=clk, n_slots=2, max_seq=64,
+                       spiking=True)
+    # Pre-load replica 0 so its slots are busy.
+    for i in range(2):
+        pool.replicas[0].submit(
+            Request(rid=100 + i, prompt=_prompts(1)[0], max_new=8))
+    pool.replicas[0].step()
+    r = Request(rid=0, prompt=_prompts(1)[0], max_new=2)
+    idx = pool.submit(r)
+    assert idx == 1                          # steered away from the load
+    assert pool.imbalance_log                # skew signal recorded
+    assert pool.imbalance_log[-1].imbalance >= 1.0
+    pool.run_until_drained()
+    assert all(req.state == "done" for req in pool.finished)
+
+
+def test_replica_pool_round_robin_baseline_and_bad_balancer():
+    clk = FakeClock()
+    pool = ReplicaPool(CFG, n_replicas=2, balancer="round_robin",
+                       clock=clk, n_slots=2, max_seq=64, spiking=True)
+    idxs = [pool.submit(Request(rid=i, prompt=_prompts(1)[0], max_new=2))
+            for i in range(4)]
+    assert idxs == [0, 1, 0, 1]
+    pool.run_until_drained()
+    with pytest.raises(ValueError, match="balancer"):
+        ReplicaPool(CFG, n_replicas=2, balancer="fifo")
+
+
+# ---------------------------------------------------------------- scale smoke
+def test_slot_pool_scales_to_many_slots():
+    """Hundreds-of-slots shape check: a 64-slot pool admits a wave,
+    decodes per-slot, and drains — state stays (n_groups, 64, ...)."""
+    clk = FakeClock()
+    srv = Server(CFG, n_slots=64, max_seq=32, spiking=True, clock=clk)
+    reqs = [Request(rid=i, prompt=[i % CFG.vocab, (i * 7) % CFG.vocab],
+                    max_new=2) for i in range(64)]
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    assert all(r.state == "done" for r in reqs)
+    assert all(s is None for s in srv.slot_req)
