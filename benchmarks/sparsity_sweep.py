@@ -32,6 +32,18 @@ global-occupancy gather), and per-shard occupancy columns
 (`runtime.straggler.occupancy_imbalance`: ``occ_per_shard``/``occ_max``/
 ``occ_mean``/``occ_imbalance``) since event-load skew is what makes
 sharded event execution straggle. Committed as BENCH_PR4.json.
+
+``--pipelined`` adds the DMA-pipelining half of BENCH_PR10: the ``-pipe``
+kernels (manual double-buffered weight-tile DMA, `kernels/README.md`
+"DMA pipelining & load balance") paired against their serial CSR
+baselines under the interleaved clone-pair protocol, with the modeled
+prefetched-vs-stalled weight-byte split (`costmodel.dma_overlap_ledger`)
+per row. ``--mesh --rebalance`` adds the load-balance half: static
+row-contiguous vs occupancy-weighted shard splits on hotspot-clustered
+maps at a taller M (M_MESH has one tile row per shard, so whole-tile-row
+rebalancing has no freedom there — the `rebalanced=` column on the
+ordinary mesh rows records exactly that). ``--pr10`` runs both halves
+and writes the combined BENCH_PR10.json.
 """
 from __future__ import annotations
 
@@ -216,11 +228,128 @@ def run_packed() -> list[str]:
     return rows
 
 
+# ------------------------------------------------------ pipelined kernels
+def _dma_fields(occ, n: int, ledger_backend: str) -> str:
+    """Modeled weight-stream DMA split for the serial-vs-pipe pair
+    (`costmodel.dma_overlap_ledger`): total weight bytes the pipe variant
+    fetches, how many land behind compute, how many stay exposed (one
+    warm-up per N-tile iteration), and the serial baseline's all-exposed
+    bytes for the same map."""
+    mb = 1.0 / 2**20
+    ser = costmodel.dma_overlap_ledger(occ, n, backend=ledger_backend)
+    pipe = costmodel.dma_overlap_ledger(occ, n, backend=ledger_backend,
+                                        pipelined=True)
+    return (f"dma_w_mb={pipe.bytes_total * mb:.3f};"
+            f"dma_prefetched_mb={pipe.bytes_prefetched * mb:.3f};"
+            f"dma_stalled_mb={pipe.bytes_stalled * mb:.3f};"
+            f"dma_stalled_serial_mb={ser.bytes_stalled * mb:.3f};"
+            f"dma_overlap={pipe.overlap_fraction:.3f}")
+
+
+def run_pipelined() -> list[str]:
+    """Double-buffered weight-DMA (`-pipe`) kernels vs their serial CSR
+    baselines at the sweep points.
+
+    Rows ``sparsity/<op>/<family>-pipe/s<pct>`` time each registered
+    pipelined matmul-form variant against the serial kernel it falls back
+    to, under the paired interleaved clone protocol (`time_interleaved` /
+    `noise_band` / `not_slower` — the same contract the packed rows use),
+    after asserting forward parity at 1e-4. Fields carry the DMA-overlap
+    ledger (`_dma_fields`): the weight bytes the pipe variant hides
+    behind compute are the perf mechanism, so the modeled split rides
+    next to the measured ratio.
+    """
+    import numpy as np
+
+    from repro.core.spikes import pack_spikes
+
+    rows = []
+    platform = jax.default_backend()
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    for sparsity in SPARSITIES:
+        key = jax.random.PRNGKey(int(sparsity * 1000))
+        s = clustered_spikes(key, M, K, sparsity)
+        p = pack_spikes(s)
+        occ = ops.padded_occupancy(s, BLOCK, BLOCK)
+        stats = _savings_fields(s, N)
+        variants = (
+            ("spike_matmul", "pallas-csr-pipe", "pallas-csr",
+             lambda: ops.spike_matmul_csr(s, w),
+             lambda: ops.spike_matmul_csr(s, w, pipeline=True)),
+            ("spike_matmul", "packed-csr-pipe", "packed-csr",
+             lambda: ops.spike_matmul_packed(p, w, packed_k=K),
+             lambda: ops.spike_matmul_packed(p, w, packed_k=K,
+                                             pipeline=True)),
+            ("apec_matmul", "pallas-csr-pipe", "pallas-csr",
+             lambda: ops.apec_matmul_csr(s, w, g=APEC_G),
+             lambda: ops.apec_matmul_csr(s, w, g=APEC_G, pipeline=True)),
+        )
+        for op, pipe_name, ledger_be, ser_fn, pipe_fn in variants:
+            np.testing.assert_allclose(np.asarray(pipe_fn()),
+                                       np.asarray(ser_fn()), atol=1e-4)
+            best, samples = time_interleaved(
+                {"serial": ser_fn, "pipe": pipe_fn,
+                 "serial2": ser_fn, "pipe2": pipe_fn}, iters=12)
+            ratio = best["pipe"] / best["serial"]
+            band = noise_band(samples, (("serial2", "serial"),
+                                        ("pipe2", "pipe")))
+            rows.append(csv_row(
+                f"sparsity/{op}/{pipe_name}/s{int(sparsity * 100)}",
+                best["pipe"] * 1e6,
+                f"platform={platform};serial_us={best['serial'] * 1e6:.1f};"
+                f"pipe_vs_serial={ratio:.3f};noise_band={band:.3f};"
+                f"not_slower={not_slower(ratio, band)};"
+                f"{_dma_fields(occ, N, ledger_be)};{stats}"))
+    return rows
+
+
 # ------------------------------------------------------------- mesh sweep
 MESH_SHARDS = 8
 # 128 rows per shard at 8 shards: every shard's tile grid divides cleanly,
 # so the csr family passes its per-shard gate (the point of the sweep).
 M_MESH = 1024
+# Taller geometry for the rebalance rows: at M_MESH each shard owns ONE
+# 128-row tile row, so whole-tile-row rebalancing has zero freedom; at
+# M_REBAL each shard owns four and the occupancy-weighted split can move
+# load (`core.spikes.rebalance_shard_plan`).
+M_REBAL = 4096
+REBAL_SPARSITIES = (0.90, 0.97)
+
+
+def hotspot_spikes(key, m: int, k: int, sparsity: float,
+                   block_m: int = BLOCK, block_k: int = BLOCK) -> jax.Array:
+    """`clustered_spikes` live-tile count, but the live tiles form ONE
+    contiguous row-major band at a key-dependent offset — the spatial
+    hotspot (events concentrated in an active region) that motivates
+    occupancy-weighted sharding: a static row-contiguous split lands the
+    whole band on one or two shards, which the synchronous collective
+    then waits for."""
+    k_off, k_fire = jax.random.split(key)
+    live_frac = min(1.0, (1.0 - sparsity) / IN_TILE_DENSITY)
+    density = (1.0 - sparsity) / live_frac
+    mt, kt = m // block_m, k // block_k
+    n_live = max(1, round(live_frac * mt * kt))
+    off = jax.random.randint(k_off, (), 0, mt * kt - n_live + 1)
+    flat = jnp.arange(mt * kt)
+    live = ((flat >= off) & (flat < off + n_live)).reshape(mt, 1, kt, 1)
+    fire = jax.random.uniform(k_fire, (mt, block_m, kt, block_k)) < density
+    return (live & fire).astype(jnp.float32).reshape(m, k)
+
+
+def _shard_step_fields(occ_np, n_shards: int, plan=None) -> str:
+    """Per-shard grid-step columns for the sharded CSR rows: every shard
+    pads to ONE shared pow2 cap (`steps_cap` — what the synchronous grid
+    actually runs), and `steps_per_shard` counts each shard's real steps
+    (occupied tiles + one dummy per all-empty tile row) under the given
+    split — the pre-padding work the cap is quantizing."""
+    import numpy as np
+
+    from repro.core.spikes import shard_occupancy_to_csr
+    locals_ = shard_occupancy_to_csr(occ_np, n_shards,
+                                     tiling=(BLOCK, BLOCK), plan=plan)
+    steps = [int(np.asarray(c.valid).sum()) for c in locals_]
+    return (f"steps_cap={int(locals_[0].n_steps)};"
+            "steps_per_shard=" + ":".join(str(x) for x in steps))
 
 
 def run_mesh(n_shards: int = MESH_SHARDS) -> list[str]:
@@ -241,7 +370,9 @@ def run_mesh(n_shards: int = MESH_SHARDS) -> list[str]:
     grid while its single row runs the eager trimmed grid — an asymmetry
     the field makes explicit rather than hides.
     """
-    from repro.core.spikes import shard_occupancy_to_csr, stack_shard_csrs
+    import numpy as np
+
+    from repro.core.spikes import rebalance_shard_plan
     from repro.kernels import dispatch
     from repro.launch.mesh import make_mesh
     from repro.runtime import sharding
@@ -267,21 +398,37 @@ def run_mesh(n_shards: int = MESH_SHARDS) -> list[str]:
             with dispatch.use_backend(csr, op=op):
                 t_single = time_fn(single_fn, s, w) * 1e6
                 if op == "spike_matmul":
-                    # per-shard eager pre-pass: each shard's trimmed work
-                    # list, one shared pow2 cap, no global-map gather
-                    stack = stack_shard_csrs(shard_occupancy_to_csr(
-                        ops.padded_occupancy(s, BLOCK, BLOCK), n_shards,
-                        tiling=(BLOCK, BLOCK)))
+                    # carried concrete map -> per-shard trimmed work
+                    # lists inside event_op_sharded (one shared pow2 cap,
+                    # no global-map gather), occupancy-weighted when the
+                    # plan can move load — at M_MESH's one tile row per
+                    # shard it cannot, which `rebalanced=` records.
+                    occ_np = np.asarray(
+                        ops.padded_occupancy(s, BLOCK, BLOCK))
+                    plan = rebalance_shard_plan(occ_np, n_shards)
+                    if plan.identity or not plan.improves:
+                        plan = None
                     sharded = jax.jit(functools.partial(
                         sharding.event_op_sharded, mesh, op,
-                        csr_stack=stack))
+                        occupancy=occ_np))
                     grid = "trimmed"
+                    extra = (f"rebalanced={int(plan is not None)};"
+                             f"{_shard_step_fields(occ_np, n_shards, plan)}")
+                    _, rep = sharding.event_op_sharded(
+                        mesh, op, s, w, with_report=True,
+                        occupancy=occ_np, **kwargs)
                 else:
                     sharded = jax.jit(functools.partial(
                         sharding.event_op_sharded, mesh, op, **kwargs))
                     grid = "dense-capped"    # traced in-shard pre-pass
-                _, rep = sharding.event_op_sharded(
-                    mesh, op, s, w, with_report=True, **kwargs)
+                    # every shard runs the same clamped dense-capped
+                    # union grid — the step columns say so explicitly
+                    cap = (M_MESH // n_shards // BLOCK) * (K // BLOCK)
+                    extra = (f"rebalanced=0;steps_cap={cap};"
+                             "steps_per_shard="
+                             + ":".join([str(cap)] * n_shards))
+                    _, rep = sharding.event_op_sharded(
+                        mesh, op, s, w, with_report=True, **kwargs)
                 t_shard = time_fn(sharded, s, w) * 1e6
             pct = int(sparsity * 100)
             rows.append(csv_row(
@@ -292,14 +439,89 @@ def run_mesh(n_shards: int = MESH_SHARDS) -> list[str]:
                 f"sparsity/mesh/{op}/sharded/s{pct}", t_shard,
                 f"platform={platform};shards={n_shards};"
                 f"backend={rep['backend']};resolved={rep['attribution']};"
-                f"grid={grid};{rep['occupancy'].as_fields()};{stats}"))
+                f"grid={grid};{extra};{rep['occupancy'].as_fields()};"
+                f"{stats}"))
     return rows
 
 
-def _mesh_subprocess_rows(n_shards: int = MESH_SHARDS) -> list[str]:
+def run_mesh_rebalance(n_shards: int = MESH_SHARDS) -> list[str]:
+    """Static row-contiguous vs occupancy-weighted shard split on hotspot
+    maps — the load-balance half of BENCH_PR10.
+
+    Rows ``sparsity/mesh/rebalance/spike_matmul/{static,rebalanced}/s<pct>``
+    run the SAME carried map through `event_op_sharded` with rebalancing
+    off and on, at `M_REBAL` (four tile rows per shard — room to move)
+    on `hotspot_spikes` maps (one contiguous active band — the split a
+    static partition concentrates on few shards). Forward outputs are
+    asserted equal at 1e-5 (the plan only permutes who computes which
+    tile rows), and the rebalanced row carries the pre/post imbalance
+    pair (`occ_pre_*` columns from `OccupancyImbalance.as_fields`) plus
+    the per-shard step columns under both splits.
+    """
+    import numpy as np
+
+    from repro.core.spikes import rebalance_shard_plan
+    from repro.kernels import dispatch
+    from repro.launch.mesh import make_mesh
+    from repro.runtime import sharding
+
+    platform = jax.default_backend()
+    if len(jax.devices()) < n_shards:
+        raise RuntimeError(
+            f"rebalance sweep needs {n_shards} devices, have "
+            f"{len(jax.devices())} (run via --mesh --rebalance)")
+    mesh = make_mesh((n_shards, 1), ("data", "model"))
+    csr = "pallas-csr" if platform == "tpu" else "pallas-csr-interpret"
+    rows = []
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    for sparsity in REBAL_SPARSITIES:
+        key = jax.random.PRNGKey(int(sparsity * 1000))
+        s = hotspot_spikes(key, M_REBAL, K, sparsity)
+        occ_np = np.asarray(ops.padded_occupancy(s, BLOCK, BLOCK))
+        plan = rebalance_shard_plan(occ_np, n_shards)
+        if plan.identity or not plan.improves:
+            plan = None
+        with dispatch.use_backend(csr, op="spike_matmul"):
+            out_st, rep_st = sharding.event_op_sharded(
+                mesh, "spike_matmul", s, w, occupancy=occ_np,
+                rebalance=False, with_report=True)
+            out_rb, rep_rb = sharding.event_op_sharded(
+                mesh, "spike_matmul", s, w, occupancy=occ_np,
+                with_report=True)
+            np.testing.assert_allclose(np.asarray(out_rb),
+                                       np.asarray(out_st), atol=1e-5)
+            t_st = time_fn(jax.jit(functools.partial(
+                sharding.event_op_sharded, mesh, "spike_matmul",
+                occupancy=occ_np, rebalance=False)), s, w) * 1e6
+            t_rb = time_fn(jax.jit(functools.partial(
+                sharding.event_op_sharded, mesh, "spike_matmul",
+                occupancy=occ_np)), s, w) * 1e6
+        pct = int(sparsity * 100)
+        imb_st = rep_st["occupancy"].imbalance
+        imb_rb = rep_rb["occupancy"].imbalance
+        rows.append(csv_row(
+            f"sparsity/mesh/rebalance/spike_matmul/static/s{pct}", t_st,
+            f"platform={platform};shards={n_shards};"
+            f"backend={rep_st['backend']};generator=hotspot;rows={M_REBAL};"
+            f"rebalanced=0;{_shard_step_fields(occ_np, n_shards)};"
+            f"{rep_st['occupancy'].as_fields()}"))
+        rows.append(csv_row(
+            f"sparsity/mesh/rebalance/spike_matmul/rebalanced/s{pct}", t_rb,
+            f"platform={platform};shards={n_shards};"
+            f"backend={rep_rb['backend']};generator=hotspot;rows={M_REBAL};"
+            f"rebalanced={int(plan is not None)};parity_vs_static=1e-5;"
+            f"imbalance_vs_static={imb_rb / imb_st:.3f};"
+            f"{_shard_step_fields(occ_np, n_shards, plan)};"
+            f"{rep_rb['occupancy'].as_fields()}"))
+    return rows
+
+
+def _mesh_subprocess_rows(n_shards: int = MESH_SHARDS,
+                          rebalance: bool = False) -> list[str]:
     """Re-launch this module with `n_shards` forced host devices (the XLA
     device-count flag is process-global and must precede the jax import)
-    and collect its CSV rows."""
+    and collect its CSV rows. `rebalance` adds the static-vs-rebalanced
+    hotspot rows (`run_mesh_rebalance`)."""
     import os
     import subprocess
     import sys
@@ -310,7 +532,8 @@ def _mesh_subprocess_rows(n_shards: int = MESH_SHARDS) -> list[str]:
     env.setdefault("PYTHONPATH", "src")
     proc = subprocess.run(
         [sys.executable, "-m", "benchmarks.sparsity_sweep", "--mesh",
-         "--shards", str(n_shards)],
+         "--shards", str(n_shards)]
+        + (["--rebalance"] if rebalance else []),
         capture_output=True, text=True, env=env)
     if proc.returncode != 0:
         raise RuntimeError(f"mesh sweep subprocess failed:\n{proc.stderr}")
@@ -333,18 +556,55 @@ def main() -> None:
                     help="sharded-vs-single CSR columns on an "
                          f"{MESH_SHARDS}-way host mesh")
     ap.add_argument("--shards", type=int, default=MESH_SHARDS)
+    ap.add_argument("--pipelined", action="store_true",
+                    help="paired pipelined-vs-serial CSR rows with the "
+                         "DMA-overlap ledger (single device)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="(with --mesh) static-vs-rebalanced shard-split "
+                         f"rows on hotspot maps at M={M_REBAL}")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="(with --mesh) also write BENCH_PR4-schema JSON: "
                          "mesh shape, mesh-aware resolved backends "
                          "(attribution), and the rows")
+    ap.add_argument("--pr10", default=None, metavar="PATH",
+                    help="write BENCH_PR10 JSON: pipelined paired rows "
+                         "(in-process) plus mesh + rebalance rows (forced-"
+                         "device subprocess when needed)")
     args = ap.parse_args()
+    if args.pr10:
+        pipe_rows = run_pipelined()
+        if len(jax.devices()) >= args.shards:
+            mesh_rows = run_mesh(args.shards) + run_mesh_rebalance(
+                args.shards)
+        else:
+            mesh_rows = _mesh_subprocess_rows(args.shards, rebalance=True)
+        rows = pipe_rows + mesh_rows
+        print("\n".join(rows))
+        with open(args.pr10, "w") as f:
+            json.dump({"mesh": {"shards": args.shards,
+                                "axes": ["data", "model"],
+                                "platform": jax.default_backend()},
+                       "pipelined_geometry": {"M": M, "K": K, "N": N,
+                                              "apec_g": APEC_G},
+                       "rebalance_geometry": {"M": M_REBAL, "K": K,
+                                              "generator": "hotspot",
+                                              "sparsities":
+                                              list(REBAL_SPARSITIES)},
+                       "bench_rows_per_shard": M_MESH // args.shards,
+                       "rows": rows}, f, indent=2)
+        return
+    if args.pipelined:
+        print("\n".join(run_pipelined()))
+        return
     if not args.mesh:
         print("\n".join(run()))
         return
     if len(jax.devices()) < args.shards:
-        rows = _mesh_subprocess_rows(args.shards)
+        rows = _mesh_subprocess_rows(args.shards, rebalance=args.rebalance)
     else:
         rows = run_mesh(args.shards)
+        if args.rebalance:
+            rows += run_mesh_rebalance(args.shards)
     print("\n".join(rows))
     if args.json:
         from repro.kernels import dispatch

@@ -315,6 +315,83 @@ def matmul_bytes_moved(
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class DmaOverlap:
+    """How much of one op call's weight-tile DMA hides behind compute.
+
+    The serial CSR kernels let the Pallas block pipeline fetch the weight
+    tile for step t as part of step t's setup: every weight byte is on the
+    critical path (`bytes_stalled`). The `-pipe` variants instead start the
+    fetch for occupied step t+1 while step t's dot runs, so only the
+    warm-up copy of each N-tile iteration is exposed — everything after it
+    lands behind compute (`bytes_prefetched`). Dummy / clamp-padding steps
+    are DMA-free under pipelining (the gate skips them), while the serial
+    block pipeline still pays their fetch.
+    """
+    backend: str
+    pipelined: bool
+    bytes_total: float        # weight bytes fetched across the whole grid
+    bytes_prefetched: float   # started >= 1 step before their dot lands
+    bytes_stalled: float      # exposed: compute waits on the copy
+
+    @property
+    def overlap_fraction(self) -> float:
+        return (self.bytes_prefetched / self.bytes_total
+                if self.bytes_total else 0.0)
+
+
+def dma_overlap_ledger(
+    occupancy: "np.ndarray",
+    n: int,
+    *,
+    block_k: int = 128,
+    block_n: int = 128,
+    backend: str = "pallas-csr",
+    pipelined: bool = False,
+    weight_bytes: int = 4,
+) -> DmaOverlap:
+    """Model the prefetched/stalled split of weight-tile DMA for one call.
+
+    Same grid accounting as `matmul_bytes_moved` (occupied steps plus one
+    dummy per all-empty m-tile row for the csr family, times the N-tile
+    count). Steady-state model of the `-pipe` kernels' contract
+    (`kernels.spike_matmul._weight_prefetch`):
+
+      * serial: every step's weight fetch is exposed, dummies included;
+      * pipelined: occupied steps fetch, dummy steps are DMA-free, and
+        exactly one warm-up fetch per N-tile iteration is exposed.
+
+    For APEC pass the union map (`(occ_res > 0) | (occ_ov > 0)` as
+    counts): the pipe gate fetches when either branch will dot.
+    """
+    occ = np.asarray(occupancy)
+    mt, kt = occ.shape
+    nt = int(np.ceil(n / block_n))
+    tile_bytes = float(block_k * block_n * weight_bytes)
+    occupied = int(np.count_nonzero(occ > 0))
+    empty_rows = int(np.sum(~(occ > 0).any(axis=1)))
+    if backend == "pallas":
+        if pipelined:
+            raise ValueError("pipelined variants exist only for the csr "
+                             "family (dense pallas uses the block pipeline)")
+        fetches = mt * kt * nt
+        prefetched = 0
+    elif backend in ("pallas-csr", "packed-csr"):
+        if pipelined:
+            fetches = occupied * nt
+            prefetched = max(0, fetches - (nt if occupied else 0))
+        else:
+            fetches = (occupied + empty_rows) * nt
+            prefetched = 0
+    else:
+        raise ValueError(f"unknown tile-skipping backend {backend!r}")
+    total = fetches * tile_bytes
+    pre = prefetched * tile_bytes
+    return DmaOverlap(
+        backend=backend, pipelined=pipelined, bytes_total=total,
+        bytes_prefetched=pre, bytes_stalled=total - pre)
+
+
 # --------------------------------------------------------------------------
 # Hybrid dense<->event route calibration (PR 6)
 #

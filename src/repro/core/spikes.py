@@ -334,8 +334,118 @@ def pow2_step_cap(n_steps: int, dense: int) -> int:
     return min(int(dense), 1 << (n_steps - 1).bit_length())
 
 
+class RebalancePlan(NamedTuple):
+    """Occupancy-weighted assignment of 128-row tile rows to shards.
+
+    `perm` is a permutation of the map's tile-row indices: shard i owns
+    rows `perm[i*rps:(i+1)*rps]` (rps = MT/n_shards), each shard's slice
+    sorted ascending so a shard's local map keeps global row order.
+    Built from the carried map alone — never from gathered spikes — and
+    deterministic for a fixed map (ties break on row index, then shard
+    index). `pre`/`post_per_shard` are occupied-tile counts under the
+    static row-contiguous split vs this assignment, the before/after the
+    straggler ledger records."""
+    perm: np.ndarray
+    pre_per_shard: tuple
+    post_per_shard: tuple
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.pre_per_shard)
+
+    @property
+    def identity(self) -> bool:
+        return bool((self.perm == np.arange(len(self.perm))).all())
+
+    @property
+    def improves(self) -> bool:
+        """True iff the assignment strictly lowers the most-occupied
+        shard — the max/mean imbalance metric (mean is split-invariant).
+        With one tile row per shard a permutation can only relabel
+        shards, so this is False and callers skip the payload gather."""
+        return max(self.post_per_shard) < max(self.pre_per_shard)
+
+    def inverse(self) -> np.ndarray:
+        return np.argsort(self.perm)
+
+
+def rebalance_shard_plan(occ: jax.Array, n_shards: int) -> RebalancePlan:
+    """Plan an occupancy-weighted shard split of a concrete (MT, KT) map.
+
+    Greedy heaviest-first: tile rows sorted by occupied-tile count
+    (descending, row index breaking ties) are assigned to the currently
+    lightest shard with spare capacity (every shard owns exactly
+    MT/n_shards rows — shard_map's equal-split contract). A bounded
+    stolen-tile tail pass then swaps rows between the heaviest and
+    lightest shards while a swap strictly narrows the max-min spread —
+    the residual imbalance greedy leaves when heavy rows arrive early.
+
+    Same concreteness contract as `shard_occupancy_to_csr`: the plan is
+    an eager pre-pass on the tiny map (raises on tracers) and never
+    gathers payload data.
+    """
+    if isinstance(occ, jax.core.Tracer):
+        raise ValueError(
+            "rebalance_shard_plan is an eager (concrete) pre-pass on the "
+            "carried occupancy map; it cannot run under tracing")
+    mt, _ = occ.shape
+    if mt % n_shards:
+        raise ValueError(
+            f"occupancy rows {mt} not divisible by {n_shards} shards")
+    rps = mt // n_shards
+    occ_np = np.asarray(occ)
+    weight = (occ_np > 0).sum(axis=1).astype(np.int64)   # per tile row
+    pre = tuple(int(weight[i * rps:(i + 1) * rps].sum())
+                for i in range(n_shards))
+
+    # Greedy LPT with fixed per-shard capacity.
+    order = np.lexsort((np.arange(mt), -weight))
+    members: list = [[] for _ in range(n_shards)]
+    load = [0] * n_shards
+    for r in order:
+        i = min((i for i in range(n_shards) if len(members[i]) < rps),
+                key=lambda i: (load[i], i))
+        members[i].append(int(r))
+        load[i] += int(weight[r])
+
+    # Stolen-tile tail pass: swap one row between the heaviest and
+    # lightest shard while that strictly narrows max-min. Bounded — each
+    # accepted swap reduces an integer spread, but cap iterations anyway.
+    for _ in range(4 * n_shards):
+        h = max(range(n_shards), key=lambda i: (load[i], i))
+        l = min(range(n_shards), key=lambda i: (load[i], i))
+        spread = load[h] - load[l]
+        if spread <= 1:
+            break
+        best = None
+        for rh in members[h]:
+            for rl in members[l]:
+                d = int(weight[rh]) - int(weight[rl])
+                if 0 < d < spread:
+                    # post-swap spread contribution of this pair
+                    gap = abs(spread - 2 * d)
+                    key = (gap, rh, rl)
+                    if best is None or key < best[0]:
+                        best = (key, rh, rl)
+        if best is None:
+            break
+        _, rh, rl = best
+        members[h].remove(rh)
+        members[l].remove(rl)
+        members[h].append(rl)
+        members[l].append(rh)
+        load[h] += int(weight[rl]) - int(weight[rh])
+        load[l] += int(weight[rh]) - int(weight[rl])
+
+    members = [sorted(m) for m in members]
+    perm = np.concatenate([np.asarray(m, dtype=np.int64) for m in members])
+    return RebalancePlan(perm=perm, pre_per_shard=pre,
+                         post_per_shard=tuple(int(x) for x in load))
+
+
 def shard_occupancy_to_csr(occ: jax.Array, n_shards: int,
-                           tiling: Optional[tuple] = None) -> list:
+                           tiling: Optional[tuple] = None, *,
+                           plan: Optional[RebalancePlan] = None) -> list:
     """Per-shard CSR pre-pass for mesh execution: one work list per data
     shard, built from that shard's rows of the occupancy map only.
 
@@ -352,6 +462,12 @@ def shard_occupancy_to_csr(occ: jax.Array, n_shards: int,
     batched arrays, and one shard's occupancy shift re-buckets — and hence
     recompiles — only when it crosses a power-of-two boundary, never
     because a *different* shard changed.
+
+    `plan`: optional `RebalancePlan` (from `rebalance_shard_plan` on this
+    same map) — shard i then compacts the map rows the plan assigns it
+    (still a numpy fancy-index slice, still one shared cap) instead of
+    the static contiguous block. The caller owns permuting the payload
+    rows to match (see `runtime.sharding.event_op_sharded`).
 
     Concrete maps only (the eager serve/benchmark pre-pass). Under
     tracing the split is the mesh's job: inside shard_map each shard
@@ -374,7 +490,15 @@ def shard_occupancy_to_csr(occ: jax.Array, n_shards: int,
     # traced path — staging the whole compaction into the program and
     # losing the trimmed grid the concrete pre-pass exists for. Numpy
     # slices stay concrete no matter what trace is ambient.
-    locals_ = [occ_np[i * rows:(i + 1) * rows] for i in range(n_shards)]
+    if plan is not None:
+        if len(plan.perm) != mt or plan.n_shards != n_shards:
+            raise ValueError(
+                f"plan covers {len(plan.perm)} rows x {plan.n_shards} "
+                f"shards, map has {mt} rows x {n_shards} shards")
+        locals_ = [occ_np[plan.perm[i * rows:(i + 1) * rows]]
+                   for i in range(n_shards)]
+    else:
+        locals_ = [occ_np[i * rows:(i + 1) * rows] for i in range(n_shards)]
     exact = [occupancy_to_csr(o, tiling=tiling) for o in locals_]
     cap = pow2_step_cap(max(c.n_steps for c in exact), rows * kt)
     if all(c.n_steps == cap for c in exact):

@@ -823,10 +823,21 @@ def _hybrid_route_pair(spec: OpSpec) -> Optional[Tuple[Backend, Backend]]:
     are exactly the two kernels the BENCH trajectory has been comparing.
     None when either half is missing (hybrid then disengages)."""
     platform = jax.default_backend()
+
+    def _dense_fallback(b):
+        # The pair's dense half is the event backend's DECLARED fallback.
+        # Pipelined csr variants declare their *serial* csr kernel as
+        # fallback (degrade stays inside the event family), so they are
+        # structurally not pair candidates — the documented contract is
+        # "carries csr in its name, declares a dense fallback".
+        fb = spec.backends.get(b.fallback) if b.fallback else None
+        return fb is not None and "csr" not in fb.name
+
     event = max(
         (b for b in spec.backends.values()
-         if "csr" in b.name and b.fallback and platform in b.platforms
-         and "dense" in b.payload),   # hybrid routes dense payloads only
+         if "csr" in b.name and platform in b.platforms
+         and "dense" in b.payload    # hybrid routes dense payloads only
+         and _dense_fallback(b)),
         key=lambda b: b.priority, default=None)
     if event is None:
         return None
@@ -1373,6 +1384,42 @@ register("spike_matmul", "packed-csr", platforms=("tpu",), priority=30,
          payload=("packed",))(_spike_matmul_packed)
 
 
+def _spike_matmul_csr_pipe(s, w, occupancy=None):
+    # Double-buffered weight-tile DMA variant of the CSR walk
+    # (pipeline=True selects the 2-slot rotation kernel): same work list,
+    # same math, occupied step t's dot overlaps step t+1's weight fetch.
+    # The fallback chain points at the serial CSR kernel, so parity /
+    # grad / mesh coverage and the degrade story are inherited unchanged.
+    from repro.kernels import ops
+    return ops.spike_matmul_csr(s, w, occupancy=occupancy, pipeline=True)
+
+
+register("spike_matmul", "pallas-csr-pipe-interpret", platforms=("cpu",),
+         priority=4, auto=False, fallback="pallas-csr-interpret",
+         vjp=_matmul_bwd, mesh_aware=_csr_shard_gate)(_spike_matmul_csr_pipe)
+register("spike_matmul", "pallas-csr-pipe", platforms=("tpu",), priority=26,
+         fallback="pallas-csr", vjp=_matmul_bwd,
+         mesh_aware=_csr_shard_gate)(_spike_matmul_csr_pipe)
+
+
+def _spike_matmul_packed_pipe(s, w, occupancy=None, packed_k=None):
+    # Pipelined packed-csr: word unpack and MXU dot overlap the next
+    # step's weight fetch; the spike-side read stays 1/32 of f32.
+    from repro.kernels import ops
+    return ops.spike_matmul_packed(s, w, packed_k=packed_k,
+                                   occupancy=occupancy, pipeline=True)
+
+
+register("spike_matmul", "packed-csr-pipe-interpret", platforms=("cpu",),
+         priority=6, auto=False, fallback="packed-csr-interpret",
+         vjp=_matmul_bwd, mesh_aware=_csr_shard_gate,
+         payload=("packed",))(_spike_matmul_packed_pipe)
+register("spike_matmul", "packed-csr-pipe", platforms=("tpu",), priority=31,
+         fallback="packed-csr", vjp=_matmul_bwd,
+         mesh_aware=_csr_shard_gate,
+         payload=("packed",))(_spike_matmul_packed_pipe)
+
+
 # ---------------------------------------------------------- apec_matmul
 def _apec_example(key):
     k1, k2 = jax.random.split(key)
@@ -1470,6 +1517,39 @@ register("apec_matmul", "packed-csr", platforms=("tpu",), priority=30,
          supports=_apec_csr_supports, fallback="pallas-csr",
          vjp=_matmul_bwd, mesh_aware=_csr_shard_gate,
          payload=("packed",))(_apec_matmul_packed)
+
+
+def _apec_matmul_csr_pipe(s, w, *, g=2, occupancy=None):
+    # Pipelined fused APEC: one prefetched weight tile serves both dots
+    # of a union step (DMA gate = either operand live).
+    from repro.kernels import ops
+    return ops.apec_matmul_csr(s, w, g=g, occupancy=occupancy,
+                               pipeline=True)
+
+
+register("apec_matmul", "pallas-csr-pipe-interpret", platforms=("cpu",),
+         priority=4, auto=False, supports=_apec_csr_supports,
+         fallback="pallas-csr-interpret", vjp=_matmul_bwd,
+         mesh_aware=_csr_shard_gate)(_apec_matmul_csr_pipe)
+register("apec_matmul", "pallas-csr-pipe", platforms=("tpu",), priority=26,
+         supports=_apec_csr_supports, fallback="pallas-csr",
+         vjp=_matmul_bwd, mesh_aware=_csr_shard_gate)(_apec_matmul_csr_pipe)
+
+
+def _apec_matmul_packed_pipe(s, w, *, g=2, occupancy=None, packed_k=None):
+    from repro.kernels import ops
+    return ops.apec_matmul_packed(s, w, g=g, packed_k=packed_k,
+                                  occupancy=occupancy, pipeline=True)
+
+
+# TPU-only: the packed-apec pipe kernel is the packed-spike pipe kernel
+# plus the (CPU-covered) fused-APEC pipe epilogue; a cpu-interpret twin
+# would re-test that composition at real wall-clock cost in the tier-1
+# gate for no new coverage.
+register("apec_matmul", "packed-csr-pipe", platforms=("tpu",), priority=31,
+         supports=_apec_csr_supports, fallback="packed-csr",
+         vjp=_matmul_bwd, mesh_aware=_csr_shard_gate,
+         payload=("packed",))(_apec_matmul_packed_pipe)
 
 
 # ------------------------------------------------------------------ sdsa
@@ -1698,6 +1778,40 @@ register("econv", "packed-csr-interpret", platforms=("cpu",), priority=3,
 register("econv", "packed-csr", platforms=("tpu",), priority=30,
          supports=_econv_packed_supports, fallback="pallas-csr", vjp="ref",
          mesh_aware=_csr_shard_gate, payload=("packed",))(_econv_packed_csr)
+
+
+def _econv_csr_pipe(s, w, *, stride=1, padding="SAME", occupancy=None):
+    # im2col feeding the pipelined CSR matmul: patch-row weight tiles
+    # stream one occupied step ahead of the dot.
+    from repro.kernels import ops
+    return _econv_im2col(s, w, stride, padding,
+                         functools.partial(ops.spike_matmul_csr,
+                                           pipeline=True), occupancy)
+
+
+register("econv", "pallas-csr-pipe-interpret", platforms=("cpu",),
+         priority=4, auto=False, fallback="pallas-csr-interpret",
+         vjp="ref", mesh_aware=_csr_shard_gate)(_econv_csr_pipe)
+register("econv", "pallas-csr-pipe", platforms=("tpu",), priority=26,
+         fallback="pallas-csr", vjp="ref",
+         mesh_aware=_csr_shard_gate)(_econv_csr_pipe)
+
+
+def _econv_packed_csr_pipe(s, w, *, stride=1, padding="SAME",
+                           occupancy=None, packed_k=None):
+    from repro.kernels import ops
+    return ops.econv_packed(s, w, stride=stride, padding=padding,
+                            packed_k=packed_k, occupancy=occupancy,
+                            pipeline=True)
+
+
+# TPU-only for the same reason as apec's packed pipe twin (word-domain
+# im2col is CPU-covered by packed-csr-interpret; the pipelined matmul
+# underneath is CPU-covered by packed-csr-pipe-interpret).
+register("econv", "packed-csr-pipe", platforms=("tpu",), priority=31,
+         supports=_econv_packed_supports, fallback="packed-csr", vjp="ref",
+         mesh_aware=_csr_shard_gate,
+         payload=("packed",))(_econv_packed_csr_pipe)
 
 
 # ----------------------------------------------------------------- tconv

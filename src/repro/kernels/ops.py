@@ -365,16 +365,20 @@ def _check_map(occupancy, s2, block_m, block_k):
             f"grid — built for a different flattening or tiling")
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
-def _spike_matmul_csr_core(s2, w2, csr, *, block_m, block_n, block_k):
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                              "block_k", "pipeline"))
+def _spike_matmul_csr_core(s2, w2, csr, *, block_m, block_n, block_k,
+                           pipeline=False):
     return spike_matmul_csr_pallas(s2, w2, csr, block_m=block_m,
-                                   block_n=block_n, block_k=block_k)
+                                   block_n=block_n, block_k=block_k,
+                                   pipeline=pipeline)
 
 
 def spike_matmul_csr(s, w: jax.Array,
                      csr: TileCSR | None = None, *, block_m: int = 128,
                      block_n: int = 128, block_k: int = 128,
-                     occupancy: jax.Array | None = None) -> jax.Array:
+                     occupancy: jax.Array | None = None,
+                     pipeline: bool = False) -> jax.Array:
     """Event-compacted spike matmul for (..., M, K) x (K, N).
 
     The CSR pre-pass (occupancy -> `TileCSR` work list) runs *outside* the
@@ -414,24 +418,27 @@ def spike_matmul_csr(s, w: jax.Array,
     csr.check_compatible(block_m, block_k,
                          s2.shape[0] // block_m, s2.shape[1] // block_k)
     out = _spike_matmul_csr_core(s2, w2, csr, block_m=block_m,
-                                 block_n=block_n, block_k=block_k)
+                                 block_n=block_n, block_k=block_k,
+                                 pipeline=pipeline)
     out = out[:m_orig, :n_orig]
     return out.reshape(lead + (m, n)) if lead else out
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("g", "block_m", "block_n", "block_k"))
+                   static_argnames=("g", "block_m", "block_n", "block_k",
+                                    "pipeline"))
 def _apec_matmul_csr_core(res2, ov2, w2, csr, occ_res, occ_ov, *, g,
-                          block_m, block_n, block_k):
+                          block_m, block_n, block_k, pipeline=False):
     return apec_matmul_csr_pallas(res2, ov2, w2, g, csr, occ_res, occ_ov,
                                   block_m=block_m, block_n=block_n,
-                                  block_k=block_k)
+                                  block_k=block_k, pipeline=pipeline)
 
 
 def apec_matmul_csr(s, w: jax.Array, g: int = 2, *,
                     block_m: int = 128, block_n: int = 128,
                     block_k: int = 128,
-                    occupancy: jax.Array | None = None) -> jax.Array:
+                    occupancy: jax.Array | None = None,
+                    pipeline: bool = False) -> jax.Array:
     """APEC matmul fused into one event-compacted kernel pass.
 
     Overlap/residual decomposition (packed bitwise kernel), then a single
@@ -481,7 +488,8 @@ def apec_matmul_csr(s, w: jax.Array, g: int = 2, *,
         occ_ov_steps = (occ_ov[steps] * csr.valid).astype(jnp.int32)
     out = _apec_matmul_csr_core(res2, ov2, w2, csr, occ_res_steps,
                                 occ_ov_steps, g=g, block_m=block_m,
-                                block_n=block_n, block_k=block_k)
+                                block_n=block_n, block_k=block_k,
+                                pipeline=pipeline)
     out = out[:p_orig, :n_orig]
     return out.reshape(lead + (p, w.shape[-1])).astype(w.dtype)
 
@@ -553,17 +561,21 @@ def _check_packed_map(occupancy, p2, block_m, bkw):
             f"grid — built for a different flattening or tiling")
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
-def _spike_matmul_packed_core(p2, w2, csr, *, block_m, block_n, block_k):
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                              "block_k", "pipeline"))
+def _spike_matmul_packed_core(p2, w2, csr, *, block_m, block_n, block_k,
+                              pipeline=False):
     return spike_matmul_packed_csr_pallas(p2, w2, csr, block_m=block_m,
-                                          block_n=block_n, block_k=block_k)
+                                          block_n=block_n, block_k=block_k,
+                                          pipeline=pipeline)
 
 
 def spike_matmul_packed(s, w: jax.Array, *, packed_k: int | None = None,
                         csr: TileCSR | None = None,
                         occupancy: jax.Array | None = None,
                         block_m: int = 128, block_n: int = 128,
-                        block_k: int = 128) -> jax.Array:
+                        block_k: int = 128,
+                        pipeline: bool = False) -> jax.Array:
     """Event-compacted spike matmul on the uint32-packed payload.
 
     `s`: packed words (..., M, ceil(K/32)) with ``packed_k=K``, a packed
@@ -589,7 +601,8 @@ def spike_matmul_packed(s, w: jax.Array, *, packed_k: int | None = None,
     csr.check_compatible(block_m, block_k,
                          p2.shape[0] // block_m, p2.shape[1] // bkw)
     out = _spike_matmul_packed_core(p2, w2, csr, block_m=block_m,
-                                    block_n=block_n, block_k=block_k)
+                                    block_n=block_n, block_k=block_k,
+                                    pipeline=pipeline)
     out = out[:m_orig, :n_orig]
     return out.reshape(lead + (m, n)) if lead else out
 
@@ -601,19 +614,22 @@ def _apec_decompose_packed_jit(p2, *, g, block_m, block_n):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("g", "block_m", "block_n", "block_k"))
+                   static_argnames=("g", "block_m", "block_n", "block_k",
+                                    "pipeline"))
 def _apec_matmul_packed_core(res2, ov2, w2, csr, occ_res, occ_ov, *, g,
-                             block_m, block_n, block_k):
+                             block_m, block_n, block_k, pipeline=False):
     return apec_matmul_packed_csr_pallas(res2, ov2, w2, g, csr, occ_res,
                                          occ_ov, block_m=block_m,
-                                         block_n=block_n, block_k=block_k)
+                                         block_n=block_n, block_k=block_k,
+                                         pipeline=pipeline)
 
 
 def apec_matmul_packed(s, w: jax.Array, g: int = 2, *,
                        packed_k: int | None = None,
                        occupancy: jax.Array | None = None,
                        block_m: int = 128, block_n: int = 128,
-                       block_k: int = 128) -> jax.Array:
+                       block_k: int = 128,
+                       pipeline: bool = False) -> jax.Array:
     """Fused APEC matmul staying in the packed domain end to end.
 
     The overlap/residual decomposition is already bitwise on uint32 words
@@ -664,7 +680,8 @@ def apec_matmul_packed(s, w: jax.Array, g: int = 2, *,
         occ_ov_steps = (occ_ov[steps] * csr.valid).astype(jnp.int32)
     out = _apec_matmul_packed_core(res_p, ov_p, w2, csr, occ_res_steps,
                                    occ_ov_steps, g=g, block_m=block_m,
-                                   block_n=block_n, block_k=block_k)
+                                   block_n=block_n, block_k=block_k,
+                                   pipeline=pipeline)
     out = out[:p_orig, :n_orig]
     return out.reshape(lead + (p_pos, w.shape[-1])).astype(w.dtype)
 
@@ -681,7 +698,8 @@ def _conv_pads(size: int, k: int, stride: int, padding: str):
 
 def econv_packed(s, w: jax.Array, *, stride: int = 1,
                  padding: str = "SAME", packed_k: int | None = None,
-                 occupancy: jax.Array | None = None) -> jax.Array:
+                 occupancy: jax.Array | None = None,
+                 pipeline: bool = False) -> jax.Array:
     """Event conv with the payload packed end to end.
 
     im2col runs in the WORD domain: channels are the packed axis, so a
@@ -735,5 +753,6 @@ def econv_packed(s, w: jax.Array, *, stride: int = 1,
     if occupancy is not None and ci % PACK:
         occupancy = None               # dense-patch tiling doesn't align
     out = spike_matmul_packed(patches.reshape(n * ho * wo, kh * kw_ * ciw),
-                              w2, packed_k=k_eff, occupancy=occupancy)
+                              w2, packed_k=k_eff, occupancy=occupancy,
+                              pipeline=pipeline)
     return out.reshape(n, ho, wo, co)

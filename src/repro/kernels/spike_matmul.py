@@ -113,6 +113,46 @@ def spike_matmul_pallas(
 
 
 # ---------------------------------------------------------------- CSR grid
+def _weight_prefetch(gate, kidx_ref, w_hbm, wbuf, sem, *,
+                     block_k: int, block_n: int):
+    """Double-buffered weight-tile motion for the CSR grids (the spikehard
+    `dma_controller`/`dma_buffer` pattern): while step t's dot runs out of
+    rotation slot t%2, the HBM->VMEM copy for step t+1's tile streams into
+    slot (t+1)%2, so an occupied step's MXU work hides the next weight
+    fetch instead of stalling on its own.
+
+    `gate(u)` must be True exactly when step u performs a dot: every
+    `start()` here is paired with exactly one `wait()` (returned closure)
+    under the same gate, and dummy / clamp-padding steps (occ=0) issue no
+    DMA at all — the serial kernels' "empty tiles cost zero weight DMA"
+    contract survives the rewrite. Only the warm-up copy at t==0 is
+    exposed; the cost model's `dma_overlap_ledger` counts exactly that.
+    """
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    j = pl.program_id(0)
+
+    def copy(slot, step):
+        return pltpu.make_async_copy(
+            w_hbm.at[pl.ds(kidx_ref[step] * block_k, block_k),
+                     pl.ds(j * block_n, block_n)],
+            wbuf.at[slot], sem.at[slot])
+
+    @pl.when((t == 0) & gate(0))
+    def _warmup():
+        copy(0, 0).start()
+
+    nxt = jnp.minimum(t + 1, n_t - 1)
+
+    @pl.when((t + 1 < n_t) & gate(nxt))
+    def _lookahead():
+        copy((t + 1) % 2, nxt).start()
+
+    def wait_resident():
+        copy(t % 2, t).wait()
+    return wait_resident
+
+
 def _spike_matmul_csr_kernel(row_ref, kidx_ref, occ_ref,
                              s_ref, w_ref, out_ref, acc_ref):
     """One grid step per occupied (m-tile, k-tile); j (N-tile) is the outer
@@ -138,6 +178,36 @@ def _spike_matmul_csr_kernel(row_ref, kidx_ref, occ_ref,
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
+def _spike_matmul_csr_pipe_kernel(row_ref, kidx_ref, occ_ref,
+                                  s_ref, w_hbm, out_ref,
+                                  acc_ref, wbuf, sem, *,
+                                  block_k: int, block_n: int):
+    """Pipelined twin of `_spike_matmul_csr_kernel`: the weight operand
+    stays an HBM ref and occupied steps read their tile from the 2-deep
+    VMEM rotation that `_weight_prefetch` keeps one step ahead. Init /
+    accumulate / flush row logic is identical to the serial kernel."""
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    row = row_ref[t]
+    wait_resident = _weight_prefetch(
+        lambda u: occ_ref[u] > 0, kidx_ref, w_hbm, wbuf, sem,
+        block_k=block_k, block_n=block_n)
+
+    @pl.when((t == 0) | (row != row_ref[jnp.maximum(t - 1, 0)]))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[t] > 0)
+    def _accumulate():
+        wait_resident()
+        acc_ref[...] += jnp.dot(
+            s_ref[...], wbuf[t % 2], preferred_element_type=jnp.float32)
+
+    @pl.when((t == n_t - 1) | (row_ref[jnp.minimum(t + 1, n_t - 1)] != row))
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
 def spike_matmul_csr_pallas(
     s: jax.Array,
     w: jax.Array,
@@ -147,12 +217,15 @@ def spike_matmul_csr_pallas(
     block_n: int = 128,
     block_k: int = 128,
     interpret: bool | None = None,
+    pipeline: bool = False,
 ) -> jax.Array:
     """Event-compacted matmul: grid over occupied tiles only.
 
     s: (M, K) binary; w: (K, N) -> (M, N). `csr`: a precomputed
     `core.spikes.TileCSR` for this (block_m, block_k) tiling (built here
     if not supplied — suppliers get the pre-pass cost once per layer).
+    `pipeline=True` switches to the double-buffered weight-DMA kernel
+    (see `_weight_prefetch`); same math, same work list, same outputs.
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -170,21 +243,32 @@ def spike_matmul_csr_pallas(
         raise ValueError(
             f"csr has {csr.n_rows} m-tile rows, input needs {m // block_m}")
 
+    if pipeline:
+        kernel = functools.partial(_spike_matmul_csr_pipe_kernel,
+                                   block_k=block_k, block_n=block_n)
+        w_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32),
+                   pltpu.VMEM((2, block_k, block_n), jnp.float32),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = _spike_matmul_csr_kernel
+        w_spec = pl.BlockSpec((block_k, block_n),
+                              lambda j, t, row, kidx, occ: (kidx[t], j))
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(n // block_n, csr.n_steps),
         in_specs=[
             pl.BlockSpec((block_m, block_k),
                          lambda j, t, row, kidx, occ: (row[t], kidx[t])),
-            pl.BlockSpec((block_k, block_n),
-                         lambda j, t, row, kidx, occ: (kidx[t], j)),
+            w_spec,
         ],
         out_specs=pl.BlockSpec((block_m, block_n),
                                lambda j, t, row, kidx, occ: (row[t], j)),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
-        _spike_matmul_csr_kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), w.dtype),
         interpret=interpret,
@@ -231,6 +315,36 @@ def _spike_matmul_packed_csr_kernel(row_ref, kidx_ref, occ_ref,
         out_ref[...] = acc_ref[...].astype(out_ref.dtype)
 
 
+def _spike_matmul_packed_csr_pipe_kernel(row_ref, kidx_ref, occ_ref,
+                                         p_ref, w_hbm, out_ref,
+                                         acc_ref, wbuf, sem, *,
+                                         block_k: int, block_n: int):
+    """Pipelined twin of `_spike_matmul_packed_csr_kernel`: the uint32
+    word tile unpacks in-VMEM while the next step's weight tile streams
+    into the other rotation slot — the two sides of the dot overlap."""
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    row = row_ref[t]
+    wait_resident = _weight_prefetch(
+        lambda u: occ_ref[u] > 0, kidx_ref, w_hbm, wbuf, sem,
+        block_k=block_k, block_n=block_n)
+
+    @pl.when((t == 0) | (row != row_ref[jnp.maximum(t - 1, 0)]))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[t] > 0)
+    def _accumulate():
+        wait_resident()
+        s_tile = _unpack_tile(p_ref[...], block_k)
+        acc_ref[...] += jnp.dot(
+            s_tile, wbuf[t % 2], preferred_element_type=jnp.float32)
+
+    @pl.when((t == n_t - 1) | (row_ref[jnp.minimum(t + 1, n_t - 1)] != row))
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
 def spike_matmul_packed_csr_pallas(
     p: jax.Array,
     w: jax.Array,
@@ -240,6 +354,7 @@ def spike_matmul_packed_csr_pallas(
     block_n: int = 128,
     block_k: int = 128,
     interpret: bool | None = None,
+    pipeline: bool = False,
 ) -> jax.Array:
     """Event-compacted matmul on a PACKED spike operand.
 
@@ -272,20 +387,30 @@ def spike_matmul_packed_csr_pallas(
         raise ValueError(
             f"csr has {csr.n_rows} m-tile rows, input needs {m // block_m}")
 
-    kernel = functools.partial(_spike_matmul_packed_csr_kernel,
-                               block_k=block_k)
+    if pipeline:
+        kernel = functools.partial(_spike_matmul_packed_csr_pipe_kernel,
+                                   block_k=block_k, block_n=block_n)
+        w_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32),
+                   pltpu.VMEM((2, block_k, block_n), jnp.float32),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = functools.partial(_spike_matmul_packed_csr_kernel,
+                                   block_k=block_k)
+        w_spec = pl.BlockSpec((block_k, block_n),
+                              lambda j, t, row, kidx, occ: (kidx[t], j))
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(n // block_n, csr.n_steps),
         in_specs=[
             pl.BlockSpec((block_m, bkw),
                          lambda j, t, row, kidx, occ: (row[t], kidx[t])),
-            pl.BlockSpec((block_k, block_n),
-                         lambda j, t, row, kidx, occ: (kidx[t], j)),
+            w_spec,
         ],
         out_specs=pl.BlockSpec((block_m, block_n),
                                lambda j, t, row, kidx, occ: (row[t], j)),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
         kernel,
@@ -332,6 +457,53 @@ def _apec_matmul_packed_csr_kernel(row_ref, kidx_ref, occ_res_ref,
         out_ref[...] = (acc_ref[...] + ov_rep).astype(out_ref.dtype)
 
 
+def _apec_matmul_packed_csr_pipe_kernel(row_ref, kidx_ref, occ_res_ref,
+                                        occ_ov_ref, res_ref, ov_ref, w_hbm,
+                                        out_ref, acc_ref, acc_ov_ref, wbuf,
+                                        sem, *, g: int, block_k: int,
+                                        block_n: int):
+    """Pipelined twin of `_apec_matmul_packed_csr_kernel`: one prefetched
+    weight tile serves both dots of a union step, so the DMA gate is the
+    union occupancy (either operand live)."""
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    row = row_ref[t]
+
+    def gate(u):
+        return (occ_res_ref[u] > 0) | (occ_ov_ref[u] > 0)
+
+    wait_resident = _weight_prefetch(gate, kidx_ref, w_hbm, wbuf, sem,
+                                     block_k=block_k, block_n=block_n)
+
+    @pl.when((t == 0) | (row != row_ref[jnp.maximum(t - 1, 0)]))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ov_ref[...] = jnp.zeros_like(acc_ov_ref)
+
+    @pl.when(gate(t))
+    def _land():
+        wait_resident()
+
+    @pl.when(occ_res_ref[t] > 0)
+    def _acc_res():
+        acc_ref[...] += jnp.dot(
+            _unpack_tile(res_ref[...], block_k), wbuf[t % 2],
+            preferred_element_type=jnp.float32)
+
+    @pl.when(occ_ov_ref[t] > 0)
+    def _acc_ov():
+        acc_ov_ref[...] += jnp.dot(
+            _unpack_tile(ov_ref[...], block_k), wbuf[t % 2],
+            preferred_element_type=jnp.float32)
+
+    @pl.when((t == n_t - 1) | (row_ref[jnp.minimum(t + 1, n_t - 1)] != row))
+    def _flush():
+        bmg, bn = acc_ov_ref.shape
+        ov_rep = jnp.broadcast_to(acc_ov_ref[...][:, None, :],
+                                  (bmg, g, bn)).reshape(bmg * g, bn)
+        out_ref[...] = (acc_ref[...] + ov_rep).astype(out_ref.dtype)
+
+
 def apec_matmul_packed_csr_pallas(
     res: jax.Array,
     ov: jax.Array,
@@ -345,6 +517,7 @@ def apec_matmul_packed_csr_pallas(
     block_n: int = 128,
     block_k: int = 128,
     interpret: bool | None = None,
+    pipeline: bool = False,
 ) -> jax.Array:
     """Fused APEC matmul over the event-compacted grid, packed operands.
 
@@ -368,8 +541,21 @@ def apec_matmul_packed_csr_pallas(
         raise ValueError(
             f"(M,KW,N)=({m},{kw},{n}) must tile by ({block_m},{bkw},{block_n})")
 
-    kernel = functools.partial(_apec_matmul_packed_csr_kernel, g=g,
-                               block_k=block_k)
+    if pipeline:
+        kernel = functools.partial(_apec_matmul_packed_csr_pipe_kernel, g=g,
+                                   block_k=block_k, block_n=block_n)
+        w_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32),
+                   pltpu.VMEM((block_m // g, block_n), jnp.float32),
+                   pltpu.VMEM((2, block_k, block_n), jnp.float32),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = functools.partial(_apec_matmul_packed_csr_kernel, g=g,
+                                   block_k=block_k)
+        w_spec = pl.BlockSpec((block_k, block_n),
+                              lambda j, t, row, kidx, o1, o2: (kidx[t], j))
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32),
+                   pltpu.VMEM((block_m // g, block_n), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(n // block_n, csr.n_steps),
@@ -378,13 +564,11 @@ def apec_matmul_packed_csr_pallas(
                          lambda j, t, row, kidx, o1, o2: (row[t], kidx[t])),
             pl.BlockSpec((block_m // g, bkw),
                          lambda j, t, row, kidx, o1, o2: (row[t], kidx[t])),
-            pl.BlockSpec((block_k, block_n),
-                         lambda j, t, row, kidx, o1, o2: (kidx[t], j)),
+            w_spec,
         ],
         out_specs=pl.BlockSpec((block_m, block_n),
                                lambda j, t, row, kidx, o1, o2: (row[t], j)),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
-                        pltpu.VMEM((block_m // g, block_n), jnp.float32)],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
         kernel,
@@ -429,6 +613,50 @@ def _apec_matmul_csr_kernel(row_ref, kidx_ref, occ_res_ref, occ_ov_ref,
         out_ref[...] = (acc_ref[...] + ov_rep).astype(out_ref.dtype)
 
 
+def _apec_matmul_csr_pipe_kernel(row_ref, kidx_ref, occ_res_ref, occ_ov_ref,
+                                 res_ref, ov_ref, w_hbm, out_ref,
+                                 acc_ref, acc_ov_ref, wbuf, sem, *, g: int,
+                                 block_k: int, block_n: int):
+    """Pipelined twin of `_apec_matmul_csr_kernel`: the shared weight tile
+    is prefetched one union step ahead (DMA gate = either operand live),
+    and both dots read it from the same rotation slot."""
+    t = pl.program_id(1)
+    n_t = pl.num_programs(1)
+    row = row_ref[t]
+
+    def gate(u):
+        return (occ_res_ref[u] > 0) | (occ_ov_ref[u] > 0)
+
+    wait_resident = _weight_prefetch(gate, kidx_ref, w_hbm, wbuf, sem,
+                                     block_k=block_k, block_n=block_n)
+
+    @pl.when((t == 0) | (row != row_ref[jnp.maximum(t - 1, 0)]))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ov_ref[...] = jnp.zeros_like(acc_ov_ref)
+
+    @pl.when(gate(t))
+    def _land():
+        wait_resident()
+
+    @pl.when(occ_res_ref[t] > 0)
+    def _acc_res():
+        acc_ref[...] += jnp.dot(
+            res_ref[...], wbuf[t % 2], preferred_element_type=jnp.float32)
+
+    @pl.when(occ_ov_ref[t] > 0)
+    def _acc_ov():
+        acc_ov_ref[...] += jnp.dot(
+            ov_ref[...], wbuf[t % 2], preferred_element_type=jnp.float32)
+
+    @pl.when((t == n_t - 1) | (row_ref[jnp.minimum(t + 1, n_t - 1)] != row))
+    def _flush():
+        bmg, bn = acc_ov_ref.shape
+        ov_rep = jnp.broadcast_to(acc_ov_ref[...][:, None, :],
+                                  (bmg, g, bn)).reshape(bmg * g, bn)
+        out_ref[...] = (acc_ref[...] + ov_rep).astype(out_ref.dtype)
+
+
 def apec_matmul_csr_pallas(
     res: jax.Array,
     ov: jax.Array,
@@ -442,6 +670,7 @@ def apec_matmul_csr_pallas(
     block_n: int = 128,
     block_k: int = 128,
     interpret: bool | None = None,
+    pipeline: bool = False,
 ) -> jax.Array:
     """Fused APEC matmul over the event-compacted grid.
 
@@ -465,7 +694,20 @@ def apec_matmul_csr_pallas(
         raise ValueError(
             f"(M,K,N)=({m},{k},{n}) must tile by ({block_m},{block_k},{block_n})")
 
-    kernel = functools.partial(_apec_matmul_csr_kernel, g=g)
+    if pipeline:
+        kernel = functools.partial(_apec_matmul_csr_pipe_kernel, g=g,
+                                   block_k=block_k, block_n=block_n)
+        w_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32),
+                   pltpu.VMEM((block_m // g, block_n), jnp.float32),
+                   pltpu.VMEM((2, block_k, block_n), jnp.float32),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = functools.partial(_apec_matmul_csr_kernel, g=g)
+        w_spec = pl.BlockSpec((block_k, block_n),
+                              lambda j, t, row, kidx, o1, o2: (kidx[t], j))
+        scratch = [pltpu.VMEM((block_m, block_n), jnp.float32),
+                   pltpu.VMEM((block_m // g, block_n), jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(n // block_n, csr.n_steps),
@@ -474,13 +716,11 @@ def apec_matmul_csr_pallas(
                          lambda j, t, row, kidx, o1, o2: (row[t], kidx[t])),
             pl.BlockSpec((block_m // g, block_k),
                          lambda j, t, row, kidx, o1, o2: (row[t], kidx[t])),
-            pl.BlockSpec((block_k, block_n),
-                         lambda j, t, row, kidx, o1, o2: (kidx[t], j)),
+            w_spec,
         ],
         out_specs=pl.BlockSpec((block_m, block_n),
                                lambda j, t, row, kidx, o1, o2: (row[t], j)),
-        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32),
-                        pltpu.VMEM((block_m // g, block_n), jnp.float32)],
+        scratch_shapes=scratch,
     )
     return pl.pallas_call(
         kernel,

@@ -18,6 +18,7 @@ import warnings
 from typing import Any, Dict, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -302,7 +303,8 @@ def per_shard_occupied_tiles(s, n_shards: int, block_m: int = 128,
 
 
 def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
-                     occupancy=None, with_report: bool = False, **kwargs):
+                     occupancy=None, with_report: bool = False,
+                     rebalance: bool = True, **kwargs):
     """Route a matmul-form registry op (`spike_matmul` / `apec_matmul`)
     through `shard_map` on `mesh`, with mesh-aware backend resolution.
 
@@ -341,13 +343,26 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     either way. Resolution routes by payload: packed shards land on the
     `packed-csr` family or degrade through the explicit unpack shim.
 
+    `rebalance` (default on): when a CONCRETE carried map feeds the
+    per-shard work lists and the payload is a plain (rows, K) matrix,
+    split points are occupancy-weighted instead of row-contiguous
+    (`core.spikes.rebalance_shard_plan` — greedy heaviest-row-first plus
+    a stolen-tile swap tail): the payload's 128-row tile rows permute so
+    every shard still owns one contiguous equal slice, outputs permute
+    back, numerics are unchanged, and the most-occupied shard — the one
+    a synchronous collective waits for — carries as close to the mean
+    occupied-tile count as whole tile rows allow. Never gathers global
+    occupancy (the plan reads only the tiny carried map); static maps /
+    traced maps / explicit `csr_stack=` are untouched.
+
     `with_report=True` additionally returns the routing/straggler report:
     resolved backend + attribution, occupancy provenance
     (``occupancy_source``: carried / csr_stack / rederived), and (for
     concrete `s`) the per-shard occupied-tile `OccupancyImbalance`.
     """
     from repro.core.events import EventTensor
-    from repro.core.spikes import (TileCSR, shard_occupancy_to_csr,
+    from repro.core.spikes import (TileCSR, rebalance_shard_plan,
+                                   shard_occupancy_to_csr,
                                    stack_shard_csrs)
     from repro.kernels import dispatch, ops
     from repro.launch.mesh import shard_map
@@ -366,6 +381,7 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     axes = event_rows_axes(mesh, s.shape[0])
     n_shards = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
     rows = int(np.prod(s.shape[:-1]))
+    plan = None          # set iff occupancy-weighted rebalancing engages
 
     def _per_shard_routes(attribution):
         """Per-shard hybrid route choices ("event"/"dense") for the report:
@@ -394,9 +410,19 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
                "n_shards": n_shards, "occupancy": None,
                "occupancy_source": occupancy_source}
         if n_shards > 1 and not isinstance(s, jax.core.Tracer):
-            rep["occupancy"] = occupancy_imbalance(
-                per_shard_occupied_tiles(s, n_shards, packed_k=packed_k),
-                routes=_per_shard_routes(attribution))
+            if plan is not None:
+                # Rebalanced run: per_shard is the executed (rebalanced)
+                # assignment; the static-split counts ride as the pre-
+                # rebalance column, straight off the plan.
+                rep["occupancy"] = occupancy_imbalance(
+                    plan.post_per_shard,
+                    routes=_per_shard_routes(attribution),
+                    pre_per_shard=plan.pre_per_shard)
+            else:
+                rep["occupancy"] = occupancy_imbalance(
+                    per_shard_occupied_tiles(s, n_shards,
+                                             packed_k=packed_k),
+                    routes=_per_shard_routes(attribution))
         return rep
 
     if csr_stack is not None and op != "spike_matmul":
@@ -452,8 +478,17 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
         # Concrete carried map -> per-shard TRIMMED work lists, built from
         # the tiny map alone (the whole point: no dense pre-pass, no
         # gather, and the producer's emission is what feeds the mesh).
+        # With `rebalance`, the split points are occupancy-weighted
+        # (`rebalance_shard_plan` on the same tiny map): the payload's
+        # 128-row tile rows are permuted so each shard still owns one
+        # contiguous equal slice, and the output is permuted back below —
+        # numerics are identical, only who computes which rows moves.
+        if rebalance and s.ndim == 2:
+            plan = rebalance_shard_plan(occupancy, n_shards)
+            if plan.identity or not plan.improves:
+                plan = None      # nothing to win — skip the row gathers
         csr_stack = stack_shard_csrs(shard_occupancy_to_csr(
-            occupancy, n_shards, tiling=(128, 128)))
+            occupancy, n_shards, tiling=(128, 128), plan=plan))
         occupancy = None
         occupancy_source = "carried"
     elif csr_stack is not None:
@@ -473,6 +508,7 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
             f"{be.name!r} ({attribution}), not the CSR family",
             RuntimeWarning, stacklevel=2)
         csr_stack = None
+        plan = None      # rebalanced lists died with the stack
         # A carried map passed alongside the stack still feeds the
         # sharded occupancy-operand path below — attribute it honestly.
         occupancy_source = "carried" if occupancy is not None \
@@ -480,14 +516,17 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
     if csr_stack is not None:
         csr_arrays = tuple(csr_stack[:5])   # row_ptr/tile_m/tile_k/occ/valid
         csr_specs = tuple(P(lead) for _ in csr_arrays)
+        pipelined = "-pipe" in be.name
 
         def body(sl, wl, *carrs):
             local = TileCSR(*[a[0] for a in carrs],
                             csr_stack.tiling, csr_stack.map_shape)
             if packed_k is not None:
                 return ops.spike_matmul_packed(sl, wl, packed_k=packed_k,
-                                               csr=local)
-            return ops.spike_matmul_csr(sl, wl, local)
+                                               csr=local,
+                                               pipeline=pipelined)
+            return ops.spike_matmul_csr(sl, wl, local,
+                                        pipeline=pipelined)
 
         fn = shard_map(body, mesh=mesh,
                        in_specs=(row_spec, w_spec) + csr_specs,
@@ -511,7 +550,27 @@ def event_op_sharded(mesh: Mesh, op: str, s, w, *, csr_stack=None,
             return tuple(dispatch._matmul_bwd(res, bwd_static, g))
 
         run.defvjp(run_fwd, run_bwd)
-        out = run(s, w)
+        if plan is not None:
+            # Permute 128-row tile rows so the plan's assignment becomes
+            # the contiguous equal split shard_map hands out, run, then
+            # permute the output back. Both gathers sit OUTSIDE the
+            # custom_vjp boundary: autodiff transposes them as ordinary
+            # scatter/gather, and run's matmul-transpose rule sees the
+            # permuted operands it actually multiplied. The work-list
+            # rows (128 logical rows each) move wholesale, so the
+            # per-shard CSR tile indices stay local and trimmed.
+            mt_rows = len(plan.perm)
+            tile = rows // mt_rows
+            perm = jnp.asarray(plan.perm)
+            inv = jnp.asarray(plan.inverse())
+            k_tail = s.shape[1:]
+            s_bal = jnp.take(s.reshape((mt_rows, tile) + k_tail), perm,
+                             axis=0).reshape(s.shape)
+            out = run(s_bal, w)
+            out = jnp.take(out.reshape((mt_rows, tile) + out.shape[1:]),
+                           inv, axis=0).reshape(out.shape)
+        else:
+            out = run(s, w)
     elif occupancy is not None:
         # Carried map, traced (or a non-spike_matmul op): shard the map
         # row-contiguously alongside the spikes — each shard's body

@@ -333,6 +333,53 @@ MULTIDEVICE_SCRIPT = textwrap.dedent("""
             assert rep3["occupancy_source"] == "carried", rep3
             np.testing.assert_allclose(np.asarray(out3), ref, atol=1e-5)
 
+    def rebalance_pipe():
+        from repro.core.spikes import rebalance_shard_plan
+        from repro.kernels import dispatch, ops
+        from repro.runtime import sharding
+        mesh8 = make_mesh((8, 1), ("data", "model"))
+        # Hotspot band: every event in the first quarter of the rows, so
+        # the static row-contiguous split piles all occupied tiles onto
+        # two shards while 16 tile rows / 8 shards = 2 leaves the
+        # occupancy-weighted plan room to move whole tile rows. K = 128
+        # (one k-tile) like the other sections, so the per-tile partial
+        # sums keep the dense oracle's reduction order at atol=1e-5.
+        s_np = np.zeros((2048, 128), np.float32)
+        s_np[:512] = (np.random.default_rng(0).random((512, 128)) < 0.3
+                      ).astype(np.float32)
+        s = jnp.asarray(s_np)
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 64), jnp.float32)
+        occ = np.asarray(ops.padded_occupancy(s))
+        plan = rebalance_shard_plan(occ, 8)
+        assert sorted(plan.perm.tolist()) == list(range(16)), plan
+        assert not plan.identity and plan.improves, plan
+        ref = np.asarray(s @ w)
+        g_ref = np.asarray(jax.grad(lambda ww: jnp.sum(s @ ww))(w))
+        gs_ref = np.asarray(jax.grad(lambda ss: jnp.sum(ss @ w))(s))
+        # Pipelined backend + rebalanced split composed: the pipe kernel
+        # consumes the occupancy-weighted per-shard work lists, outputs
+        # permute back, fwd AND both grads match the dense oracle.
+        with dispatch.use_backend("pallas-csr-pipe-interpret",
+                                  op="spike_matmul"):
+            out, rep = sharding.event_op_sharded(
+                mesh8, "spike_matmul", s, w, occupancy=occ,
+                with_report=True)
+            assert rep["attribution"] == "pallas-csr-pipe-interpret", rep
+            imb = rep["occupancy"]
+            assert imb.pre_per_shard and \
+                imb.imbalance < imb.pre_imbalance, imb
+            np.testing.assert_allclose(np.asarray(out), ref, atol=1e-5)
+            out_st = sharding.event_op_sharded(
+                mesh8, "spike_matmul", s, w, occupancy=occ,
+                rebalance=False)
+            np.testing.assert_allclose(np.asarray(out_st), ref, atol=1e-5)
+            g = jax.grad(lambda ww: jnp.sum(sharding.event_op_sharded(
+                mesh8, "spike_matmul", s, ww, occupancy=occ)))(w)
+            np.testing.assert_allclose(np.asarray(g), g_ref, atol=1e-5)
+            gs = jax.grad(lambda ss: jnp.sum(sharding.event_op_sharded(
+                mesh8, "spike_matmul", ss, w, occupancy=occ)))(s)
+            np.testing.assert_allclose(np.asarray(gs), gs_ref, atol=1e-5)
+
     section("CKPT_ELASTIC", ckpt_elastic)
     section("ELASTIC_E2E", elastic_e2e)
     section("ELASTIC_DRILL", elastic_drill)
@@ -340,6 +387,7 @@ MULTIDEVICE_SCRIPT = textwrap.dedent("""
     section("SHARD_MAP", shard_map_moe)
     section("MESH_DISPATCH", mesh_dispatch)
     section("EVENT_TENSOR", event_tensor)
+    section("REBALANCE_PIPE", rebalance_pipe)
 """)
 
 

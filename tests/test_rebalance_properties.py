@@ -1,0 +1,200 @@
+"""Property tests for occupancy-weighted shard rebalancing + DMA ledger.
+
+`rebalance_shard_plan` decides which payload tile rows each shard
+computes; a wrong permutation silently computes the wrong rows or loses
+some entirely, so the invariants are pinned as properties over random
+maps (with deterministic fallbacks per `hypothesis_compat`):
+
+  * the plan's `perm` is a permutation — every tile row (hence every
+    occupied tile) lands on exactly one shard, none dropped;
+  * pre/post per-shard counts conserve the total occupied-tile count,
+    and the rebalanced max never exceeds the static max;
+  * the plan is deterministic for a fixed map (split points are a pure
+    function of the carried occupancy);
+  * plan-aware `shard_occupancy_to_csr` still hands every shard a work
+    list satisfying the full TileCSR invariants against its ASSIGNED
+    rows, under ONE shared `pow2_step_cap`;
+  * the all-empty map degenerates to identity (nothing to move) and
+    dummy-step-only per-shard grids.
+
+The DMA-overlap ledger (`costmodel.dma_overlap_ledger`) is the cost
+model the pipelined kernels' benchmark columns are read against, so its
+accounting identities are pinned here too.
+"""
+import sys
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from hypothesis_compat import HAVE_HYPOTHESIS, given, st  # noqa: E402
+from test_csr_properties import check_csr_invariants  # noqa: E402
+
+from repro.core.costmodel import dma_overlap_ledger
+from repro.core.spikes import (pow2_step_cap, rebalance_shard_plan,
+                               shard_occupancy_to_csr)
+
+
+def _random_map(shards: int, rows: int, kt: int, seed: int,
+                density: float) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return ((rng.random((shards * rows, kt)) < density)
+            * rng.integers(1, 9, (shards * rows, kt))).astype(np.int32)
+
+
+# ------------------------------------------------------- hypothesis side
+@given(st.integers(1, 6), st.integers(1, 5), st.integers(1, 4),
+       st.integers(0, 2 ** 30), st.floats(0.0, 1.0))
+def test_plan_is_permutation_and_conserves_tiles(shards, rows, kt, seed,
+                                                 density):
+    occ_np = _random_map(shards, rows, kt, seed, density)
+    plan = rebalance_shard_plan(jnp.asarray(occ_np), shards)
+    mt = shards * rows
+    # every tile row on exactly one shard
+    assert sorted(plan.perm.tolist()) == list(range(mt))
+    np.testing.assert_array_equal(plan.perm[plan.inverse()], np.arange(mt))
+    # occupied tiles conserved and never made worse
+    total = int((occ_np > 0).sum())
+    assert sum(plan.pre_per_shard) == sum(plan.post_per_shard) == total
+    assert max(plan.post_per_shard) <= max(plan.pre_per_shard)
+    # per-shard slices keep global row order (ascending members)
+    for i in range(shards):
+        sl = plan.perm[i * rows:(i + 1) * rows]
+        assert np.all(np.diff(sl) > 0)
+        # post counts actually describe the assignment
+        assert plan.post_per_shard[i] == int((occ_np[sl] > 0).sum())
+
+
+@given(st.integers(1, 5), st.integers(1, 4), st.integers(1, 4),
+       st.integers(0, 2 ** 30), st.floats(0.0, 1.0))
+def test_plan_deterministic_split_points(shards, rows, kt, seed, density):
+    occ_np = _random_map(shards, rows, kt, seed, density)
+    a = rebalance_shard_plan(jnp.asarray(occ_np), shards)
+    b = rebalance_shard_plan(jnp.asarray(occ_np.copy()), shards)
+    np.testing.assert_array_equal(a.perm, b.perm)
+    assert a.pre_per_shard == b.pre_per_shard
+    assert a.post_per_shard == b.post_per_shard
+
+
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 2 ** 30))
+def test_plan_aware_shard_csr_shares_cap_and_holds_invariants(shards, rows,
+                                                              seed):
+    kt = 3
+    occ_np = _random_map(shards, rows, kt, seed, 0.4)
+    plan = rebalance_shard_plan(jnp.asarray(occ_np), shards)
+    per = shard_occupancy_to_csr(jnp.asarray(occ_np), shards, plan=plan)
+    assert len(per) == shards
+    caps = {c.n_steps for c in per}
+    assert len(caps) == 1, "shards must share one cap"
+    cap = caps.pop()
+    assert cap <= rows * kt
+    assert cap == pow2_step_cap(cap, rows * kt)    # pow2 or dense-bounded
+    for i, csr in enumerate(per):
+        local = occ_np[plan.perm[i * rows:(i + 1) * rows]]
+        check_csr_invariants(local, csr, cap=cap)
+
+
+# ----------------------------------------------- deterministic fallbacks
+def test_empty_map_identity_plan_and_dummy_grids():
+    occ_np = np.zeros((8, 3), np.int32)
+    plan = rebalance_shard_plan(jnp.asarray(occ_np), 4)
+    assert plan.identity and not plan.improves
+    assert plan.pre_per_shard == plan.post_per_shard == (0, 0, 0, 0)
+    per = shard_occupancy_to_csr(jnp.asarray(occ_np), 4, plan=plan)
+    for csr in per:
+        # one dummy visit per all-empty tile row, nothing else
+        check_csr_invariants(occ_np[:2], csr)
+        assert int(np.asarray(csr.valid).sum()) == 2
+        assert int(np.asarray(csr.occ).sum()) == 0
+
+
+def test_hotspot_band_improves_and_default_split_unchanged():
+    # all load on the first two tile rows: static split gives (5, 2, 0, 0)
+    occ_np = np.array([[1, 1, 1], [1, 1, 0], [0, 1, 0], [0, 1, 0],
+                       [0, 0, 0], [0, 0, 0], [0, 0, 0], [0, 0, 0]],
+                      np.int32)
+    plan = rebalance_shard_plan(jnp.asarray(occ_np), 4)
+    assert plan.pre_per_shard == (5, 2, 0, 0)
+    assert max(plan.post_per_shard) < 5 and plan.improves
+    # plan=None keeps the historical static row-contiguous behavior
+    static = shard_occupancy_to_csr(jnp.asarray(occ_np), 4)
+    for i, csr in enumerate(static):
+        check_csr_invariants(occ_np[2 * i:2 * i + 2], csr,
+                             cap=csr.n_steps)
+
+
+def test_one_row_per_shard_cannot_improve():
+    # rps == 1: permuting tile rows only relabels shards
+    occ_np = np.array([[3, 3], [0, 0], [0, 0], [0, 0]], np.int32)
+    plan = rebalance_shard_plan(jnp.asarray(occ_np), 4)
+    assert not plan.improves
+    assert max(plan.post_per_shard) == max(plan.pre_per_shard) == 2
+
+
+def test_plan_rejects_tracers_uneven_rows_and_mismatched_use():
+    import jax
+    with pytest.raises(ValueError, match="divisible"):
+        rebalance_shard_plan(jnp.zeros((3, 2), jnp.int32), 2)
+    with pytest.raises(ValueError, match="eager|tracing"):
+        jax.jit(lambda o: rebalance_shard_plan(o, 2))(
+            jnp.zeros((4, 2), jnp.int32))
+    plan = rebalance_shard_plan(jnp.zeros((4, 2), jnp.int32), 2)
+    with pytest.raises(ValueError, match="plan covers"):
+        shard_occupancy_to_csr(jnp.zeros((8, 2), jnp.int32), 2, plan=plan)
+
+
+# ------------------------------------------------------ DMA-overlap ledger
+@given(st.integers(1, 5), st.integers(1, 5), st.integers(0, 2 ** 30),
+       st.floats(0.0, 1.0), st.integers(1, 512))
+def test_dma_ledger_accounting_identities(mt, kt, seed, density, n):
+    occ_np = ((np.random.default_rng(seed).random((mt, kt)) < density)
+              .astype(np.int32))
+    for backend in ("pallas-csr", "packed-csr"):
+        ser = dma_overlap_ledger(occ_np, n, backend=backend)
+        pipe = dma_overlap_ledger(occ_np, n, backend=backend,
+                                  pipelined=True)
+        # split always sums to the total; serial hides nothing
+        assert ser.bytes_prefetched == 0.0
+        assert ser.bytes_prefetched + ser.bytes_stalled == ser.bytes_total
+        assert pipe.bytes_prefetched + pipe.bytes_stalled \
+            == pipe.bytes_total
+        # pipelining never fetches more, never exposes more
+        assert pipe.bytes_total <= ser.bytes_total
+        assert pipe.bytes_stalled <= ser.bytes_stalled
+        assert 0.0 <= pipe.overlap_fraction <= 1.0
+
+
+def test_dma_ledger_deterministic_points():
+    occ = np.zeros((4, 4), np.int32)
+    occ[0, :2] = 1
+    occ[2, 1] = 3
+    # 3 occupied tiles + 2 all-empty rows, N=256 -> 2 N-tiles
+    ser = dma_overlap_ledger(occ, 256)
+    pipe = dma_overlap_ledger(occ, 256, pipelined=True)
+    tile = 128 * 128 * 4
+    assert ser.bytes_total == ser.bytes_stalled == 10 * tile
+    assert pipe.bytes_total == 6 * tile
+    assert pipe.bytes_stalled == 2 * tile        # one warm-up per N-tile
+    assert pipe.bytes_prefetched == 4 * tile
+    # empty map: pipelined grid is dummy-only, so it fetches NOTHING
+    empty = dma_overlap_ledger(np.zeros((4, 4), np.int32), 256,
+                               pipelined=True)
+    assert empty.bytes_total == empty.overlap_fraction == 0.0
+    with pytest.raises(ValueError, match="csr family"):
+        dma_overlap_ledger(occ, 256, backend="pallas", pipelined=True)
+    with pytest.raises(ValueError, match="unknown"):
+        dma_overlap_ledger(occ, 256, backend="nope")
+
+
+def test_have_hypothesis_flag_is_bool():
+    assert isinstance(HAVE_HYPOTHESIS, bool)
+
+
+# ------------------------------------------------- sharded composition
+def test_rebalanced_pipe_sharded_parity(multidevice_run):
+    """Pipelined CSR kernel + rebalanced shard split composed on an
+    8-device mesh: attribution, pre/post imbalance drop, fwd and both
+    grads at 1e-5 (shared subprocess; see conftest.multidevice_run)."""
+    multidevice_run.check("REBALANCE_PIPE")
